@@ -1,0 +1,121 @@
+"""Worker (run with N host devices): scaling + memory + overall benchmarks.
+
+Emits CSV lines ``name,us_per_call,derived``.  Invoked by benchmarks.run via
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import relabel_random, rmat
+from repro.core.distributed import build_distributed_plan, make_count_fn, shard_coloring
+from repro.core.templates import template
+
+
+def make_mesh(shards, iters=1):
+    if iters > 1:
+        return jax.make_mesh(
+            (shards, iters), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    return jax.make_mesh(
+        (shards,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+def time_mode(g, tree, shards, mode, gf=1, iters=2):
+    mesh = make_mesh(shards)
+    plan = build_distributed_plan(g, tree, shards)
+    f = make_count_fn(plan, mesh, mode=mode, group_factor=gf)
+    rng = np.random.default_rng(0)
+    coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+    cols = jnp.asarray(shard_coloring(plan, coloring)[None])
+    out = f(cols)
+    out.block_until_ready()  # compile + warmup
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f(cols).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return min(times), float(out[0])
+
+
+def bench_strong_scaling(args):
+    """Paper Fig. 7/9/15: fixed graph, growing device count, mode comparison."""
+    g = relabel_random(rmat(1 << 14, args.edges, skew=3, seed=1), seed=2)
+    tree = template(args.template)
+    for shards in (2, 4, 8):
+        for mode in ("alltoall", "pipeline", "adaptive", "ring"):
+            sec, count = time_mode(g, tree, shards, mode)
+            print(f"strong/{args.template}/P{shards}/{mode},{sec * 1e6:.1f},count={count:.4g}")
+
+
+def bench_weak_scaling(args):
+    """Paper Fig. 10: per-shard workload fixed, devices growing."""
+    tree = template(args.template)
+    for shards in (2, 4, 8):
+        g = relabel_random(
+            rmat(shards * 2048, shards * args.edges_per_shard, skew=3, seed=shards),
+            seed=3,
+        )
+        for mode in ("alltoall", "pipeline"):
+            sec, _ = time_mode(g, tree, shards, mode)
+            print(
+                f"weak/{args.template}/P{shards}/{mode},{sec * 1e6:.1f},"
+                f"V={g.n} E={g.num_edges}"
+            )
+
+
+def bench_peak_memory(args):
+    """Paper Fig. 12: peak temp bytes, naive vs pipeline vs ring (compiled
+    memory analysis of the distributed step on 8 shards)."""
+    g = relabel_random(rmat(1 << 14, args.edges, skew=3, seed=5), seed=5)
+    tree = template(args.template)
+    shards = 8
+    mesh = make_mesh(shards)
+    plan = build_distributed_plan(g, tree, shards)
+    rng = np.random.default_rng(0)
+    cols = jnp.asarray(
+        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))[None]
+    )
+    for mode in ("alltoall", "pipeline", "ring"):
+        f = make_count_fn(plan, mesh, mode=mode)
+        mem = jax.jit(f).lower(cols).compile().memory_analysis()
+        print(
+            f"peakmem/{args.template}/{mode},0.0,"
+            f"temp_bytes={mem.temp_size_in_bytes} arg_bytes={mem.argument_size_in_bytes}"
+        )
+
+
+def bench_overall(args):
+    """Paper Fig. 13: naive vs full-optimized across template sizes."""
+    g = relabel_random(rmat(1 << 13, args.edges, skew=3, seed=7), seed=7)
+    for tname in ("u3-1", "u5-2", "u7-2"):
+        tree = template(tname)
+        for mode in ("alltoall", "adaptive"):
+            sec, _ = time_mode(g, tree, 8, mode)
+            print(f"overall/{tname}/{mode},{sec * 1e6:.1f},")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench")
+    ap.add_argument("--template", default="u5-2")
+    ap.add_argument("--edges", type=int, default=120_000)
+    ap.add_argument("--edges-per-shard", type=int, default=20_000)
+    args = ap.parse_args()
+    {
+        "strong": bench_strong_scaling,
+        "weak": bench_weak_scaling,
+        "peakmem": bench_peak_memory,
+        "overall": bench_overall,
+    }[args.bench](args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Beyond-paper: Adaptive-Group collectives applied to LM parallelism.
+
+Compares, from compiled HLO on an 8-device host mesh:
+  * fused all-gather vs relay-ring (ppermute) weight gather — bytes and op
+    mix (the FSDP-overlap trade the hillclimb exploits);
+  * fp32 vs int8-compressed ring reduce-scatter for gradients — bytes on
+    the wire;
+  * adaptive policy decisions (Hockney model) for representative layer
+    sizes of every assigned arch.
+"""
+
+from __future__ import annotations
+
+from repro.comm import V5E_ICI, choose_mode
+from repro.configs import ARCHS
+
+from .common import emit, run_worker
+
+
+def run():
+    # policy table: per arch, the FSDP gather of one layer's weights vs the
+    # matmul flops consuming them (train_4k per-device shapes, 16x16 mesh)
+    for name, cfg in sorted(ARCHS.items()):
+        d, f = cfg.d_model, cfg.d_ff
+        layer_bytes = (3 if cfg.act == "swiglu" else 2) * d * f * 2 / 16  # bf16, fsdp-sharded
+        tokens_dev = 256 * 4096 / 16
+        flops = 2 * tokens_dev * d * f * (3 if cfg.act == "swiglu" else 2) / 16
+        mode, diag = choose_mode(layer_bytes, flops, 16, V5E_ICI)
+        emit(
+            f"adaptive_policy/{name}",
+            0.0,
+            f"mode={mode} rho={diag['rho']:.2f} "
+            f"intensity={diag['intensity_flops_per_byte']:.0f}",
+        )
+
+    # HLO comparison on 8 host devices (subprocess)
+    out = run_worker("benchmarks._lm_collectives_worker", [], devices=8)
+    print(out, end="")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

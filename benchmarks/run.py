@@ -1,0 +1,69 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines:
+  table3/*        Table 3  (template complexity — exact reproduction)
+  fig6/*          Fig. 6   (template-size scaling, single node)
+  strong/*        Fig. 7/9/15 (strong scaling, naive vs pipeline vs adaptive)
+  weak/*          Fig. 10  (weak scaling)
+  fig11/*         Fig. 11  (load balance vs skew; task-size effects)
+  peakmem/*       Fig. 12  (peak memory: naive vs pipeline vs ring)
+  overall/*       Fig. 13  (end-to-end, naive vs adaptive, template sweep)
+  adaptive_policy/*, lm_coll/*  (beyond paper: LM collectives)
+
+Multi-device sections run in subprocesses with 8 host devices; the main
+process keeps a single device.
+"""
+
+from __future__ import annotations
+
+import traceback
+
+from . import bench_load_balance, bench_templates
+from .common import run_worker
+
+
+def _section(name, fn):
+    print(f"# --- {name} ---", flush=True)
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001 — keep the harness going
+        traceback.print_exc()
+        print(f"{name}/FAILED,0.0,{type(e).__name__}", flush=True)
+
+
+def main() -> None:
+    _section("templates", bench_templates.run)
+    _section("load_balance", bench_load_balance.run)
+    _section(
+        "strong_scaling",
+        lambda: print(
+            run_worker("benchmarks._scaling_worker", ["strong", "--template", "u5-2"]),
+            end="",
+        ),
+    )
+    _section(
+        "weak_scaling",
+        lambda: print(
+            run_worker("benchmarks._scaling_worker", ["weak", "--template", "u5-2"]),
+            end="",
+        ),
+    )
+    _section(
+        "peak_memory",
+        lambda: print(
+            run_worker("benchmarks._scaling_worker", ["peakmem", "--template", "u7-2"]),
+            end="",
+        ),
+    )
+    _section(
+        "overall",
+        lambda: print(run_worker("benchmarks._scaling_worker", ["overall"]), end=""),
+    )
+
+    from . import bench_lm_collectives
+
+    _section("lm_collectives", bench_lm_collectives.run)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end distributed subgraph counting (the paper's workload).
+
+Runs the distributed color-coding engine over 8 host devices on an RMAT
+graph, comparing the paper's three communication modes (naive all-to-all /
+pipelined adaptive-group / adaptive switch) plus the beyond-paper relay
+ring, and prints per-mode wall-clock and the agreeing count estimates.
+
+Run:  PYTHONPATH=src python examples/count_distributed.py [--template u5-2]
+(device count is set below, before jax imports)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import relabel_random, rmat  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    build_distributed_plan,
+    make_count_fn,
+    shard_coloring,
+)
+from repro.core.templates import template  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--template", default="u5-2")
+    ap.add_argument("--vertices", type=int, default=1 << 14)
+    ap.add_argument("--edges", type=int, default=150_000)
+    ap.add_argument("--iters", type=int, default=8)
+    args = ap.parse_args()
+
+    shards = 8
+    mesh = jax.make_mesh((shards,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = relabel_random(rmat(args.vertices, args.edges, skew=3, seed=0), seed=1)
+    tree = template(args.template)
+    print(f"graph: {g.n} vertices, {g.num_edges} edges (skew {g.skewness():.0f}); "
+          f"template {tree.name} (k={tree.n}); {shards} shards\n")
+
+    plan = build_distributed_plan(g, tree, shards)
+    rng = np.random.default_rng(0)
+    colorings = np.stack([
+        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))
+        for _ in range(args.iters)
+    ])
+
+    for mode, gf in (("alltoall", 1), ("pipeline", 1), ("pipeline", 3),
+                     ("adaptive", 1), ("ring", 1)):
+        f = make_count_fn(plan, mesh, mode=mode, group_factor=gf)
+        counts = f(jnp.asarray(colorings))
+        jax.block_until_ready(counts)
+        t0 = time.perf_counter()
+        counts = f(jnp.asarray(colorings))
+        jax.block_until_ready(counts)
+        dt = time.perf_counter() - t0
+        est = float(np.mean(np.asarray(counts))) * plan.scale
+        label = f"{mode}(g={gf})" if mode == "pipeline" else mode
+        print(f"{label:<14} {dt * 1e3:8.1f} ms / {args.iters} colorings   "
+              f"estimate ~ {est:.4g}")
+
+
+if __name__ == "__main__":
+    main()

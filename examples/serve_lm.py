@@ -1,0 +1,61 @@
+"""Batched serving example: prefill + lock-step decode with a KV cache.
+
+Serves batched requests against a (reduced) assigned architecture with the
+prefill/decode engine that the decode_* dry-run cells lower at production
+scale.  Works for every family (full-attention KV caches, SWA circular
+caches, RWKV/RG-LRU recurrent state).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    eng = ServingEngine(
+        model,
+        ServeConfig(
+            batch_size=args.batch,
+            max_new_tokens=args.new_tokens,
+            temperature=args.temperature,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(
+        np.int32
+    )
+    ctx_len, needed = model._context_len()
+    context = (
+        rng.standard_normal((args.batch, ctx_len, cfg.d_model)).astype(np.float32) * 0.1
+        if needed
+        else None
+    )
+
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, context=context)
+    dt = time.perf_counter() - t0
+    total_tokens = args.batch * args.new_tokens
+    print(f"arch {cfg.name}: generated {out.shape} in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Adaptive mode selection — the paper's §3.2.2 complexity model.
+
+The paper switches between the monolithic all-to-all and the pipelined
+grouped exchange based on the sub-template's computation intensity: the
+pipeline wins when per-chunk compute can hide per-chunk transfer
+(overlap ratio rho_w -> 1, Eq. 14) and the extra per-step latency
+``alpha * W`` is amortized; the fused collective wins for small payloads
+that cannot exploit overlap but do exploit full link bandwidth.
+
+The decision is made at trace time (per sub-template / per layer), which is
+the same granularity as the paper's runtime router — under SPMD the
+schedule must be static anyway (DESIGN.md §10).
+
+Costs follow the Hockney model (Eq. 8):
+    T_fused    = alpha + beta * B_total + T_comp_total
+    T_pipeline = W * alpha + beta * B_chunk            (cold start, Eq. 15)
+                 + sum_w max(T_comp_chunk, beta * B_chunk)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+__all__ = [
+    "HockneyModel",
+    "V5E_ICI",
+    "V5E_DCI",
+    "overlap_ratio",
+    "pipeline_cost",
+    "fused_cost",
+    "choose_mode",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HockneyModel:
+    """alpha/beta link model + compute rate for one mesh axis."""
+
+    alpha: float  # per-operation latency, seconds
+    beta: float  # seconds per byte (1 / link bandwidth)
+    flops_per_s: float  # effective compute rate of one device
+
+
+# TPU v5e constants used throughout the roofline analysis: 197 TFLOP/s bf16,
+# ~50 GB/s per ICI link; inter-pod DCI assumed 2x slower.  alpha from typical
+# ICI collective latencies (~5 us per hop).
+V5E_ICI = HockneyModel(alpha=5e-6, beta=1.0 / 50e9, flops_per_s=197e12)
+V5E_DCI = HockneyModel(alpha=20e-6, beta=1.0 / 25e9, flops_per_s=197e12)
+
+
+def overlap_ratio(comp_chunk_s: float, comm_chunk_s: float) -> float:
+    """rho_w of Eq. 14: fraction of a chunk transfer hidden by compute."""
+    if comm_chunk_s <= 0:
+        return 1.0
+    return min(comp_chunk_s, comm_chunk_s) / comm_chunk_s
+
+
+def pipeline_cost(
+    total_bytes: float,
+    total_flops: float,
+    P: int,
+    model: HockneyModel,
+    group_factor: int = 1,
+) -> float:
+    """Estimated wall time of the grouped pipelined exchange (Eq. 13/15)."""
+    W = max(1, math.ceil((P - 1) / max(1, group_factor)))
+    b_chunk = total_bytes / max(1, P - 1) * group_factor
+    comp_chunk = total_flops / max(1, P) / model.flops_per_s
+    comm_chunk = model.alpha + model.beta * b_chunk
+    # cold start pays one full transfer; subsequent steps overlap
+    return comm_chunk + sum(
+        max(comp_chunk, comm_chunk) for _ in range(W - 1)
+    ) + comp_chunk
+
+
+def fused_cost(total_bytes: float, total_flops: float, model: HockneyModel) -> float:
+    """Estimated wall time of all-to-all + full compute (no overlap)."""
+    return model.alpha + model.beta * total_bytes + total_flops / model.flops_per_s
+
+
+def choose_mode(
+    total_bytes: float,
+    total_flops: float,
+    P: int,
+    model: HockneyModel = V5E_ICI,
+    group_factor: int = 1,
+) -> Tuple[str, dict]:
+    """Pick 'pipeline' or 'alltoall' for one exchange; returns diagnostics.
+
+    ``total_bytes``: payload this device exchanges across the axis;
+    ``total_flops``: compute consuming that payload on this device.
+    """
+    tp = pipeline_cost(total_bytes, total_flops, P, model, group_factor)
+    tf = fused_cost(total_bytes, total_flops, model)
+    comp_chunk = total_flops / max(1, P) / model.flops_per_s
+    comm_chunk = model.alpha + model.beta * total_bytes / max(1, P - 1)
+    diag = {
+        "pipeline_cost_s": tp,
+        "fused_cost_s": tf,
+        "rho": overlap_ratio(comp_chunk, comm_chunk),
+        "intensity_flops_per_byte": total_flops / max(total_bytes, 1.0),
+    }
+    return ("pipeline" if tp <= tf else "alltoall"), diag

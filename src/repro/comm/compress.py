@@ -1,0 +1,77 @@
+"""int8-compressed ring reduce-scatter (beyond-paper gradient compression).
+
+Each hop of the ring carries the chunk quantized to int8 with a per-row
+(block) fp32 scale — 4x less ICI traffic than fp32 (2x vs bf16) at the
+cost of one quantization error per hop.  Dequantize-accumulate keeps the
+running sum in fp32, so errors add linearly in P rather than compounding.
+
+Used by the train loop when ``grad_compression="int8"``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress", "compressed_ring_reduce_scatter"]
+
+
+def _shift_perm(P: int, shift: int = 1):
+    return [(i, (i + shift) % P) for i in range(P)]
+
+
+def int8_compress(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Flat int8 quantization with per-block scales.
+
+    Returns (q [N], scales [N/block]) for flattened input padded to a block
+    multiple by the caller.
+    """
+    flat = x.reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0].astype(jnp.float32)
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, block: int = 256) -> jax.Array:
+    flat = q.reshape(-1, block).astype(jnp.float32)
+    return (flat * scale[:, None]).reshape(-1)
+
+
+def compressed_ring_reduce_scatter(
+    x: jax.Array, axis_name: str, *, block: int = 256
+) -> jax.Array:
+    """Ring reduce-scatter with int8 payloads; input [P, chunk...] per device.
+
+    Output: this device's fully reduced chunk (fp32).  Chunk sizes must be a
+    multiple of ``block`` elements.
+    """
+    P = jax.lax.axis_size(axis_name)
+    p = jax.lax.axis_index(axis_name)
+    chunk_shape = x.shape[1:]
+    total = 1
+    for d in chunk_shape:
+        total *= d
+    while total % block:  # shrink block to divide small chunks
+        block //= 2
+    block = max(block, 1)
+
+    def quant(c):
+        return int8_compress(c.reshape(-1), block)
+
+    def dequant(q, s):
+        return int8_decompress(q, s, block).reshape(chunk_shape)
+
+    def body(w, carry):
+        q, s = carry
+        q = jax.lax.ppermute(q, axis_name, _shift_perm(P))
+        s = jax.lax.ppermute(s, axis_name, _shift_perm(P))
+        c = (p - w - 2) % P
+        acc = dequant(q, s) + jax.lax.dynamic_index_in_dim(x, c, 0, keepdims=False)
+        return quant(acc)
+
+    q0, s0 = quant(jax.lax.dynamic_index_in_dim(x, (p - 1) % P, 0, keepdims=False))
+    q, s = jax.lax.fori_loop(0, P - 1, body, (q0, s0))
+    return dequant(q, s)

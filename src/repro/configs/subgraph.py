@@ -1,0 +1,73 @@
+"""Counting-workload configs — the paper's own experiment grid (Table 2/Fig 5).
+
+These drive the subgraph-counting dry-runs and benchmarks.  Graph sizes are
+the paper's datasets; at dry-run time only shapes matter (ShapeDtypeStruct),
+so the billion-edge rows compile without materializing data.  Benchmark runs
+use the scaled-down rows (CPU container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["CountingConfig", "COUNTING_CONFIGS", "PAPER_DATASETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CountingConfig:
+    name: str
+    num_vertices: int
+    num_edges: int  # undirected
+    template: str  # name in core.templates.TEMPLATES
+    num_shards: int  # graph shards over the data axis
+    mode: str = "adaptive"  # alltoall | pipeline | adaptive | ring
+    group_factor: int = 1
+    skew: int = 3  # RMAT skew when synthesized
+    #: 'grid' — graph over data(16), colorings over model(16) with the
+    #: unrolled grouped exchange; 'flat' — graph over all chips with the
+    #: O(1)-HLO relay ring (the beyond-paper mode for big-V datasets)
+    mesh_kind: str = "grid"
+
+    @property
+    def avg_degree(self) -> float:
+        return 2 * self.num_edges / self.num_vertices
+
+
+# Paper Table 2 datasets (name -> (V, E, source))
+PAPER_DATASETS = {
+    "miami": (2_100_000, 51_000_000, "social network"),
+    "orkut": (3_000_000, 230_000_000, "social network"),
+    "nyc": (18_000_000, 480_000_000, "social network"),
+    "twitter": (44_000_000, 2_000_000_000, "Twitter users"),
+    "sk-2005": (50_000_000, 3_800_000_000, "UbiCrawler"),
+    "friendster": (66_000_000, 5_000_000_000, "social network"),
+    "rmat-250m": (5_000_000, 250_000_000, "PaRMAT"),
+    "rmat-500m": (5_000_000, 500_000_000, "PaRMAT"),
+}
+
+COUNTING_CONFIGS = {
+    # dry-run rows (paper scale; shapes only)
+    "rmat500-u10-2": CountingConfig("rmat500-u10-2", *PAPER_DATASETS["rmat-500m"][:2],
+                                    template="u10-2", num_shards=16,
+                                    mode="pipeline", mesh_kind="grid"),
+    "rmat500-u12-2": CountingConfig("rmat500-u12-2", *PAPER_DATASETS["rmat-500m"][:2],
+                                    template="u12-2", num_shards=16,
+                                    mode="alltoall", mesh_kind="grid"),
+    "twitter-u12-2": CountingConfig("twitter-u12-2", *PAPER_DATASETS["twitter"][:2],
+                                    template="u12-2", num_shards=256,
+                                    mode="ring", mesh_kind="flat"),
+    # u12-2's |V|/P table term exceeds v5e HBM at 16 shards (Eq. 12);
+    # the 256-shard flat ring is the config that fits
+    "rmat500-u12-2-ring": CountingConfig(
+        "rmat500-u12-2-ring", *PAPER_DATASETS["rmat-500m"][:2],
+        template="u12-2", num_shards=256, mode="ring", mesh_kind="flat"),
+    "friendster-u12-1": CountingConfig(
+        "friendster-u12-1", *PAPER_DATASETS["friendster"][:2],
+        template="u12-1", num_shards=256, mode="ring", mesh_kind="flat"),
+    # benchmark rows (CPU-scale, same shape family)
+    "bench-small": CountingConfig("bench-small", 20_000, 200_000, template="u5-2",
+                                  num_shards=8),
+    "bench-medium": CountingConfig("bench-medium", 50_000, 1_000_000,
+                                   template="u10-2", num_shards=8),
+}

@@ -1,0 +1,31 @@
+"""Core library: color-coding subgraph counting (the paper's contribution).
+
+Public API:
+  - templates: Tree, template(name), partition_tree, automorphism_count
+  - graphs: Graph, rmat, erdos_renyi, from_edges
+  - count_engine: build_counting_plan, colorful_map_count, count_fn
+  - estimator: estimate_counts, niter_bound
+  - distributed: build_distributed_plan, distributed_count_fn (shard_map)
+  - brute_force: exact oracles for testing
+"""
+
+from .templates import (  # noqa: F401
+    TEMPLATES,
+    Tree,
+    automorphism_count,
+    partition_complexity,
+    partition_tree,
+    path_tree,
+    random_tree,
+    spider_tree,
+    star_tree,
+    template,
+)
+from .graphs import Graph, erdos_renyi, from_edges, relabel_random, rmat  # noqa: F401
+from .count_engine import (  # noqa: F401
+    CountingPlan,
+    build_counting_plan,
+    colorful_map_count,
+    count_fn,
+)
+from .estimator import CountEstimate, estimate_counts, niter_bound  # noqa: F401

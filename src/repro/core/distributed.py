@@ -1,0 +1,445 @@
+"""Distributed color-coding under ``shard_map`` — the paper's Algorithms 2/3.
+
+The graph is vertex-partitioned in contiguous blocks over the ``data`` mesh
+axis (combine with :func:`repro.core.graphs.relabel_random` for the paper's
+random partition).  Count tables are row-sharded alongside.  For each
+internal partition node the neighbor sum needs remote rows of the child
+table; four exchange modes are provided:
+
+``alltoall``  (paper: Naive)
+    Compact per-pair request lists exchanged with one fused
+    ``lax.all_to_all``; all P received chunks are materialized before any
+    compute (peak memory O(P * R * B) — Eq. 7's pathology).
+
+``pipeline``  (paper: Pipeline, Algorithm 3)
+    The same compact requests, but sent with W = ceil((P-1)/g) grouped
+    ``ppermute`` steps; each step's transfer overlaps the previous chunk's
+    segment-sum (peak memory O(g * R * B) — Eq. 12).
+
+``adaptive``  (paper: Adaptive)
+    Per-sub-template trace-time choice between the two via the Hockney
+    model + computation intensity (comm.adaptive; the paper's |T_i|
+    switch).
+
+``ring``  (beyond paper)
+    Shift-by-one relay of whole table shards in a ``fori_loop``
+    (O(1) program size in P).  Trades the compact request lists for relayed
+    full shards; this is what lets the engine shard over hundreds of
+    devices where the unrolled direct-send schedule would explode compile
+    time.  See DESIGN.md §4.
+
+Iteration parallelism: the outer color-coding loop is embarrassingly
+parallel, so independent colorings shard over a second mesh axis
+(``iter_axis``), mirroring the paper's multi-node outer loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import (
+    V5E_ICI,
+    HockneyModel,
+    choose_mode,
+    fused_exchange,
+    grouped_exchange,
+    ring_allgather_overlap,
+)
+from repro.kernels import ops
+from .count_engine import CountingPlan
+from .graphs import Graph
+from .templates import PartitionChain, Tree, automorphism_count, partition_tree
+
+__all__ = [
+    "DistributedPlan",
+    "build_distributed_plan",
+    "make_count_fn",
+    "shard_coloring",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedPlan:
+    tree: Tree
+    chain: PartitionChain
+    k: int
+    n: int
+    num_shards: int
+    shard_size: int  # vertices per shard (last shard may be ragged)
+    n_loc_pad: int  # padded local rows; row `shard_size` is the zero sentinel
+    r_pad: int  # padded request-list length
+    max_e: int  # padded per-bucket edge count
+    aut: int
+    combine: Dict[int, ops.CombineTables]
+    widths: Dict[int, int]
+    # host-global arrays; sharded over dim 0 by the data axis:
+    bucket_rows: jax.Array  # [P, P, max_e] int32: local dst row
+    bucket_cols_local: jax.Array  # [P, P, max_e] int32: src-local row (ring)
+    bucket_cols_compact: jax.Array  # [P, P, max_e] int32: request slot (a2a)
+    send_idx: jax.Array  # [P, P, r_pad] int32: rows this shard sends to q
+    bucket_counts: np.ndarray  # [P, P] true bucket sizes (diagnostics)
+
+    @property
+    def scale(self) -> float:
+        k = self.k
+        return (k ** k) / math.factorial(k) / self.aut
+
+
+def build_distributed_plan(
+    g: Graph,
+    tree: Tree,
+    num_shards: int,
+    *,
+    root: int = 0,
+    tile_size: int = 128,
+) -> DistributedPlan:
+    from .graphs import edge_list
+
+    Pn = num_shards
+    chain = partition_tree(tree, root=root)
+    k = tree.n
+    shard_size = (g.n + Pn - 1) // Pn
+    n_loc_pad = ops.pad_to(shard_size + 1, 128)
+    sentinel = shard_size
+
+    rows, cols = edge_list(g)
+    p_of = rows // shard_size
+    q_of = cols // shard_size
+    counts = np.zeros((Pn, Pn), np.int64)
+    np.add.at(counts, (p_of, q_of), 1)
+    max_e = int(counts.max(initial=0))
+    max_e = max(ops.pad_to(max_e, tile_size), tile_size)
+
+    b_rows = np.full((Pn, Pn, max_e), sentinel, np.int32)
+    b_cols = np.full((Pn, Pn, max_e), sentinel, np.int32)
+    key = p_of * Pn + q_of
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    group_start = np.zeros(Pn * Pn, np.int64)
+    np.cumsum(np.bincount(skey, minlength=Pn * Pn)[:-1], out=group_start[1:])
+    pos = np.arange(len(order)) - group_start[skey]
+    fr = b_rows.reshape(Pn * Pn, max_e)
+    fc = b_cols.reshape(Pn * Pn, max_e)
+    fr[skey, pos] = (rows[order] - p_of[order] * shard_size).astype(np.int32)
+    fc[skey, pos] = (cols[order] - q_of[order] * shard_size).astype(np.int32)
+
+    # sort each bucket by dst row (keeps segment ids grouped; cheap locality)
+    dst_order = np.argsort(fr, axis=1, kind="stable")
+    fr = np.take_along_axis(fr, dst_order, axis=1)
+    fc = np.take_along_axis(fc, dst_order, axis=1)
+    b_rows = fr.reshape(Pn, Pn, max_e)
+    b_cols = fc.reshape(Pn, Pn, max_e)
+
+    # compact request lists: for bucket (p, q), the distinct src-local rows
+    # (the counts device p requests from device q — paper's C_{q,p})
+    r_len = 0
+    uniq_lists = {}
+    inv_store = np.zeros((Pn, Pn, max_e), np.int32)
+    for pp in range(Pn):
+        for qq in range(Pn):
+            uniq, inv = np.unique(b_cols[pp, qq], return_inverse=True)
+            uniq_lists[(pp, qq)] = uniq
+            inv_store[pp, qq] = inv.astype(np.int32)
+            r_len = max(r_len, len(uniq))
+    r_pad = ops.pad_to(r_len, 128)
+    send_idx = np.full((Pn, Pn, r_pad), sentinel, np.int32)
+    for pp in range(Pn):
+        for qq in range(Pn):
+            u = uniq_lists[(pp, qq)]
+            # device q sends rows u to device p: stored at send_idx[q, p]
+            send_idx[qq, pp, : len(u)] = u
+
+    combine: Dict[int, ops.CombineTables] = {}
+    widths: Dict[int, int] = {}
+    for i, nd in enumerate(chain.nodes):
+        if nd.is_leaf:
+            widths[i] = ops.pad_to(k, 128)
+        else:
+            t1 = chain.nodes[nd.left].size
+            t2 = chain.nodes[nd.right].size
+            tables = ops.build_combine_tables(k, t1, t2)
+            combine[i] = tables
+            widths[i] = tables.s_pad
+
+    return DistributedPlan(
+        tree=tree,
+        chain=chain,
+        k=k,
+        n=g.n,
+        num_shards=Pn,
+        shard_size=shard_size,
+        n_loc_pad=n_loc_pad,
+        r_pad=r_pad,
+        max_e=max_e,
+        aut=automorphism_count(tree),
+        combine=combine,
+        widths=widths,
+        bucket_rows=jnp.asarray(b_rows),
+        bucket_cols_local=jnp.asarray(b_cols),
+        bucket_cols_compact=jnp.asarray(inv_store),
+        send_idx=jnp.asarray(send_idx),
+        bucket_counts=counts,
+    )
+
+
+def abstract_plan(
+    num_vertices: int,
+    num_edges: int,
+    tree: Tree,
+    num_shards: int,
+    *,
+    root: int = 0,
+    skew_headroom: float = 3.0,
+    compact: bool = True,  # False (ring mode): compact-exchange arrays minimal
+) -> DistributedPlan:
+    """Shape-only plan for dry-run lowering at paper-scale graph sizes.
+
+    Bucket/request sizes follow the paper's Eq. 5 expectation
+    E[bucket] = |E_directed| / P^2 with a skew headroom factor (the padding a
+    real relabeled-random partition needs); array fields are
+    ShapeDtypeStructs — nothing is allocated.
+    """
+    Pn = num_shards
+    chain = partition_tree(tree, root=root)
+    k = tree.n
+    shard_size = (num_vertices + Pn - 1) // Pn
+    n_loc_pad = ops.pad_to(shard_size + 1, 128)
+    avg_bucket = 2.0 * num_edges / (Pn * Pn)
+    max_e = ops.pad_to(int(avg_bucket * skew_headroom) + 128, 128)
+    r_pad = ops.pad_to(min(max_e, shard_size + 1), 128)
+
+    combine: Dict[int, ops.CombineTables] = {}
+    widths: Dict[int, int] = {}
+    for i, nd in enumerate(chain.nodes):
+        if nd.is_leaf:
+            widths[i] = ops.pad_to(k, 128)
+        else:
+            t1 = chain.nodes[nd.left].size
+            t2 = chain.nodes[nd.right].size
+            tables = ops.build_combine_tables(k, t1, t2)
+            combine[i] = tables
+            widths[i] = tables.s_pad
+
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+    cmp_e = max_e if compact else 128
+    if not compact:
+        r_pad = 128
+    return DistributedPlan(
+        tree=tree,
+        chain=chain,
+        k=k,
+        n=num_vertices,
+        num_shards=Pn,
+        shard_size=shard_size,
+        n_loc_pad=n_loc_pad,
+        r_pad=r_pad,
+        max_e=max_e,
+        aut=automorphism_count(tree),
+        combine=combine,
+        widths=widths,
+        bucket_rows=s(Pn, Pn, max_e),
+        bucket_cols_local=s(Pn, Pn, max_e),
+        bucket_cols_compact=s(Pn, Pn, cmp_e),
+        send_idx=s(Pn, Pn, r_pad),
+        bucket_counts=np.zeros((Pn, Pn), np.int64),
+    )
+
+
+def shard_coloring(plan: DistributedPlan, coloring: np.ndarray) -> np.ndarray:
+    """Global coloring [n] -> sharded layout [P, n_loc_pad]."""
+    out = np.zeros((plan.num_shards, plan.n_loc_pad), np.int32)
+    for p in range(plan.num_shards):
+        lo = p * plan.shard_size
+        hi = min((p + 1) * plan.shard_size, plan.n)
+        out[p, : hi - lo] = coloring[lo:hi]
+    return out
+
+
+def _node_mode(
+    plan: DistributedPlan,
+    node_index: int,
+    mode: str,
+    hockney: HockneyModel,
+    group_factor: int,
+) -> str:
+    if mode != "adaptive":
+        return mode
+    nd = plan.chain.nodes[node_index]
+    tbl = plan.combine[node_index]
+    b_width = plan.widths[nd.right]
+    Pn = plan.num_shards
+    total_bytes = (Pn - 1) * plan.r_pad * b_width * 4
+    spmm_flops = 2.0 * Pn * plan.max_e * b_width
+    combine_flops = 2.0 * plan.n_loc_pad * tbl.s * tbl.j
+    picked, _ = choose_mode(
+        total_bytes, spmm_flops + combine_flops, Pn, hockney, group_factor
+    )
+    return "alltoall" if picked == "alltoall" else "pipeline"
+
+
+def make_count_fn(
+    plan: DistributedPlan,
+    mesh: jax.sharding.Mesh,
+    *,
+    mode: str = "adaptive",
+    data_axis: str = "data",
+    iter_axis: Optional[str] = None,
+    group_factor: int = 1,
+    impl: str = "xla",
+    hockney: HockneyModel = V5E_ICI,
+    return_raw: bool = False,
+):
+    """Build the jitted distributed count function.
+
+    Returns ``f(colorings) -> counts`` where ``colorings`` is int32
+    ``[I, P, n_loc_pad]`` (I = number of parallel coloring iterations,
+    sharded over ``iter_axis`` when given) and ``counts`` is float32 [I]
+    (colorful map counts; multiply by ``plan.scale`` for copy estimates).
+
+    ``return_raw=True`` (dry-run): returns ``(jitted_fn, structs, in_shard)``
+    where the fn takes all plan arrays as explicit arguments so the plan may
+    hold ShapeDtypeStructs (see :func:`abstract_plan`); ``iter_axis`` may be
+    a tuple of mesh axes.
+    """
+    Pn = plan.num_shards
+    n_loc_pad = plan.n_loc_pad
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert axis_sizes[data_axis] == Pn, (axis_sizes, Pn)
+
+    node_modes = {
+        i: _node_mode(plan, i, mode, hockney, group_factor)
+        for i, nd in enumerate(plan.chain.nodes)
+        if not nd.is_leaf
+    }
+
+    edge_chunk = 1 << 19  # bound the [chunk, B] gather (paper §3.2.1)
+
+    def consume_factory(bucket_rows, bucket_cols, n_rows):
+        """bucket_* are this device's [P, max_e]; returns consume(acc, chunk, src)."""
+
+        def consume(acc, chunk, src):
+            ce = jax.lax.dynamic_index_in_dim(bucket_cols, src, 0, keepdims=False)
+            re = jax.lax.dynamic_index_in_dim(bucket_rows, src, 0, keepdims=False)
+            e = ce.shape[0]
+            if e <= edge_chunk:
+                gathered = jnp.take(chunk, ce, axis=0)
+                return acc + jax.ops.segment_sum(gathered, re, num_segments=n_rows)
+
+            # big buckets: chunked scatter-add keeps the gather bounded
+            from repro.comm.ring import _pvary_like
+
+            acc = _pvary_like(acc, chunk)
+            n_chunks = (e + edge_chunk - 1) // edge_chunk
+            pad = n_chunks * edge_chunk - e
+            ce_p = jnp.pad(ce, (0, pad), constant_values=chunk.shape[0] - 1)
+            re_p = jnp.pad(re, (0, pad), constant_values=n_rows - 1)
+
+            def body(i, a):
+                cs = jax.lax.dynamic_slice_in_dim(ce_p, i * edge_chunk, edge_chunk)
+                rs = jax.lax.dynamic_slice_in_dim(re_p, i * edge_chunk, edge_chunk)
+                return a.at[rs].add(jnp.take(chunk, cs, axis=0))
+
+            return jax.lax.fori_loop(0, n_chunks, body, acc)
+
+        return consume
+
+    def local_count(coloring, b_rows, b_cols_loc, b_cols_cmp, s_idx):
+        """One coloring iteration on this device's shard; returns partial sum."""
+        row_mask = (jnp.arange(n_loc_pad) < plan.shard_size).astype(jnp.float32)[:, None]
+        k_pad = ops.pad_to(plan.k, 128)
+        leaf = jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32) * row_mask
+        tables: Dict[int, jax.Array] = {}
+        for i, nd in enumerate(plan.chain.nodes):
+            if nd.is_leaf:
+                tables[i] = leaf
+                continue
+            tbl = plan.combine[i]
+            c_right = tables[nd.right]
+            init = jnp.zeros((n_loc_pad, c_right.shape[1]), c_right.dtype)
+            nm = node_modes[i]
+            if nm == "ring":
+                consume = consume_factory(b_rows, b_cols_loc, n_loc_pad)
+                m = ring_allgather_overlap(c_right, data_axis, consume, init)
+            else:
+                consume = consume_factory(b_rows, b_cols_cmp, n_loc_pad)
+                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
+                if nm == "alltoall":
+                    m = fused_exchange(chunks, data_axis, consume, init)
+                else:
+                    m = grouped_exchange(
+                        chunks,
+                        data_axis,
+                        consume,
+                        init,
+                        group_factor=group_factor,
+                    )
+            m = m * row_mask
+            out = ops.color_combine(tables[nd.left], m, tbl, impl=impl)
+            col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
+            tables[i] = out * row_mask * col_mask
+            del tables[nd.right]
+            del tables[nd.left]
+        root = tables[plan.chain.root_index]
+        return jnp.sum(root[:, 0])
+
+    def sharded_fn(colorings, b_rows, b_cols_loc, b_cols_cmp, s_idx):
+        # local shapes: colorings [I_loc, 1, n_loc_pad]; buckets [1, P, ...]
+        colorings = colorings[:, 0]
+        b_rows_l = b_rows[0]
+        b_cols_loc_l = b_cols_loc[0]
+        b_cols_cmp_l = b_cols_cmp[0]
+        s_idx_l = s_idx[0]
+        f = lambda col: local_count(col, b_rows_l, b_cols_loc_l, b_cols_cmp_l, s_idx_l)
+        partials = jax.vmap(f)(colorings)  # [I_loc]
+        return jax.lax.psum(partials, data_axis)
+
+    iter_spec = P(iter_axis) if iter_axis else P()
+    in_specs = (
+        P(iter_axis, data_axis) if iter_axis else P(None, data_axis),
+        P(data_axis),
+        P(data_axis),
+        P(data_axis),
+        P(data_axis),
+    )
+    mapped = jax.shard_map(
+        sharded_fn, mesh=mesh, in_specs=in_specs, out_specs=iter_spec
+    )
+
+    if return_raw:
+        from jax.sharding import NamedSharding
+
+        iter_size = 1
+        for ax in (iter_axis if isinstance(iter_axis, tuple) else (iter_axis,)):
+            if ax:
+                iter_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+        as_struct = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.int32)
+        structs = (
+            jax.ShapeDtypeStruct((iter_size, Pn, n_loc_pad), jnp.int32),
+            as_struct(plan.bucket_rows),
+            as_struct(plan.bucket_cols_local),
+            as_struct(plan.bucket_cols_compact),
+            as_struct(plan.send_idx),
+        )
+        in_shard = tuple(NamedSharding(mesh, s) for s in in_specs)
+        fn = jax.jit(mapped, in_shardings=in_shard)
+        return fn, structs, in_shard
+
+    @jax.jit
+    def f(colorings):
+        return mapped(
+            colorings,
+            plan.bucket_rows,
+            plan.bucket_cols_local,
+            plan.bucket_cols_compact,
+            plan.send_idx,
+        )
+
+    return f

@@ -1,0 +1,239 @@
+"""Graph substrate: CSR storage, generators, partitioning, edge tiles.
+
+Graphs are undirected and stored in CSR with both edge directions, which is
+what the color-coding neighbor sum consumes (``M[v] += C[u]`` for every
+directed entry ``(v, u)``).
+
+Two layouts feed the compute kernels:
+
+* **expanded edges** ``(rows, cols)`` — one entry per directed edge, rows
+  nondecreasing (CSR order).  This is the input to the XLA segment-sum path
+  and to the Pallas gather kernel.
+* **edge tiles** — the same arrays padded to a multiple of the tile size
+  ``s`` with a sentinel row.  This is the TPU realization of the paper's
+  *neighbor-list partitioning* (§3.3): every tile is a bounded, uniform unit
+  of work no matter how skewed the degree distribution is; a max-degree
+  vertex simply spans many tiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "from_edges",
+    "erdos_renyi",
+    "rmat",
+    "relabel_random",
+    "edge_list",
+    "edge_tiles",
+    "partition_edges_by_src_shard",
+    "pad_vertices",
+    "RMAT_SKEW",
+]
+
+
+@dataclass(frozen=True)
+class Graph:
+    """Undirected graph in CSR form (both directions stored)."""
+
+    n: int
+    indptr: np.ndarray  # int64 [n+1]
+    indices: np.ndarray  # int32 [2m]
+    name: str = ""
+
+    @property
+    def num_edges(self) -> int:
+        """Number of undirected edges."""
+        return int(self.indices.shape[0]) // 2
+
+    @property
+    def num_directed(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees().max(initial=0))
+
+    @property
+    def avg_degree(self) -> float:
+        return float(self.num_directed / max(self.n, 1))
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def skewness(self) -> float:
+        """max degree / avg degree — the paper's workload-skew indicator."""
+        return self.max_degree / max(self.avg_degree, 1e-12)
+
+
+def from_edges(n: int, edges: np.ndarray, name: str = "") -> Graph:
+    """Build a Graph from an array of undirected edges [m, 2].
+
+    Self loops and duplicate edges are removed.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size:
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n + hi
+        _, first = np.unique(key, return_index=True)
+        edges = np.stack([lo[first], hi[first]], axis=1)
+    both = np.concatenate([edges, edges[:, ::-1]], axis=0) if edges.size else edges
+    order = np.lexsort((both[:, 1], both[:, 0])) if both.size else np.array([], np.int64)
+    both = both[order] if both.size else both.reshape(0, 2)
+    counts = np.bincount(both[:, 0], minlength=n) if both.size else np.zeros(n, np.int64)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    indices = both[:, 1].astype(np.int32) if both.size else np.zeros(0, np.int32)
+    return Graph(n, indptr, indices, name)
+
+
+def erdos_renyi(n: int, avg_degree: float, seed: int = 0, name: str = "") -> Graph:
+    """G(n, m) with m ~= n*avg_degree/2 sampled uniformly."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    edges = rng.integers(0, n, size=(int(m * 1.15) + 8, 2), dtype=np.int64)
+    return from_edges(n, edges[:m] if len(edges) >= m else edges, name or f"er-{n}-{avg_degree}")
+
+
+#: Mapping of the paper's PaRMAT "skewness k" knob to RMAT (a, b, c, d).
+#: Higher a = heavier-tailed degree distribution; k=1 is near-uniform
+#: (matches the paper: R250K1 has max degree 170 at avg 100, R250K8 has
+#: 433K max at avg 217).
+RMAT_SKEW = {
+    1: (0.30, 0.25, 0.25, 0.20),
+    3: (0.45, 0.22, 0.22, 0.11),
+    8: (0.57, 0.19, 0.19, 0.05),
+}
+
+
+def rmat(
+    n: int,
+    num_edges: int,
+    skew: int = 3,
+    seed: int = 0,
+    probs: Optional[Tuple[float, float, float, float]] = None,
+    name: str = "",
+) -> Graph:
+    """R-MAT generator (Chakrabarti et al.), vectorized bit-recursive sampling.
+
+    ``n`` is rounded up to the next power of two internally; vertices beyond
+    ``n`` are folded back with a modulo, matching common practice.
+    """
+    a, b, c, d = probs if probs is not None else RMAT_SKEW[skew]
+    scale = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    rng = np.random.default_rng(seed)
+    m = num_edges
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    for _ in range(scale):
+        r = rng.random(m)
+        src <<= 1
+        dst <<= 1
+        # quadrant probabilities: a (0,0), b (0,1), c (1,0), d (1,1)
+        q_b = (r >= a) & (r < a + b)
+        q_c = (r >= a + b) & (r < a + b + c)
+        q_d = r >= a + b + c
+        dst += q_b | q_d
+        src += q_c | q_d
+    src %= n
+    dst %= n
+    return from_edges(n, np.stack([src, dst], 1), name or f"rmat-{n}-{num_edges}-s{skew}")
+
+
+def relabel_random(g: Graph, seed: int = 0) -> Graph:
+    """Random vertex relabeling — the paper's random-partition assumption.
+
+    Contiguous block partitioning of a randomly relabeled graph is equivalent
+    to random vertex partitioning (Eq. 5's E[N_r,w] = |E|/P^2 analysis).
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.n).astype(np.int64)
+    rows, cols = edge_list(g)
+    return from_edges(g.n, np.stack([perm[rows], perm[cols]], 1), g.name + "-shuf")
+
+
+def edge_list(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Expanded directed edge list (rows nondecreasing)."""
+    rows = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.indptr))
+    return rows, g.indices.astype(np.int32)
+
+
+def pad_vertices(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def edge_tiles(
+    g: Graph, tile_size: int, n_pad: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Neighbor-list partitioning: fixed-size edge tiles with sentinel pad.
+
+    Returns ``(rows, cols, num_tiles)`` with both arrays padded to
+    ``num_tiles * tile_size``.  Padding entries point at the sentinel row
+    ``n_pad`` (callers allocate ``n_pad + 1`` rows; the sentinel row of the
+    operand table must be zero, and the sentinel output row is discarded).
+    """
+    rows, cols = edge_list(g)
+    sentinel = g.n if n_pad is None else n_pad
+    e = rows.shape[0]
+    num_tiles = max((e + tile_size - 1) // tile_size, 1)
+    padded = num_tiles * tile_size
+    rows_p = np.full(padded, sentinel, np.int32)
+    cols_p = np.full(padded, sentinel, np.int32)
+    rows_p[:e] = rows
+    cols_p[:e] = cols
+    return rows_p, cols_p, num_tiles
+
+
+def partition_edges_by_src_shard(
+    g: Graph, num_shards: int, tile_size: int = 1
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Bucket each shard's incoming edges by the *source* shard of ``u``.
+
+    For the pipelined (ring) exchange, device ``p`` processes, at ring step
+    ``w``, only the edges ``(v, u)`` whose source vertex ``u`` lives in the
+    shard arriving at step ``w``.  This routine builds, for every
+    (dst-shard ``p``, src-shard ``q``) pair, the padded edge bucket:
+
+    Returns ``(rows, cols, counts)``:
+      * ``rows``  int32 [P, P, max_bucket] — local dst row (within shard p)
+      * ``cols``  int32 [P, P, max_bucket] — local src row (within shard q)
+      * ``counts`` int64 [P, P] — true bucket sizes (before padding)
+
+    Padding entries use the sentinel local row ``shard_size`` (callers pad
+    tables with one extra zero row).  ``max_bucket`` is rounded up to
+    ``tile_size``.  Vertices are assigned to shards in contiguous blocks of
+    ``ceil(n/P)``; combine with :func:`relabel_random` for the random
+    partition of the paper.
+    """
+    P = num_shards
+    shard_size = (g.n + P - 1) // P
+    rows, cols = edge_list(g)
+    p_of = rows // shard_size
+    q_of = cols // shard_size
+    counts = np.zeros((P, P), np.int64)
+    np.add.at(counts, (p_of, q_of), 1)
+    max_bucket = int(counts.max(initial=0))
+    max_bucket = max(((max_bucket + tile_size - 1) // tile_size) * tile_size, tile_size)
+    out_rows = np.full((P, P, max_bucket), shard_size, np.int32)
+    out_cols = np.full((P, P, max_bucket), shard_size, np.int32)
+    key = p_of * P + q_of
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    group_start = np.zeros(P * P, np.int64)
+    np.cumsum(np.bincount(skey, minlength=P * P)[:-1], out=group_start[1:])
+    pos_in_group = np.arange(len(order)) - group_start[skey]
+    flat_rows = out_rows.reshape(P * P, max_bucket)
+    flat_cols = out_cols.reshape(P * P, max_bucket)
+    flat_rows[skey, pos_in_group] = (rows[order] - p_of[order] * shard_size).astype(np.int32)
+    flat_cols[skey, pos_in_group] = (cols[order] - q_of[order] * shard_size).astype(np.int32)
+    return out_rows, out_cols, counts

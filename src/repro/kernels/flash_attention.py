@@ -1,0 +1,165 @@
+"""Pallas TPU flash attention (online softmax), GQA/causal/sliding-window.
+
+Grid: ``(batch, q_heads, nQ, nK)`` with the KV dimension innermost.  The
+output block's index_map ignores the KV index, so the (TQ, D) output tile
+stays resident in VMEM across the KV sweep; running max/denominator/
+accumulator live in VMEM scratch (re-initialized at ``ik == 0``, finalized
+at ``ik == nK - 1``).  GQA maps query head ``h`` to KV head ``h // group``
+inside the K/V index_maps.
+
+Masked logits use a large negative constant (not -inf) so fully-masked
+blocks cannot poison the running max.  Fully-masked *rows* (possible with a
+sliding window smaller than the block) are guarded by a zero-denominator
+check at finalization.
+
+Perf note (hillclimb hook): causal/windowed grids still visit fully masked
+KV blocks; ``bounds`` prunes them by clamping the KV loop per Q block via
+``@pl.when`` (DMAs still issue; a lower-triangular grid remap is the next
+step if the collective/compute balance warrants it — see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level relevance: skip compute for fully masked blocks.
+    q_start = iq * block_q
+    k_start = ik * block_k
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + block_q - 1)
+    if window > 0:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window
+        )
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [TQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [TK, D]
+        v = v_ref[0, 0].astype(jnp.float32)  # [TK, D]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [TQ, TK]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        logits = jnp.where(mask, logits, _NEG)
+
+        m_prev = m_scr[...][:, :1]  # [TQ, 1]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)  # [TQ, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)  # [TQ, TK]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # [TQ, 1]
+        l_prev = l_scr[...][:, :1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, L, D]
+    k: jax.Array,  # [B, Hkv, L, D]
+    v: jax.Array,  # [B, Hkv, L, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert lq == lk, "Pallas path is for self-attention prefill/train (Lq == Lk)"
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, lk, block_q, block_k)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    nq = lq // block_q
+    nk = lk // block_k
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

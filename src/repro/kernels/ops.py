@@ -1,0 +1,326 @@
+"""Jit'd dispatch wrappers for the Pallas kernels, with XLA fallbacks.
+
+Every op has three implementations selected by ``impl``:
+
+* ``"xla"`` — pure-jnp path (scatter/segment/einsum); the default off-TPU
+  and the semantics oracle (it *is* ``ref.py`` modulo padding plumbing).
+* ``"pallas"`` — the Pallas kernel, compiled on TPU, ``interpret=True``
+  elsewhere (so CPU tests execute the actual kernel body).
+* ``"auto"`` — pallas on TPU backends, xla otherwise.
+
+Sparse ops consume a prebuilt :class:`SpmmPlan` (host-side preprocessing of
+the graph into padded edge lists / block patches) so that jitted code sees
+only static shapes.
+
+Padding conventions (hardware-true even in interpret mode):
+  * vertex dimension padded to a multiple of 128, ``n_pad > n`` strictly, so
+    row ``n`` is a writable zero sentinel;
+  * count-table column dimension padded to a multiple of 128; engine
+    re-masks pad rows/cols after each combine (kernels may write garbage
+    there).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .color_combine import color_combine_pallas
+from .flash_attention import flash_attention_pallas
+from .spmm_edgetile import spmm_block_pallas, spmm_gather_pallas
+
+__all__ = [
+    "on_tpu",
+    "pad_to",
+    "SpmmPlan",
+    "build_spmm_plan",
+    "spmm",
+    "CombineTables",
+    "build_combine_tables",
+    "color_combine",
+    "flash_attention",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if on_tpu() else "xla"
+    return impl
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# SpMM (neighbor sum)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmPlan:
+    """Static preprocessing of a graph for the neighbor-sum op.
+
+    ``kind``: 'edges' (XLA scatter / Pallas gather) or 'blocks'
+    (block-dense Pallas).  All index arrays are np/jnp int32, padded; the
+    sentinel row is ``n`` (< n_pad).
+    """
+
+    kind: str
+    n: int
+    n_pad: int
+    rows: Optional[jax.Array] = None  # [E_pad]
+    cols: Optional[jax.Array] = None  # [E_pad]
+    block_rows: Optional[jax.Array] = None  # [NB]
+    block_cols: Optional[jax.Array] = None  # [NB]
+    patches: Optional[jax.Array] = None  # [NB, VB, KB]
+    block_size: int = 128
+    #: rows the kernel actually writes (zero-degree rows are never visited,
+    #: so their Pallas output is uninitialized and must be masked off)
+    written_mask: Optional[jax.Array] = None  # bool [n_pad]
+
+
+def build_spmm_plan(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n: int,
+    *,
+    kind: str = "edges",
+    block_size: int = 128,
+    tile_size: int = 128,
+) -> SpmmPlan:
+    """Build a plan from a directed edge list (rows sorted nondecreasing).
+
+    ``tile_size`` pads the edge count (the paper's neighbor-list task size
+    ``s`` — every tile of ``tile_size`` edge slots is one uniform unit of
+    work).
+    """
+    n_pad = pad_to(n + 1, 128)
+    sentinel = n
+    e = len(rows)
+    if kind == "edges":
+        e_pad = max(pad_to(e, tile_size), tile_size)
+        r = np.full(e_pad, sentinel, np.int32)
+        c = np.full(e_pad, sentinel, np.int32)
+        r[:e] = rows
+        c[:e] = cols
+        written = np.zeros(n_pad, bool)
+        written[r] = True
+        return SpmmPlan(
+            "edges",
+            n,
+            n_pad,
+            rows=jnp.asarray(r),
+            cols=jnp.asarray(c),
+            written_mask=jnp.asarray(written),
+        )
+    if kind == "blocks":
+        vb = kb = block_size
+        br = rows // vb
+        bc = cols // kb
+        key = br.astype(np.int64) * (n_pad // kb + 1) + bc
+        uniq, inv = np.unique(key, return_inverse=True)
+        nb = len(uniq)
+        patches = np.zeros((nb, vb, kb), np.float32)
+        patches[inv, rows % vb, cols % kb] += 1.0
+        block_rows = (uniq // (n_pad // kb + 1)).astype(np.int32)
+        block_cols = (uniq % (n_pad // kb + 1)).astype(np.int32)
+        # append one sentinel (all-zero) patch so NB >= 1 and the final
+        # output block flushes; sentinel row block = n_pad // vb.
+        block_rows = np.concatenate([block_rows, [n_pad // vb]]).astype(np.int32)
+        block_cols = np.concatenate([block_cols, [0]]).astype(np.int32)
+        patches = np.concatenate([patches, np.zeros((1, vb, kb), np.float32)], 0)
+        written = np.zeros(n_pad, bool)
+        for rb in block_rows[:-1]:
+            written[rb * vb : (rb + 1) * vb] = True
+        return SpmmPlan(
+            "blocks",
+            n,
+            n_pad,
+            block_rows=jnp.asarray(block_rows),
+            block_cols=jnp.asarray(block_cols),
+            patches=jnp.asarray(patches),
+            block_size=block_size,
+            written_mask=jnp.asarray(written),
+        )
+    raise ValueError(f"unknown spmm plan kind {kind!r}")
+
+
+def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
+    """Neighbor sum ``M[v] = sum_{(v,u) in E} table[u]``.
+
+    ``table``: [n_pad, B_pad]; returns [n_pad, B_pad].  Rows >= plan.n of the
+    input must be zero; output rows >= plan.n are unspecified (engine masks).
+    """
+    impl = _resolve(impl)
+    n_pad, b = table.shape
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    if plan.kind == "edges":
+        if impl == "xla":
+            out = jax.ops.segment_sum(
+                table[plan.cols], plan.rows, num_segments=plan.n_pad
+            )
+            return out
+        out = spmm_gather_pallas(
+            plan.rows, plan.cols, table, num_rows=plan.n_pad - 1, interpret=not on_tpu()
+        )[: plan.n_pad]
+        return jnp.where(plan.written_mask[:, None], out, 0)
+    # blocks
+    if impl == "xla":
+        # dense-block einsum fallback (oracle for the block kernel)
+        kb = plan.block_size
+        gathered = table.reshape(n_pad // kb, kb, b)[plan.block_cols]  # [NB,KB,B]
+        prod = jnp.einsum("nvk,nkb->nvb", plan.patches, gathered)
+        out = jnp.zeros((n_pad // kb + 1, kb, b), table.dtype)
+        out = out.at[plan.block_rows].add(prod)
+        return out[: n_pad // kb].reshape(n_pad, b)
+    nb_rows = plan.n_pad // plan.block_size
+    out = spmm_block_pallas(
+        plan.block_rows,
+        plan.block_cols,
+        plan.patches,
+        table,
+        num_row_blocks=nb_rows,
+        interpret=not on_tpu(),
+    )[: plan.n_pad]
+    return jnp.where(plan.written_mask[:, None], out, 0)
+
+
+# ---------------------------------------------------------------------------
+# Color-set combine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineTables:
+    """Padded split tables for one partition node."""
+
+    idx1: jax.Array  # [S, J] int32 (xla layout)
+    idx2: jax.Array
+    idx1_t: jax.Array  # [J_pad, S_pad] int32 (pallas layout)
+    idx2_t: jax.Array
+    s: int  # true output width C(k, t)
+    j: int  # true split count C(t, t1)
+    s_pad: int
+
+
+def build_combine_tables(k: int, t1: int, t2: int) -> CombineTables:
+    from repro.core.colorsets import split_tables
+
+    idx1, idx2 = split_tables(k, t1, t2)
+    s, j = idx1.shape
+    s_pad = pad_to(s, 128)
+    j_pad = pad_to(j, 8)
+    idx1_t = np.zeros((j_pad, s_pad), np.int32)
+    idx2_t = np.zeros((j_pad, s_pad), np.int32)
+    idx1_t[:j, :s] = idx1.T
+    idx2_t[:j, :s] = idx2.T
+    return CombineTables(
+        idx1=jnp.asarray(idx1),
+        idx2=jnp.asarray(idx2),
+        idx1_t=jnp.asarray(idx1_t),
+        idx2_t=jnp.asarray(idx2_t),
+        s=s,
+        j=j,
+        s_pad=s_pad,
+    )
+
+
+def color_combine(
+    left: jax.Array,  # [n_pad, A_pad]
+    m: jax.Array,  # [n_pad, B_pad]
+    tables: CombineTables,
+    impl: str = "auto",
+    xla_chunk: int = 8,
+) -> jax.Array:
+    """``out[v, s] = sum_j left[v, idx1[s,j]] * m[v, idx2[s,j]]``.
+
+    Returns [n_pad, S_pad]; pad rows/cols are unspecified (engine masks).
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        n = left.shape[0]
+        s, j = tables.idx1.shape
+        # bound the [n, S, j_chunk] gather intermediate to ~2^27 elements
+        # (the paper's bounded-intermediate principle, §3.2.1 / Eq. 7)
+        budget = 1 << 27
+        if n * s * j <= budget:
+            out = ref.color_combine_ref(left, m, tables.idx1, tables.idx2)
+        else:
+            xla_chunk = max(1, min(xla_chunk, budget // max(n * s, 1)))
+
+            # j-chunked accumulation to bound the [n, S, j] intermediate
+            def body(jc, acc):
+                i1 = jax.lax.dynamic_slice(tables.idx1, (0, jc), (s, xla_chunk))
+                i2 = jax.lax.dynamic_slice(tables.idx2, (0, jc), (s, xla_chunk))
+                return acc + jnp.einsum("vsj,vsj->vs", left[:, i1], m[:, i2])
+
+            # iterate full chunks; handle the ragged tail separately
+            from repro.comm.ring import _pvary_like
+
+            acc = _pvary_like(jnp.zeros((n, s), left.dtype), left)
+            full = (j // xla_chunk) * xla_chunk
+            acc = jax.lax.fori_loop(
+                0,
+                full // xla_chunk,
+                lambda c, a: body(c * xla_chunk, a),
+                acc,
+            )
+            if full < j:
+                i1 = tables.idx1[:, full:]
+                i2 = tables.idx2[:, full:]
+                acc = acc + jnp.einsum("vsj,vsj->vs", left[:, i1], m[:, i2])
+            out = acc
+        s_out = tables.s_pad
+        if out.shape[1] < s_out:
+            out = jnp.pad(out, ((0, 0), (0, s_out - out.shape[1])))
+        return out
+    return color_combine_pallas(
+        left,
+        m,
+        tables.idx1_t,
+        tables.idx2_t,
+        num_splits=tables.j,
+        interpret=not on_tpu(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=not on_tpu(),
+    )

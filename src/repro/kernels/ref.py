@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel allclose tests and the default compute
+path on non-TPU backends (the dry-run and CPU tests never execute Pallas
+except in interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "spmm_ref",
+    "spmm_segment_ref",
+    "color_combine_ref",
+    "flash_attention_ref",
+]
+
+
+def spmm_ref(rows: jax.Array, cols: jax.Array, table: jax.Array, num_rows: int) -> jax.Array:
+    """Neighbor sum ``M[v] = sum_{(v,u)} table[u]`` via scatter-add.
+
+    ``rows``/``cols`` are the expanded directed edge list (padded entries
+    point at a zero sentinel row of ``table`` and at output row
+    ``num_rows``); output has ``num_rows + 1`` rows, the last being the
+    discarded sentinel row.
+    """
+    out = jnp.zeros((num_rows + 1, table.shape[1]), table.dtype)
+    return out.at[rows].add(table[cols])
+
+
+def spmm_segment_ref(
+    rows: jax.Array, cols: jax.Array, table: jax.Array, num_rows: int
+) -> jax.Array:
+    """Same contract as :func:`spmm_ref` via gather + segment_sum."""
+    gathered = table[cols]
+    return jax.ops.segment_sum(gathered, rows, num_segments=num_rows + 1)
+
+
+def color_combine_ref(
+    left: jax.Array, m: jax.Array, idx1: jax.Array, idx2: jax.Array
+) -> jax.Array:
+    """``out[v, s] = sum_j left[v, idx1[s, j]] * m[v, idx2[s, j]]``.
+
+    ``idx1``/``idx2``: int32 [S, J] split tables (see core.colorsets).
+    Output: [n, S] in ``left``'s dtype.
+    """
+    # [n, S, J] intermediates; fine for oracle use at test scale.
+    lg = left[:, idx1]  # [n, S, J]
+    mg = m[:, idx2]  # [n, S, J]
+    return jnp.einsum("vsj,vsj->vs", lg, mg)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Plain softmax attention oracle.
+
+    Shapes: q [B, Hq, Lq, D], k/v [B, Hkv, Lk, D]; GQA by head repetition.
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (sliding-window/local attention).  Query positions are aligned to the
+    *end* of the key sequence (Lq == Lk for training; Lq < Lk for decode).
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    lk = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that mask out everything produce NaN from softmax; zero them.
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v).astype(q.dtype)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for the neighbor sum ``M = A @ C`` (SpMM).
+
+This is the second hotspot of the color-coding DP: for every directed edge
+``(v, u)``, ``M[v, :] += C[u, :]``.  Two TPU-native realizations, both
+embodying the paper's *neighbor-list partitioning* (§3.3) — bounded,
+uniform-size tasks independent of degree skew:
+
+``spmm_block_pallas``
+    Block-dense SpMM.  The adjacency is tiled into dense 128x128 0/1
+    patches over (dst-block, src-block); only nonzero patches are stored
+    (coordinates ``block_rows``/``block_cols``, sorted by dst block).  Each
+    grid step issues one MXU matmul ``patch @ C[src_block]`` and accumulates
+    into the resident output block.  A max-degree "supernode" row simply
+    owns many patches — every task is exactly one 128x128 matmul, the
+    MXU-aligned analogue of the paper's bounded task size ``s``.
+    Output-block revisits are consecutive (sorted coordinates), which Pallas
+    supports with read-modify-write + first-visit init.
+
+``spmm_gather_pallas``
+    Scalar-prefetch row-gather (megablox-style): one directed edge per grid
+    step; the BlockSpec index_map reads the edge endpoints from prefetched
+    scalar arrays, DMA-ing row ``C[u]`` in and accumulating into resident
+    output row ``v`` (edges sorted by ``v`` => consecutive revisits).  Fully
+    general sparsity; DMA granularity is one table row (>= 512B for t >= 2
+    at k >= 10), documented as the fallback for graphs too sparse for
+    profitable 128x128 patches.
+
+Preprocessing helpers that build the patch/edge arrays live in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["spmm_block_pallas", "spmm_gather_pallas"]
+
+
+# ---------------------------------------------------------------------------
+# Block-dense SpMM (MXU path)
+# ---------------------------------------------------------------------------
+
+
+def _block_kernel(block_rows_ref, block_cols_ref, patch_ref, table_ref, out_ref):
+    nb = pl.program_id(0)
+    row = block_rows_ref[nb]
+    prev = block_rows_ref[jnp.maximum(nb - 1, 0)]
+    first = jnp.logical_or(nb == 0, row != prev)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    patch = patch_ref[0]  # [VB, KB]
+    ctab = table_ref[...]  # [KB, B]
+    out_ref[...] += jnp.dot(
+        patch, ctab.astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_row_blocks", "interpret"))
+def spmm_block_pallas(
+    block_rows: jax.Array,  # [NB] int32, sorted; sentinel = num_row_blocks
+    block_cols: jax.Array,  # [NB] int32; sentinel patches point at block 0
+    patches: jax.Array,  # [NB, VB, KB] f32 0/1 (sentinel patches all-zero)
+    table: jax.Array,  # [n_pad, B]  (n_pad % KB == 0, B % 128 == 0)
+    *,
+    num_row_blocks: int,  # output row blocks EXCLUDING the sentinel block
+    interpret: bool = False,
+) -> jax.Array:
+    nb, vb, kb = patches.shape
+    n_pad, b = table.shape
+    assert n_pad % kb == 0 and b % 128 == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, vb, kb), lambda i, rows, cols: (i, 0, 0)),
+            pl.BlockSpec((kb, b), lambda i, rows, cols: (cols[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((vb, b), lambda i, rows, cols: (rows[i], 0)),
+    )
+    out = pl.pallas_call(
+        _block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(((num_row_blocks + 1) * vb, b), table.dtype),
+        interpret=interpret,
+    )(block_rows, block_cols, patches, table)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch row-gather SpMM (general-sparsity fallback)
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(rows_ref, cols_ref, table_row_ref, out_ref):
+    e = pl.program_id(0)
+    row = rows_ref[e]
+    prev = rows_ref[jnp.maximum(e - 1, 0)]
+    first = jnp.logical_or(e == 0, row != prev)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "interpret"))
+def spmm_gather_pallas(
+    rows: jax.Array,  # [E] int32 sorted by dst; sentinel = num_rows
+    cols: jax.Array,  # [E] int32; sentinel points at the zero row n_pad-1
+    table: jax.Array,  # [n_pad, B]
+    *,
+    num_rows: int,
+    interpret: bool = False,
+) -> jax.Array:
+    e = rows.shape[0]
+    n_pad, b = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(e,),
+        in_specs=[pl.BlockSpec((1, b), lambda i, rows, cols: (cols[i], 0))],
+        out_specs=pl.BlockSpec((1, b), lambda i, rows, cols: (rows[i], 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows + 1, b), table.dtype),
+        interpret=interpret,
+    )(rows, cols, table)

@@ -1,0 +1,64 @@
+"""Subgraph-counting launcher: the paper's workload end to end.
+
+``python -m repro.launch.count --config bench-small --mode adaptive``
+
+Synthesizes the configured RMAT graph, builds the distributed plan over the
+locally available devices (or 1), runs N coloring iterations through the
+selected communication mode and prints the (eps, delta) estimate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import COUNTING_CONFIGS
+from repro.core import relabel_random, rmat
+from repro.core.distributed import build_distributed_plan, make_count_fn, shard_coloring
+from repro.core.estimator import median_of_means
+from repro.core.templates import template
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="bench-small", choices=sorted(COUNTING_CONFIGS))
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "alltoall", "pipeline", "adaptive", "ring"])
+    ap.add_argument("--iters", type=int, default=16)
+    ap.add_argument("--group-factor", type=int, default=1)
+    args = ap.parse_args()
+
+    ccfg = COUNTING_CONFIGS[args.config]
+    shards = min(ccfg.num_shards, jax.device_count())
+    mesh = jax.make_mesh((shards,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = template(ccfg.template)
+    print(f"synthesizing RMAT: V={ccfg.num_vertices} E={ccfg.num_edges} "
+          f"skew={ccfg.skew}")
+    g = relabel_random(
+        rmat(ccfg.num_vertices, ccfg.num_edges, skew=ccfg.skew, seed=0), seed=1
+    )
+    plan = build_distributed_plan(g, tree, shards)
+    mode = args.mode or ccfg.mode
+    f = make_count_fn(plan, mesh, mode=mode, group_factor=args.group_factor)
+
+    rng = np.random.default_rng(0)
+    cols = np.stack([
+        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))
+        for _ in range(args.iters)
+    ])
+    t0 = time.perf_counter()
+    counts = np.asarray(f(jnp.asarray(cols)))
+    dt = time.perf_counter() - t0
+    ests = counts * plan.scale
+    print(f"mode={mode} shards={shards}: {args.iters} colorings in {dt:.2f}s")
+    print(f"estimate (median-of-means): {median_of_means(ests, 4):.6g}")
+    print(f"estimate (mean)           : {ests.mean():.6g}  RSD {ests.std()/max(ests.mean(),1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    main()

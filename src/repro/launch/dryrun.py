@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The first two lines above MUST precede any other import (jax locks the
+device count at first init).  For each cell this lowers the jitted
+train_step / prefill / decode function against ShapeDtypeStruct inputs with
+production shardings, compiles it, and records:
+
+  * ``compiled.memory_analysis()``  (bytes per device — proves it fits)
+  * ``compiled.cost_analysis()``    (per-device FLOPs / bytes for §Roofline)
+  * collective ops parsed from the post-SPMD HLO (bytes for the
+    collective roofline term)
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+  python -m repro.launch.dryrun --counting twitter-u12-2 [--multi-pod]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, COUNTING_CONFIGS, get_arch  # noqa: E402
+from repro.configs.base import SHAPES, ShardingConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+FSDP_THRESHOLD = 2e9  # params above this get ZeRO-3 weight sharding
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved, by collective kind (ring-algorithm model)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        size = _shape_bytes(dtype, dims)
+        # group size from the first replica group on this line
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start() : line_end if line_end > 0 else m.end() + 512]
+        gm = _GROUPS_RE.search(line)
+        n = len(gm.group(1).split(",")) if gm else 2
+        if kind == "all-gather":
+            moved = size * (n - 1) / max(n, 1)  # result size x (n-1)/n
+        elif kind == "all-reduce":
+            moved = 2 * size * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            moved = size * (n - 1)  # result is the shard
+        elif kind == "all-to-all":
+            moved = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            moved = size
+        out[kind] += moved
+        counts[kind] += 1
+    out["ops"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def sharding_for(arch_name: str, shape_name: str, multi_pod: bool) -> ShardingConfig:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp_size = (2 * 16 if multi_pod else 16)
+    if shape.global_batch < dp_size:
+        dp_axes = ()  # long_500k b=1: no batch sharding
+    return ShardingConfig(
+        batch_axes=dp_axes,
+        fsdp=cfg.params_count() >= FSDP_THRESHOLD,
+        remat="full" if shape.kind == "train" else "none",
+        # sequence parallelism: shard scan-carry activations over the model
+        # axis during training (remat carries dominate HBM otherwise)
+        seq_axis="model" if shape.kind == "train" else None,
+        # hillclimb knobs (env overrides, see EXPERIMENTS.md §Perf)
+        sp_dim=int(os.environ.get("DRYRUN_SP_DIM", "1")),
+        moe_pipeline=os.environ.get("DRYRUN_MOE_PIPELINE", "") == "1",
+        attn_chunk=int(os.environ.get("DRYRUN_ATTN_CHUNK", "1024")),
+    )
+
+
+def skip_reason(arch_name: str, shape_name: str):
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return "long_500k skipped: pure full-attention arch (see DESIGN.md §5)"
+    if shape.kind == "decode" and cfg.family == "audio" and shape_name == "long_500k":
+        return "long_500k skipped: enc-dec audio arch"
+    return None
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    depth_groups: int = 0,  # probe: override depth to N pattern periods
+    unroll: bool = False,
+):
+    """Returns (lowered, mesh, meta) for one cell."""
+    import dataclasses as _dc
+
+    from repro.models import build_model
+    from repro.train import AdamWConfig, TrainConfig, make_train_step
+
+    cfg = get_arch(arch_name)
+    if depth_groups:
+        cfg = _dc.replace(
+            cfg, num_layers=depth_groups * len(cfg.block_pattern)
+        )
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = sharding_for(arch_name, shape_name, multi_pod)
+    model = build_model(cfg, sh, mesh, unroll=unroll)
+    params_shapes = jax.eval_shape(model.init_fn, jax.random.key(0))
+    pspecs = model.param_specs(params_shapes)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    structs, in_specs = model.input_specs(shape)
+    in_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    if shape.kind == "train":
+        from repro.train.optimizer import init_opt_state, opt_state_pspecs
+
+        tcfg = TrainConfig(
+            opt=AdamWConfig(),
+            microbatches=int(os.environ.get("DRYRUN_MICROBATCHES", "1")),
+        )
+        step_raw, _ = make_train_step(model, tcfg, jit=False)
+        opt_shapes = jax.eval_shape(init_opt_state, params_shapes)
+        data_size = 16
+        ospecs = opt_state_pspecs(
+            pspecs, params_shapes, zero1=sh.zero1, data_size=data_size
+        )
+        oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
+        fn = jax.jit(
+            step_raw,
+            in_shardings=(pshard, oshard, in_shard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = fn.lower(params_shapes, opt_shapes, structs)
+    elif shape.kind == "prefill":
+        fn = jax.jit(model.prefill_fn, in_shardings=(pshard, in_shard))
+        with mesh:
+            lowered = fn.lower(params_shapes, structs)
+    else:  # decode
+        fn = jax.jit(model.decode_fn, in_shardings=(pshard, in_shard))
+        with mesh:
+            lowered = fn.lower(params_shapes, structs)
+    meta = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "params": cfg.params_count(),
+        "active_params": cfg.active_params_count(),
+        "fsdp": sh.fsdp,
+        "global_batch": shape.global_batch,
+        "seq_len": shape.seq_len,
+    }
+    return lowered, mesh, meta
+
+
+def _measure(lowered) -> dict:
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "collectives": coll,
+    }
+
+
+def _corrected(real: dict, p1: dict, p2: dict, n_full: int) -> dict:
+    """XLA's cost analysis counts a scan body ONCE regardless of trip count.
+
+    Unrolled probes at depths 1 and 2 pattern-periods give the true
+    per-group cost (body = p2 - p1); the real cell already counts the body
+    once, so the correction adds (n_full - 1) bodies to flops/bytes and to
+    each collective class.
+    """
+    extra = max(n_full - 1, 0)
+    out = {"cost": {}, "collectives": {}}
+    for k in ("flops", "bytes_accessed", "transcendentals"):
+        body = max(p2["cost"][k] - p1["cost"][k], 0.0)
+        out["cost"][k] = real["cost"][k] + extra * body
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        body = max(p2["collectives"][k] - p1["collectives"][k], 0.0)
+        out["collectives"][k] = real["collectives"][k] + extra * body
+    out["collectives"]["ops"] = real["collectives"]["ops"]
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
+             probes: bool = True):
+    reason = skip_reason(arch_name, shape_name)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if reason:
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+               "status": "skipped", "reason": reason}
+        _emit(rec, out_dir)
+        return rec
+    t0 = time.time()
+    try:
+        from repro.models.transformer import layer_plan
+
+        lowered, mesh, meta = lower_cell(arch_name, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        real = _measure(lowered)
+        t_compile = time.time() - t0 - t_lower
+        cfg = get_arch(arch_name)
+        n_full = layer_plan(cfg)[0]
+        rec = dict(meta, status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), **real)
+        rec["cost_raw"] = dict(real["cost"])
+        if probes and n_full > 1:
+            p1, _, _ = lower_cell(arch_name, shape_name, multi_pod,
+                                  depth_groups=1, unroll=True)
+            p2, _, _ = lower_cell(arch_name, shape_name, multi_pod,
+                                  depth_groups=2, unroll=True)
+            m1, m2 = _measure(p1), _measure(p2)
+            corr = _corrected(real, m1, m2, n_full)
+            rec["cost"] = corr["cost"]
+            rec["collectives"] = corr["collectives"]
+            rec["probe"] = {"n_full": n_full,
+                            "body_flops": m2["cost"]["flops"] - m1["cost"]["flops"]}
+            rec["probe_s"] = round(time.time() - t0 - t_lower - t_compile, 1)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec = {
+            "arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    _emit(rec, out_dir)
+    return rec
+
+
+def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
+    """Dry-run the distributed counting engine at paper-scale shapes."""
+    from repro.core.distributed import abstract_plan, make_count_fn
+    from repro.core.templates import template
+
+    ccfg = COUNTING_CONFIGS[name]
+    mode = mode or ccfg.mode
+    chips = 512 if multi_pod else 256
+    if ccfg.mesh_kind == "flat":
+        # graph over ALL chips; O(1)-HLO relay ring (beyond-paper mode)
+        mesh = jax.make_mesh(
+            (chips,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+        num_shards = chips
+        iter_axis = None
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        num_shards = ccfg.num_shards
+        iter_axis = ("pod", "model") if multi_pod else "model"
+    mesh_tag = ("flat" if ccfg.mesh_kind == "flat" else "") + (
+        "2x16x16" if multi_pod else "16x16"
+    )
+    t0 = time.time()
+    try:
+        plan = abstract_plan(
+            ccfg.num_vertices,
+            ccfg.num_edges,
+            template(ccfg.template),
+            num_shards,
+            compact=mode != "ring",
+        )
+        fn, structs, in_shard = make_count_fn(
+            plan, mesh,
+            mode=mode,
+            iter_axis=iter_axis,
+            group_factor=ccfg.group_factor,
+            return_raw=True,
+        )
+        with mesh:
+            lowered = fn.lower(*structs)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text())
+        rec = {
+            "arch": f"counting:{name}", "shape": ccfg.template, "mesh": mesh_tag,
+            "mode": mode, "status": "ok",
+            "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+            },
+            "cost": {
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+            },
+            "collectives": coll,
+        }
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": f"counting:{name}", "mesh": mesh_tag, "mode": mode,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    _emit(rec, out_dir)
+    return rec
+
+
+def _emit(rec, out_dir):
+    line = json.dumps(rec)
+    print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{rec['arch'].replace(':', '_')}_{rec.get('shape', 'x')}_{rec['mesh']}"
+        if rec.get("mode"):
+            tag += f"_{rec['mode']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            f.write(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--counting")
+    ap.add_argument("--counting-mode")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.counting:
+        run_counting_cell(args.counting, args.multi_pod, args.out, args.counting_mode)
+        return
+    if args.all:
+        ok = err = skip = 0
+        for arch in sorted(ARCHS):
+            for shape in SHAPES:
+                rec = run_cell(arch, shape, args.multi_pod, args.out)
+                s = rec["status"]
+                ok += s == "ok"
+                err += s == "error"
+                skip += s == "skipped"
+        print(f"# dry-run summary: {ok} ok, {skip} skipped, {err} errors", flush=True)
+        raise SystemExit(1 if err else 0)
+    run_cell(args.arch, args.shape, args.multi_pod, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [options]``.
+
+Local run (CPU container / small meshes): trains the reduced or published
+config with the fault-tolerant loop (checkpoint/restart, preemption hook).
+On a real multi-host pod this same entry point runs under the usual
+``jax.distributed.initialize()`` bootstrap (one process per host), with the
+production mesh from ``repro.launch.mesh``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShardingConfig
+from repro.models import build_model
+from repro.train import AdamWConfig, TrainConfig, train
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--full", action="store_true", help="published config")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--data", type=int, default=1, help="local mesh data axis")
+    ap.add_argument("--model", type=int, default=1, help="local mesh model axis")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() first (multi-host)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        sharding = ShardingConfig(
+            batch_axes=("pod", "data") if args.multi_pod else ("data",),
+            fsdp=cfg.params_count() >= 2e9,
+            seq_axis="model",
+        )
+    elif args.data * args.model > 1:
+        mesh = make_local_mesh(args.data, args.model)
+        sharding = ShardingConfig(batch_axes=("data",))
+    else:
+        mesh, sharding = None, None
+
+    model = build_model(cfg, sharding, mesh)
+    tcfg = TrainConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        opt=AdamWConfig(total_steps=args.steps),
+        checkpoint_dir=args.ckpt_dir,
+    )
+    train(model, tcfg, mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: generic transformer assembler covering all assigned families."""
+
+from .factory import Model, build_model, chunked_ce_loss, param_pspecs  # noqa: F401
+from .transformer import forward, init_caches, init_params, layer_plan  # noqa: F401

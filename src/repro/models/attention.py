@@ -1,0 +1,273 @@
+"""Attention blocks: GQA self-attention (full / sliding-window / local),
+cross-attention, chunked (flash-style) XLA path, and KV-cache decode.
+
+The chunked path is the memory-sane default for 32k+ prefill on any backend
+(double lax.scan with online softmax — O(q_chunk * kv_chunk) live logits);
+``repro.kernels.flash_attention`` is the Pallas TPU equivalent, selected via
+``impl``.
+
+GQA is computed with an explicit group dimension (no KV head repetition):
+q reshaped to [B, Hkv, G, L, D] against k/v [B, Hkv, L, D].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .layers import Initializer, dense_init, rope
+
+__all__ = [
+    "attn_init",
+    "attention_block",
+    "chunked_attention",
+    "decode_attention",
+    "init_kv_cache",
+]
+
+_NEG = -1e30
+
+
+def attn_init(init: Initializer, cfg, *, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    return {
+        "wq": dense_init(init, d, h * hd, bias=cfg.attn_bias),
+        "wk": dense_init(init, d, kv * hd, bias=cfg.attn_bias),
+        "wv": dense_init(init, d, kv * hd, bias=cfg.attn_bias),
+        "wo": dense_init(init, h * hd, d),
+    }
+
+
+def _project(p, x, heads, hd, dtype):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    b, l, _ = y.shape
+    return y.reshape(b, l, heads, hd).transpose(0, 2, 1, 3)  # [B, H, L, D]
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, H, Lq, D]
+    k: jax.Array,  # [B, Hkv, Lk, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    constrain=lambda a: a,  # sharding anchor for the 5-D carry tensors
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure XLA (scan over chunks)."""
+    b, h, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    lq_real, lk_real = lq, lk
+    q_chunk = min(q_chunk, lq)
+    kv_chunk = min(kv_chunk, lk)
+    # pad ragged lengths (e.g. whisper's 1500-frame encoder context); padded
+    # keys are masked out below, padded query rows are sliced off
+    pad_q = (-lq) % q_chunk
+    pad_k = (-lk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        lq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        lk += pad_k
+    g = h // hkv
+    scale = d ** -0.5
+    nq, nk = lq // q_chunk, lk // kv_chunk
+    offset = lk_real - lq_real  # queries aligned to the end of the real keys
+
+    qg = q.reshape(b, hkv, g, lq, d)
+    qs = qg.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, iq_qc):
+        iq, qc = iq_qc  # qc: [b, hkv, g, q_chunk, d]
+        q32 = qc.astype(jnp.float32) * scale
+
+        # flash-attention semantics: recompute logits/probs in the backward
+        # pass instead of saving a [.., q_chunk, kv_chunk] tensor per scan
+        # step (without this the bwd residuals are O(L^2) again)
+        @jax.checkpoint
+        def kv_step(carry, ik_kc):
+            acc, m, l = carry
+            ik, kc, vc = ik_kc
+            logits = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", q32, kc.astype(jnp.float32)
+            )  # [b,hkv,g,qc,kc]
+            qpos = offset + iq * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = kpos < lk_real  # padded keys never attended
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            logits = jnp.where(mask[None, None, None], logits, _NEG)
+            m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+            p = jnp.exp(logits - m_new)
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = constrain(jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32))
+        m0 = constrain(jnp.full((b, hkv, g, q_chunk, 1), _NEG, jnp.float32))
+        l0 = constrain(jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nk), ks, vs)
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / l).astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # out: [nq, b, hkv, g, q_chunk, d] -> [b, h, lq, d]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, lq, d)
+    return out[:, :, :lq_real]
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, 1, D]
+    k_cache: jax.Array,  # [B, Hkv, S, D]
+    v_cache: jax.Array,
+    slot_pos: jax.Array,  # [S] absolute position stored in each slot (-1 empty)
+    pos: jax.Array,  # scalar: index of the current token
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, h, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    mask = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        mask &= slot_pos > pos - window
+    logits = jnp.where(mask[None, None, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def init_kv_cache(batch: int, kv_heads: int, length: int, head_dim: int, dtype=jnp.bfloat16):
+    """Circular KV cache; ``slot_pos`` tracks the absolute position held by
+    each slot (windowed archs wrap: slot = pos % length)."""
+    return {
+        "k": jnp.zeros((batch, kv_heads, length, head_dim), dtype),
+        "v": jnp.zeros((batch, kv_heads, length, head_dim), dtype),
+        "slot_pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def attention_block(
+    p,
+    x: jax.Array,  # [B, L, D_model]
+    cfg,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    context: Optional[jax.Array] = None,  # cross-attention context [B, Lc, D]
+    cache: Optional[dict] = None,  # decode KV cache
+    pos: Optional[jax.Array] = None,  # decode position (scalar)
+    positions: Optional[jax.Array] = None,  # rope positions for q [L]
+    impl: str = "xla",
+    dtype=jnp.bfloat16,
+    build_cache_len: Optional[int] = None,  # prefill: build a cache this long
+    shard=lambda a, kind: a,  # sharding anchors (factory._act_shard_fn)
+) -> Tuple[jax.Array, Optional[dict]]:
+    """One attention mix (no norm/residual — the transformer block owns those).
+
+    Returns (output [B, L, D_model], updated cache or None).
+    """
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    b, l, _ = x.shape
+
+    q = _project(p["wq"], x, h, hd, dtype)
+    kv_src = context if context is not None else x
+    k = _project(p["wk"], kv_src, kv, hd, dtype)
+    v = _project(p["wv"], kv_src, kv, hd, dtype)
+    if (
+        getattr(shard, "attn_repeat_kv", False)
+        and context is None
+        and cache is None
+        and kv != h
+    ):
+        # repeat KV to the q-head count so the head dim shards over the
+        # model axis (memory cost is per-chunk; partitioner-thrash cost of
+        # NOT doing it is replicated [b,h,qc,kc] logits)
+        k = jnp.repeat(k, h // kv, axis=1)
+        v = jnp.repeat(v, h // kv, axis=1)
+    q = shard(q, "q4")
+    if context is None and cache is None:
+        k = shard(k, "kv4" if k.shape[1] != h else "q4")
+        v = shard(v, "kv4" if v.shape[1] != h else "q4")
+
+    is_cross = context is not None
+    if not is_cross:
+        if positions is None:
+            positions = jnp.arange(l) if pos is None else jnp.full((l,), pos)
+        q = rope(q, positions, cfg.rope_theta)
+        # K rope is applied at *write* position (absolute), so circular
+        # caches stay correct after wrap-around.
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not is_cross:
+        # decode: write the new K/V at slot (pos % S), attend over the cache
+        s_buf = cache["k"].shape[2]
+        slot = pos % s_buf
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0)
+        )
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None].astype(jnp.int32), (slot,)
+        )
+        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+        out = decode_attention(q, k_cache, v_cache, slot_pos, pos, window=window)
+    elif is_cross:
+        out = chunked_attention(q, k, v, causal=False, window=0)
+    else:
+        if impl == "pallas" and q.shape[2] == k.shape[2]:
+            out = kops.flash_attention(q, k, v, causal=causal, window=window, impl="pallas")
+        else:
+            ac = getattr(shard, "attn_chunk", 1024)
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window,
+                q_chunk=ac, kv_chunk=ac,
+                constrain=lambda a: shard(a, "attn5"),
+            )
+        if build_cache_len is not None:
+            s_buf = build_cache_len
+            keep = min(l, s_buf)
+            cache_dtype = jnp.bfloat16
+            k_buf = jnp.zeros((b, kv, s_buf, hd), cache_dtype)
+            v_buf = jnp.zeros((b, kv, s_buf, hd), cache_dtype)
+            # store the last `keep` positions (windowed caches may be shorter
+            # than the prompt); slots are absolute-position % s_buf
+            k_tail = k[:, :, l - keep :].astype(cache_dtype)
+            v_tail = v[:, :, l - keep :].astype(cache_dtype)
+            abs_pos = jnp.arange(l - keep, l)
+            slots = abs_pos % s_buf
+            k_buf = k_buf.at[:, :, slots].set(k_tail)
+            v_buf = v_buf.at[:, :, slots].set(v_tail)
+            slot_pos = jnp.full((s_buf,), -1, jnp.int32).at[slots].set(abs_pos)
+            new_cache = {"k": k_buf, "v": v_buf, "slot_pos": slot_pos}
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, h * hd)
+    out = out @ p["wo"]["w"].astype(dtype)
+    return out, new_cache

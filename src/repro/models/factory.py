@@ -1,0 +1,440 @@
+"""Model factory: ArchConfig -> callable model + sharding specs + input specs.
+
+Everything the launcher needs for one architecture:
+
+* ``init_fn(key) -> params``             (pure; eval_shape-able)
+* ``loss_fn(params, batch) -> loss``     (train step objective)
+* ``prefill_fn(params, batch) -> (logits, caches)``
+* ``decode_fn(params, batch) -> (logits, caches)``  (one token)
+* ``param_pspecs(params) -> pytree of PartitionSpec``
+* ``input_specs(shape_spec) -> (ShapeDtypeStructs, PartitionSpecs)``
+
+Sharding rules (DESIGN.md §7): TP over ``model`` (attention heads / FFN
+hidden / vocab), DP over ``('pod','data')``, optional FSDP (ZeRO-3 weight
+sharding) over ``data``, EP for MoE ('ep' mode), KV caches sequence-sharded
+over ``model`` (kv-head counts don't divide the axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, ShardingConfig
+from .transformer import (
+    cache_buffer_len,
+    encode,
+    forward,
+    init_caches,
+    init_params,
+    layer_plan,
+)
+
+__all__ = ["Model", "build_model", "chunked_ce_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(
+    h: jax.Array,  # [B, S, D] final hidden (pre-logits)
+    head: jax.Array,  # [D, V_pad]
+    labels: jax.Array,  # [B, S] int32
+    *,
+    chunk: int = 512,
+    shard=lambda x, kind: x,
+    vocab_size: int = 0,  # true vocab; pad columns beyond it are masked
+) -> jax.Array:
+    """Cross-entropy with sequence-chunked logits (bounds the [B,c,V] temp)."""
+    b, s, d = h.shape
+    v_pad = head.shape[1]
+    pad_mask = None
+    if vocab_size and v_pad != vocab_size:
+        pad_mask = jnp.where(jnp.arange(v_pad) < vocab_size, 0.0, -1e30)
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+    hs = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    # recompute the [B, chunk, V] logits in the backward pass (they would
+    # otherwise be saved per scan step — the whole point of chunking)
+    @jax.checkpoint
+    def step(carry, xs):
+        hc, lc = xs
+        logits = shard(hc.astype(jnp.float32) @ head.astype(jnp.float32), "logits3")
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def param_pspecs(params, cfg: ArchConfig, sh: ShardingConfig):
+    """PartitionSpec pytree matching ``params`` (works on shape trees too)."""
+    mdl = sh.model_axis
+    fsdp = "data" if sh.fsdp else None
+
+    def rule(pathstr: str, ndim: int):
+        def pad(spec):
+            return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+        leaf = pathstr.rsplit("/", 1)[-1]
+        if leaf == "embed":
+            return pad([mdl, fsdp])
+        if leaf == "lm_head":
+            return pad([fsdp, mdl])
+        if leaf == "router":
+            return pad([fsdp, None])
+        if "ffn/" in pathstr and leaf in ("w_gate", "w_up", "w_down") and cfg.num_experts:
+            ep = cfg.moe_sharding == "ep"
+            if leaf in ("w_gate", "w_up"):  # [E, D, F]
+                return pad([mdl, fsdp, None] if ep else [None, fsdp, mdl])
+            return pad([mdl, None, fsdp] if ep else [None, mdl, fsdp])  # [E, F, D]
+        if leaf in ("w_gate", "w_up"):  # dense MLP [D, F]
+            return pad([fsdp, mdl])
+        if leaf == "w_down":  # [F, D]
+            return pad([mdl, fsdp])
+        if "channel/wv" in pathstr:  # rwkv channel down-proj [F, D]
+            return pad([mdl, fsdp])
+        if pathstr.endswith("wo/w") or pathstr.endswith("w_out/w"):
+            return pad([mdl, fsdp])
+        if pathstr.endswith("/w") and any(
+            f"/{n}/" in pathstr for n in ("wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "lru_a", "lru_x")
+        ):
+            # [D_in, D_out]: TP on the output dim
+            return pad([fsdp, mdl])
+        if pathstr.endswith("/b"):
+            return pad([mdl])
+        if leaf == "conv_w":  # [4, D]
+            return pad([None, mdl])
+        if leaf in ("lambda_raw", "conv_b"):
+            return pad([mdl])
+        if leaf in ("w_lora_a", "w_lora_b"):
+            return pad([None, None])
+        # norms, mixes, gates, u_bonus: replicated
+        return P(*([None] * ndim))
+
+    def assign(path, leaf):
+        nd = len(leaf.shape)
+        return rule(_path_str(path), nd)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _act_shard_fn(cfg: ArchConfig, sh: ShardingConfig, mesh):
+    if mesh is None:
+        return lambda x, kind: x
+    dp = tuple(a for a in sh.batch_axes if a in mesh.axis_names)
+    mdl = sh.model_axis if sh.model_axis in mesh.axis_names else None
+    ep = cfg.moe_sharding == "ep"
+
+    # Sequence parallelism (Megatron-style): with ``seq_axis`` the residual
+    # stream (and hence every remat scan carry) shards its sequence dim over
+    # the model axis — the difference between 40 x 537MB and 40 x 34MB of
+    # carries on an 8B/4k train step (EXPERIMENTS.md §Perf).
+    seq = sh.seq_axis if sh.seq_axis in mesh.axis_names else None
+    mdl_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(mdl, 1)
+    q_div = mdl is not None and cfg.num_heads % mdl_size == 0
+    kv_div = mdl is not None and cfg.num_kv_heads % mdl_size == 0
+    act_spec = P(dp, seq, None) if sh.sp_dim == 1 else P(dp, None, seq)
+    specs = {
+        "act": act_spec,
+        "logits": P(dp, None, mdl),
+        "logits3": P(None, dp, mdl),  # chunked loss: [n?, B, c, V] -> (B,c,V)
+    }
+    # explicit head sharding through attention: without these anchors the
+    # SPMD partitioner reshards the [b,h,qc,kc] logits between scan steps
+    # ("involuntary full rematerialization" — 4 GiB replicated copies on the
+    # 90B cell).  KV heads are repeated to the q-head count in the block
+    # when they don't divide the axis (factory sets attn_repeat_kv).
+    if sh.attn_anchor and q_div:
+        specs["q4"] = P(dp, mdl, None, None)
+        specs["attn5"] = P(dp, mdl, None, None, None)
+    if sh.attn_anchor and (q_div or kv_div):
+        specs["kv4"] = P(dp, mdl, None, None)
+
+    def shard(x, kind):
+        spec = specs.get(kind)
+        if spec is None:
+            return x
+        spec = P(*list(spec)[: x.ndim])
+        return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, spec))
+
+    # MoE dispatch runs data-manual / model-auto (transformer._ffn_apply):
+    # the inner constraints may only mention the (auto) model axis.
+    inner_specs = {
+        "moe_buffer": P(mdl, None, None) if ep else P(),
+        "moe_hidden": P(mdl, None, None) if ep else P(None, None, mdl),
+    }
+
+    def moe_inner(x, kind):
+        spec = inner_specs.get(kind)
+        if spec is None:
+            return x
+        spec = P(*list(spec)[: x.ndim])
+        # raw PartitionSpec: resolved against the ambient (abstract) mesh —
+        # required inside the data-manual/model-auto shard_map region where
+        # a concrete NamedSharding on auto axes is rejected
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    shard.mesh = mesh
+    shard.dp_axes = dp
+    shard.model_axis = mdl
+    # repeat KV heads up to q heads when that's what makes them shardable
+    shard.attn_repeat_kv = sh.attn_anchor and q_div and not kv_div
+    shard.attn_chunk = sh.attn_chunk
+    shard.fsdp_axis = "data" if sh.fsdp else None
+    shard.moe_inner = moe_inner
+    shard.moe_pipeline = sh.moe_pipeline
+    shard.moe_group_factor = 1
+
+    def param_constraint(group_params, full_specs):
+        """Re-assert the (sliced) per-layer param sharding inside a scan
+        body: without it XLA may hoist the FSDP all-gather of the whole
+        stacked parameter array out of the loop (n_layers x the memory)."""
+
+        def fix(spec, leaf):
+            sub = P(*list(spec)[1:]) if len(spec) > len(leaf.shape) else spec
+            return jax.lax.with_sharding_constraint(
+                leaf, jax.sharding.NamedSharding(mesh, sub)
+            )
+
+        return jax.tree.map(lambda s_, l: fix(s_, l), full_specs, group_params)
+
+    shard.param_constraint = param_constraint
+    return shard
+
+
+def cache_pspecs(caches, cfg: ArchConfig, sh: ShardingConfig):
+    """KV caches: batch over DP, sequence over model; states: channel over model."""
+    mdl = sh.model_axis
+    dp = sh.batch_axes
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        leafname = ps.rsplit("/", 1)[-1]
+        has_group_dim = "groups/" in ps  # stacked leading layer dim
+
+        def pad(spec):
+            spec = list(spec)
+            if has_group_dim:
+                spec = [None] + spec
+            spec = spec[:nd] + [None] * (nd - len(spec))
+            return P(*spec)
+
+        if leafname in ("k", "v"):  # [B, Hkv, S, hd]
+            return pad([dp, None, mdl, None])
+        if leafname in ("xk", "xv"):
+            return pad([dp, None, None, None])
+        if leafname == "slot_pos":
+            return pad([None])
+        if leafname == "wkv":  # [B, H, dk, dv]
+            return pad([dp, None, None, mdl])
+        if leafname in ("x_prev_t", "x_prev_c", "h"):  # [B, D]
+            return pad([dp, mdl])
+        if leafname == "conv":  # [B, 3, D]
+            return pad([dp, None, mdl])
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    sharding: ShardingConfig
+    mesh: Optional[Any]
+    init_fn: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_caches_fn: Callable
+
+    def param_specs(self, params_or_shapes):
+        return param_pspecs(params_or_shapes, self.cfg, self.sharding)
+
+    def cache_specs(self, cache_shapes):
+        return cache_pspecs(cache_shapes, self.cfg, self.sharding)
+
+    # ---- dry-run input construction ------------------------------------
+    def input_specs(self, shape: ShapeSpec):
+        """ShapeDtypeStruct stand-ins + PartitionSpecs for one shape cell."""
+        cfg = self.cfg
+        dp = self.sharding.batch_axes
+        b, s = shape.global_batch, shape.seq_len
+        structs: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        ctx_len, ctx_needed = self._context_len()
+        if shape.kind == "train":
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            specs["tokens"] = P(dp, None)
+        elif shape.kind == "prefill":
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            specs["tokens"] = P(dp, None)
+        else:  # decode
+            structs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            specs["tokens"] = P(dp, None)
+            structs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+            specs["pos"] = P()
+            cache_shapes = jax.eval_shape(
+                lambda: init_caches(cfg, b, s, context_len=ctx_len)
+            )
+            structs["caches"] = cache_shapes
+            specs["caches"] = cache_pspecs(cache_shapes, cfg, self.sharding)
+        if ctx_needed and shape.kind != "decode":
+            structs["context"] = jax.ShapeDtypeStruct((b, ctx_len, cfg.d_model), jnp.bfloat16)
+            specs["context"] = P(dp, None, None)
+        return structs, specs
+
+    def _context_len(self) -> Tuple[int, bool]:
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return cfg.num_image_tokens, True
+        if cfg.family == "audio":
+            return cfg.encoder_context, True
+        return 0, False
+
+
+def build_model(
+    cfg: ArchConfig,
+    sharding: Optional[ShardingConfig] = None,
+    mesh=None,
+    *,
+    impl: str = "xla",
+    dtype=jnp.bfloat16,
+    unroll: bool = False,  # python-loop depth groups (dry-run flop probes)
+    cast_params: Optional[bool] = None,  # default: True iff mesh present
+) -> Model:
+    sh = sharding or ShardingConfig()
+    shard = _act_shard_fn(cfg, sh, mesh)
+    remat = sh.remat
+    cast_once = (mesh is not None) if cast_params is None else cast_params
+    if mesh is not None:
+        _shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+        shard.group_specs = param_pspecs(_shapes, cfg, sh).get("groups", {})
+
+    def init_fn(key):
+        return init_params(cfg, key)
+
+    def _context_of(batch):
+        ctx = batch.get("context")
+        if ctx is not None and cfg.family == "audio":
+            # stub frame embeddings -> encoder -> cross-attn context
+            return lambda params: encode(params, cfg, ctx, shard=shard, dtype=dtype)
+        if ctx is not None:
+            return lambda params: ctx.astype(dtype)
+        return lambda params: None
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        ctx = _context_of(batch)(params)
+        h, _, aux = forward(
+            params,
+            cfg,
+            tokens,
+            context=ctx,
+            mode="train",
+            shard=shard,
+            impl=impl,
+            remat=remat,
+            dtype=dtype,
+            return_hidden=True,
+            unroll=unroll,
+            cast_params=cast_once,
+        )
+        head = params.get("lm_head")
+        if head is None:
+            head = params["embed"].T
+        loss = chunked_ce_loss(
+            h[:, :-1], head, tokens[:, 1:], shard=shard, vocab_size=cfg.vocab_size
+        )
+        return loss + 0.01 * aux
+
+    def prefill_fn(params, batch):
+        tokens = batch["tokens"]
+        ctx = _context_of(batch)(params)
+        s_buf = cache_buffer_len(cfg, tokens.shape[1])
+        logits, caches, _ = forward(
+            params,
+            cfg,
+            tokens,
+            context=ctx,
+            mode="prefill",
+            shard=shard,
+            impl=impl,
+            remat="none",
+            dtype=dtype,
+            s_buf=s_buf,
+            unroll=unroll,
+            cast_params=cast_once,
+        )
+        return logits[:, -1], caches
+
+    def decode_fn(params, batch):
+        tokens = batch["tokens"]  # [B, 1]
+        pos = batch["pos"]
+        caches = batch["caches"]
+        logits, new_caches, _ = forward(
+            params,
+            cfg,
+            tokens,
+            mode="decode",
+            caches=caches,
+            pos=pos,
+            shard=shard,
+            impl=impl,
+            remat="none",
+            dtype=dtype,
+            unroll=unroll,
+            cast_params=cast_once,
+        )
+        return logits[:, -1], new_caches
+
+    def init_caches_fn(batch_size, seq_len, context_len=0):
+        return init_caches(cfg, batch_size, seq_len, context_len=context_len)
+
+    return Model(
+        cfg=cfg,
+        sharding=sh,
+        mesh=mesh,
+        init_fn=init_fn,
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        init_caches_fn=init_caches_fn,
+    )

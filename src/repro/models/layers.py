@@ -1,0 +1,109 @@
+"""Shared layer primitives: norms, RoPE, MLPs, init helpers.
+
+Pure-functional: params are plain pytrees of jnp arrays; every layer is
+``apply(params, x, ...)``.  Compute dtype is bf16 by default (params stay
+f32; casts happen at use sites), matching mixed-precision training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Initializer",
+    "rmsnorm",
+    "layernorm_params",
+    "rope",
+    "mlp_init",
+    "mlp_apply",
+    "dense_init",
+]
+
+
+class Initializer:
+    """Split-once key fountain for parameter init."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def take(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def normal(self, shape, scale: float = 0.02, dtype=jnp.float32) -> jax.Array:
+        return (jax.random.normal(self.take(), shape, jnp.float32) * scale).astype(dtype)
+
+    def zeros(self, shape, dtype=jnp.float32) -> jax.Array:
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape, dtype=jnp.float32) -> jax.Array:
+        return jnp.ones(shape, dtype)
+
+
+def dense_init(init: Initializer, d_in: int, d_out: int, *, bias: bool = False):
+    p = {"w": init.normal((d_in, d_out), scale=d_in ** -0.5)}
+    if bias:
+        p["b"] = init.zeros((d_out,))
+    return p
+
+
+def dense_apply(p, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_params(init: Initializer, d: int):
+    return {"scale": init.ones((d,))}
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """Rotary embeddings.  x: [..., L, D] (D even); positions: [L] or [..., L]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., L, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast cos/sin over leading dims of x
+    while cos.ndim < x.ndim:
+        cos, sin = cos[None], sin[None]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(init: Initializer, d: int, f: int, act: str):
+    if act == "swiglu":
+        return {
+            "w_gate": init.normal((d, f), scale=d ** -0.5),
+            "w_up": init.normal((d, f), scale=d ** -0.5),
+            "w_down": init.normal((f, d), scale=f ** -0.5),
+        }
+    return {
+        "w_up": init.normal((d, f), scale=d ** -0.5),
+        "w_down": init.normal((f, d), scale=f ** -0.5),
+    }
+
+
+def mlp_apply(p, x: jax.Array, act: str, dtype=jnp.bfloat16) -> jax.Array:
+    xb = x.astype(dtype)
+    if act == "swiglu":
+        g = xb @ p["w_gate"].astype(dtype)
+        u = xb @ p["w_up"].astype(dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(xb @ p["w_up"].astype(dtype))
+    return h @ p["w_down"].astype(dtype)

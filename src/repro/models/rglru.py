@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal mix: two input projections (one GeLU-gated), a short causal
+depthwise conv (width 4), then the Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(L) * r_t)     (data-dependent per-channel decay)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs as a ``jax.lax.associative_scan`` (O(log L)
+depth) for train/prefill and a single fused step for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Initializer, dense_init
+
+__all__ = ["rglru_init", "rglru_block", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def rglru_init(init: Initializer, cfg):
+    d = cfg.d_model
+    return {
+        "w_in": dense_init(init, d, d),
+        "w_gate": dense_init(init, d, d),
+        "conv_w": init.normal((4, d), 0.1),  # causal depthwise conv, width 4
+        "conv_b": init.zeros((d,)),
+        "lru_a": dense_init(init, d, d, bias=True),  # recurrence gate
+        "lru_x": dense_init(init, d, d, bias=True),  # input gate
+        "lambda_raw": init.normal((d,), 0.5),  # softplus -> decay magnitude
+        "w_out": dense_init(init, d, d),
+    }
+
+
+def init_rglru_state(batch: int, d_model: int):
+    return {
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_model), jnp.float32),  # last 3 inputs
+    }
+
+
+def _conv_causal(w, b, x, state_tail=None):
+    """Depthwise causal conv width 4.  x: [B, L, D]."""
+    b_, l, d = x.shape
+    if state_tail is None:
+        tail = jnp.zeros((b_, 3, d), x.dtype)
+    else:
+        tail = state_tail.astype(x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # [B, L+3, D]
+    out = sum(xp[:, i : i + l] * w[i][None, None] for i in range(4))
+    return out + b[None, None]
+
+
+def _lru_scan(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + bx_t via associative scan.  a/bx: [B, L, D]."""
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_s, b_s = jax.lax.associative_scan(op, (a, bx), axis=1)
+    if h0 is not None:
+        b_s = b_s + a_s * h0[:, None, :]
+    return b_s
+
+
+def rglru_block(p, x: jax.Array, cfg, *, state=None, dtype=jnp.bfloat16):
+    """Temporal mix over a sequence.  x: [B, L, D]; returns (out, new_state)."""
+    xb = x.astype(dtype)
+    gate = jax.nn.gelu(xb @ p["w_gate"]["w"].astype(dtype))
+    u_pre = xb @ p["w_in"]["w"].astype(dtype)  # pre-conv (the conv state)
+    u = _conv_causal(
+        p["conv_w"].astype(dtype),
+        p["conv_b"].astype(dtype),
+        u_pre,
+        None if state is None else state["conv"],
+    )
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["lru_a"]["w"].astype(jnp.float32) + p["lru_a"]["b"])
+    i = jax.nn.sigmoid(uf @ p["lru_x"]["w"].astype(jnp.float32) + p["lru_x"]["b"])
+    log_a = -_C * jax.nn.softplus(p["lambda_raw"].astype(jnp.float32))[None, None] * r
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    h0 = state["h"] if state is not None else None
+    h = _lru_scan(a, bx, h0)
+    out = (h.astype(dtype) * gate) @ p["w_out"]["w"].astype(dtype)
+    new_state = None
+    if state is not None:
+        new_state = {
+            "h": h[:, -1].astype(jnp.float32),
+            # keep the last 3 *pre-conv* inputs (robust to any L incl. decode)
+            "conv": jnp.concatenate(
+                [state["conv"], u_pre.astype(jnp.float32)], axis=1
+            )[:, -3:],
+        }
+    return out, new_state
+
+
+def rglru_decode(p, x_t: jax.Array, cfg, state, *, dtype=jnp.bfloat16):
+    out, new_state = rglru_block(p, x_t[:, None, :], cfg, state=state, dtype=dtype)
+    return out[:, 0], new_state

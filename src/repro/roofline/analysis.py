@@ -1,0 +1,154 @@
+"""Roofline analysis from dry-run records (TPU v5e constants).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled artifact:
+
+  compute    = per-device HLO FLOPs / peak_FLOPs
+  memory     = per-device HLO bytes accessed / HBM bandwidth
+  collective = per-device collective bytes / link bandwidth
+
+XLA:CPU's cost analysis is per-device (post-SPMD program), so no chip
+division is applied to the numerators.  The dominant term is the estimated
+step time; MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) measures how
+much of the compiled compute is "useful".
+
+Hardware constants (task spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI; inter-pod DCI modeled at 25 GB/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+__all__ = ["RooflineTerms", "analyze_record", "analyze_dir", "format_table"]
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (per-device collective throughput model)
+DCI_BW = 25e9
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float  # per device
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    temp_gib: float
+    fits: bool
+    note: str = ""
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / dominant term — 1.0 when compute-bound."""
+        return self.compute_s / self.step_s if self.step_s > 0 else 0.0
+
+
+def _model_flops(rec: dict) -> float:
+    """6*N*D per step (train: fwd+bwd); decode/prefill: 2*N*D forward only."""
+    n = rec.get("active_params", rec.get("params", 0))
+    if "global_batch" not in rec:  # counting cells: no token-based model
+        return 0.0
+    kind = rec.get("kind", "train")
+    if kind == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    tokens = rec["global_batch"]  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze_record(rec: dict, hbm_gib: float = 16.0) -> Optional[RooflineTerms]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll = rec.get("collectives", {})
+    multi_pod = "2x16x16" in rec.get("mesh", "")
+    coll_bytes = sum(
+        v for k, v in coll.items() if k != "ops" and isinstance(v, (int, float))
+    )
+    link_bw = DCI_BW if multi_pod else ICI_BW
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_bytes / link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = _model_flops(rec)
+    hlo_total = flops_dev * chips
+    temp = rec.get("memory", {}).get("temp_bytes", 0)
+    args = rec.get("memory", {}).get("argument_bytes", 0)
+    return RooflineTerms(
+        arch=rec["arch"],
+        shape=rec.get("shape", ""),
+        mesh=rec["mesh"],
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops=flops_dev,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        temp_gib=temp / 2**30,
+        fits=(temp + args) <= hbm_gib * 2**30,
+    )
+
+
+def analyze_dir(path: str) -> List[RooflineTerms]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        t = analyze_record(rec)
+        if t:
+            out.append(t)
+    return out
+
+
+def format_table(terms: List[RooflineTerms]) -> str:
+    hdr = (
+        f"{'arch':<26}{'shape':<13}{'mesh':<9}{'comp_s':>10}{'mem_s':>10}"
+        f"{'coll_s':>10}{'domin':>7}{'useful':>8}{'roofl%':>8}{'tempGiB':>9}{'fits':>6}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for t in terms:
+        lines.append(
+            f"{t.arch:<26}{t.shape:<13}{t.mesh:<9}{t.compute_s:>10.4f}"
+            f"{t.memory_s:>10.4f}{t.collective_s:>10.4f}{t.dominant[:5]:>7}"
+            f"{t.useful_ratio:>8.2f}{100 * t.roofline_fraction:>7.1f}%"
+            f"{t.temp_gib:>9.2f}{str(t.fits):>6}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir", nargs="?", default="results/dryrun")
+    args = ap.parse_args()
+    terms = analyze_dir(args.dir)
+    print(format_table(terms))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Serving substrate: prefill/decode engine with batched requests."""
+
+from .engine import ServeConfig, ServingEngine  # noqa: F401

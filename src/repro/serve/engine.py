@@ -1,0 +1,69 @@
+"""Minimal batched serving engine: prefill once, decode in lock-step.
+
+One jitted prefill function and one jitted decode step (the functions the
+decode_* dry-run cells lower).  Requests are batched to a fixed batch size;
+generation runs greedy or with temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.factory import Model
+
+__all__ = ["ServeConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 2
+    max_context: int = 128
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, cfg: ServeConfig, params=None):
+        self.model = model
+        self.cfg = cfg
+        self.params = params if params is not None else jax.jit(model.init_fn)(
+            jax.random.key(cfg.seed)
+        )
+        self._prefill = jax.jit(model.prefill_fn)
+        self._decode = jax.jit(model.decode_fn, donate_argnums=())
+
+    def generate(self, prompts: np.ndarray, context: Optional[np.ndarray] = None):
+        """prompts: int32 [B, L]; returns int32 [B, max_new_tokens]."""
+        b, l = prompts.shape
+        assert b == self.cfg.batch_size, (b, self.cfg.batch_size)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if context is not None:
+            batch["context"] = jnp.asarray(context)
+        logits, caches = self._prefill(self.params, batch)
+        out = []
+        key = jax.random.key(self.cfg.seed)
+        tok = self._sample(logits, key)
+        for t in range(self.cfg.max_new_tokens):
+            out.append(np.asarray(tok))
+            step_batch = {
+                "tokens": tok[:, None],
+                "pos": jnp.asarray(l + t, jnp.int32),
+                "caches": caches,
+            }
+            logits, caches = self._decode(self.params, step_batch)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature, axis=-1).astype(
+            jnp.int32
+        )

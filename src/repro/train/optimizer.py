@@ -1,0 +1,124 @@
+"""AdamW with ZeRO-sharded state, global-norm clipping, cosine schedule.
+
+Implemented directly (no external deps): optimizer state is a pytree
+mirroring params (m, v) plus a step counter.  Sharding: state inherits the
+param PartitionSpec; with ``zero1`` and a replicated-over-data param, the
+state's first shardable dim gets the data axis instead (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "cosine_schedule", "opt_state_pspecs", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    return cfg.lr_peak * warm * 0.5 * (1.0 + jnp.cos(math.pi * frac))
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        jax.tree.reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0
+        )
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+def opt_state_pspecs(
+    param_specs,
+    param_shapes=None,
+    *,
+    zero1: bool,
+    data_axis: str = "data",
+    data_size: int = 0,
+):
+    """State PartitionSpecs: inherit the param spec; with ``zero1`` the m/v
+    of a data-replicated param additionally shard their first free dim over
+    the data axis — only when that dim's size divides ``data_size``
+    (``param_shapes``/``data_size`` required for that check)."""
+
+    def used_axes(spec: P):
+        out = set()
+        for p in spec:
+            if p is None:
+                continue
+            out.update(p if isinstance(p, tuple) else (p,))
+        return out
+
+    def shard_state(spec: P, shape=None):
+        if not zero1 or shape is None or not data_size:
+            return spec
+        parts = list(spec) if spec else [None] * len(shape)
+        if data_axis in used_axes(spec):
+            return spec  # already sharded over data (fsdp)
+        for i, (p, d) in enumerate(zip(parts, shape)):
+            if p is None and d % data_size == 0 and d > 0:
+                parts[i] = data_axis
+                return P(*parts)
+        return spec
+
+    if param_shapes is not None:
+        mv = jax.tree.map(
+            lambda s, t: shard_state(s, t.shape), param_specs, param_shapes
+        )
+    else:
+        mv = jax.tree.map(shard_state, param_specs)
+    return {"m": mv, "v": mv, "step": P()}

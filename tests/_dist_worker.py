@@ -1,0 +1,282 @@
+"""Worker script for multi-device tests (run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+Prints one line per check: ``CHECK <name> PASS|FAIL <details>``.
+Exit code 0 iff all checks pass.
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FAILURES = []
+
+
+def check(name, ok, details=""):
+    print(f"CHECK {name} {'PASS' if ok else 'FAIL'} {details}")
+    if not ok:
+        FAILURES.append(name)
+
+
+def make_mesh(shape, names):
+    return jax.make_mesh(
+        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
+    )
+
+
+def test_ring_collectives():
+    from repro.comm import (
+        compressed_ring_reduce_scatter,
+        ring_allgather,
+        ring_allgather_overlap,
+        ring_reduce_scatter,
+    )
+
+    mesh = make_mesh((8,), ("x",))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 4, 16)).astype(np.float32)
+
+    # ring all-gather == lax.all_gather
+    f = jax.jit(
+        jax.shard_map(
+            lambda a: ring_allgather(a[0], "x"),
+            mesh=mesh,
+            in_specs=P("x"),
+            out_specs=P("x"),
+        )
+    )
+    got = np.asarray(f(x))  # [8(dev), 8, 4... wait shapes
+    want = np.broadcast_to(x[None], (8,) + x.shape).reshape(8 * 8, 4, 16)
+    check("ring_allgather", np.allclose(got.reshape(8 * 8, 4, 16), want))
+
+    # overlap consume: acc += chunk * (src+1) must equal sum_q (q+1)*x_q
+    def run(a):
+        def combine(acc, chunk, src):
+            return acc + chunk * (src + 1).astype(jnp.float32)
+
+        return ring_allgather_overlap(
+            a[0], "x", combine, jnp.zeros_like(a[0])
+        )[None]
+
+    f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    got = np.asarray(f(x))
+    want_each = sum((q + 1) * x[q] for q in range(8))
+    check(
+        "ring_allgather_overlap",
+        np.allclose(got, np.broadcast_to(want_each, (8, 4, 16)), atol=1e-5),
+    )
+
+    # ring reduce-scatter == psum then slice
+    xs = rng.standard_normal((8, 8, 4, 16)).astype(np.float32)  # [dev, chunk, ...]
+
+    def rs(a):
+        return ring_reduce_scatter(a[0], "x")[None]
+
+    f = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    got = np.asarray(f(xs))
+    want = xs.sum(axis=0)  # [chunk, 4, 16]; device p gets chunk p
+    check("ring_reduce_scatter", np.allclose(got, want, atol=1e-4), f"max err {np.abs(got - want).max():.2e}")
+
+    def crs(a):
+        return compressed_ring_reduce_scatter(a[0], "x")[None]
+
+    f = jax.jit(jax.shard_map(crs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    got = np.asarray(f(xs))
+    rel = np.abs(got - want).max() / np.abs(want).max()
+    check("compressed_ring_reduce_scatter", rel < 0.05, f"rel err {rel:.3f}")
+
+
+def test_grouped_exchange():
+    from repro.comm import fused_exchange, grouped_exchange
+
+    mesh = make_mesh((8,), ("x",))
+    rng = np.random.default_rng(1)
+    # chunks[p, q] = payload device p holds for device q
+    chunks = rng.standard_normal((8, 8, 4)).astype(np.float32)
+
+    def run(mode, g=1):
+        def consume(acc, chunk, src):
+            w = (jnp.asarray(src) + 1).astype(jnp.float32)
+            return acc + chunk * w
+
+        def body(a):
+            init = jnp.zeros((4,), jnp.float32)
+            if mode == "fused":
+                return fused_exchange(a[0], "x", consume, init)[None]
+            return grouped_exchange(a[0], "x", consume, init, group_factor=g)[None]
+
+        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        return np.asarray(f(chunks))
+
+    want = np.stack(
+        [sum((q + 1) * chunks[q, p] for q in range(8)) for p in range(8)]
+    )
+    got_f = run("fused")
+    check("fused_exchange", np.allclose(got_f, want, atol=1e-5))
+    for g in (1, 2, 3, 7):
+        got_g = run("grouped", g)
+        check(f"grouped_exchange_g{g}", np.allclose(got_g, want, atol=1e-5))
+
+
+def test_distributed_counting():
+    from repro.core import build_counting_plan, colorful_map_count, erdos_renyi
+    from repro.core.brute_force import count_colorful_maps
+    from repro.core.distributed import (
+        build_distributed_plan,
+        make_count_fn,
+        shard_coloring,
+    )
+    from repro.core.templates import path_tree, spider_tree
+
+    g = erdos_renyi(97, 5.0, seed=7)  # ragged shard sizes on purpose
+    rng = np.random.default_rng(3)
+
+    for tree, tname in ((path_tree(4), "p4"), (spider_tree([2, 1]), "sp21")):
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+
+        for shards, iters in ((4, 2), (8, 1)):
+            mesh_names = ("data", "model") if iters > 1 else ("data",)
+            mesh_shape = (shards, iters) if iters > 1 else (shards,)
+            mesh = make_mesh(mesh_shape, mesh_names)
+            plan = build_distributed_plan(g, tree, shards)
+            cols = shard_coloring(plan, coloring)[None]  # [1, P, n_loc_pad]
+            if iters > 1:
+                cols = np.broadcast_to(cols, (iters,) + cols.shape[1:])
+            for mode, gf in (
+                ("alltoall", 1),
+                ("pipeline", 1),
+                ("pipeline", 3),
+                ("adaptive", 1),
+                ("ring", 1),
+            ):
+                f = make_count_fn(
+                    plan,
+                    mesh,
+                    mode=mode,
+                    iter_axis="model" if iters > 1 else None,
+                    group_factor=gf,
+                )
+                got = np.asarray(f(jnp.asarray(cols)))
+                ok = np.allclose(got, want, rtol=1e-6)
+                check(
+                    f"dist_{tname}_P{shards}I{iters}_{mode}_g{gf}",
+                    ok,
+                    f"got {got[0]} want {want}",
+                )
+
+
+def test_moe_manual_vs_dense():
+    """moe_block_manual (EP token-sharded / TP / pipelined) == dense oracle."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.models.layers import Initializer
+    from repro.models.moe import moe_block, moe_block_manual, moe_init
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    base = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    rng = np.random.default_rng(0)
+
+    for moe_sharding, pipeline, gf, tname in (
+        ("ep", False, 1, "ep_fused"),
+        ("ep", True, 1, "ep_pipe_g1"),
+        ("ep", True, 3, "ep_pipe_g3"),
+        ("tp", False, 1, "tp"),
+    ):
+        cfg = dataclasses.replace(
+            base, num_experts=4, experts_per_token=2,
+            moe_sharding=moe_sharding, capacity_factor=64.0,
+        )
+        init = Initializer(jax.random.key(7))
+        params = moe_init(init, cfg)
+        x = jnp.asarray(
+            rng.standard_normal((4, 8, cfg.d_model)).astype(np.float32) * 0.3
+        )
+        want, _ = jax.jit(
+            lambda p_, x_: moe_block(p_, x_, cfg, dtype=jnp.float32)
+        )(params, x)
+
+        def body(p_, x_):
+            out, aux = moe_block_manual(
+                p_, x_, cfg, dp_axes=("data",), model_axis="model",
+                fsdp_axis=None, pipeline=pipeline, group_factor=gf,
+                dtype=jnp.float32,
+            )
+            return out
+
+        pspecs = {
+            "router": P(),
+            "w_gate": P("model") if moe_sharding == "ep" else P(None, None, "model"),
+            "w_up": P("model") if moe_sharding == "ep" else P(None, None, "model"),
+            "w_down": P("model") if moe_sharding == "ep" else P(None, "model", None),
+        }
+        f = jax.jit(
+            jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(pspecs, P("data", None, None)),
+                out_specs=P("data", None, None),
+                check_vma=False,
+            )
+        )
+        got = np.asarray(f(params, x))
+        ok = np.allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
+        check(f"moe_manual_{tname}", ok,
+              f"max err {np.abs(got - np.asarray(want)).max():.2e}")
+
+
+def test_elastic_restore():
+    """Checkpoint saved from one mesh restores (re-sharded) onto another."""
+    import tempfile
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.train import CheckpointManager
+
+    rng = np.random.default_rng(5)
+    tree = {"w": jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32)),
+            "b": jnp.asarray(rng.standard_normal((8,)).astype(np.float32))}
+    mesh_a = make_mesh((4,), ("data",))
+    sha = {"w": NamedSharding(mesh_a, P("data", None)), "b": NamedSharding(mesh_a, P())}
+    tree_a = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sha)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(1, {"params": tree_a})
+        mesh_b = make_mesh((8,), ("data",))
+        shb = {"w": NamedSharding(mesh_b, P("data", None)), "b": NamedSharding(mesh_b, P())}
+        out = mgr.restore(1, {"params": tree}, shardings={"params": shb})
+        got = out["params"]
+        ok = np.allclose(np.asarray(got["w"]), np.asarray(tree["w"])) and np.allclose(
+            np.asarray(got["b"]), np.asarray(tree["b"])
+        )
+        resharded = got["w"].sharding.num_devices == 8
+        check("elastic_restore", ok and resharded,
+              f"devices={got['w'].sharding.num_devices}")
+
+
+def main():
+    test_ring_collectives()
+    test_grouped_exchange()
+    test_distributed_counting()
+    test_moe_manual_vs_dense()
+    test_elastic_restore()
+    if FAILURES:
+        print(f"FAILED: {FAILURES}")
+        sys.exit(1)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Correctness of the color-coding DP against brute-force oracles.
+
+The strongest invariant: for a FIXED coloring, the DP's colorful map count
+equals the brute-force colorful map count exactly (both are deterministic
+integers represented in f32).  This holds for every graph/template/coloring
+and is the core soundness test of the whole engine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_counting_plan,
+    colorful_map_count,
+    erdos_renyi,
+    from_edges,
+    path_tree,
+    random_tree,
+    rmat,
+    star_tree,
+    template,
+)
+from repro.core.brute_force import count_colorful_maps, count_copies, count_embedding_maps
+from repro.core.estimator import estimate_counts
+from repro.core.templates import (
+    TEMPLATE_TABLE3,
+    automorphism_count,
+    partition_complexity,
+    partition_tree,
+    spider_tree,
+)
+
+
+def _dp_count(g, tree, coloring, **kw):
+    plan = build_counting_plan(g, tree, **kw)
+    col = np.zeros(plan.n_pad, np.int32)
+    col[: g.n] = coloring
+    return float(colorful_map_count(plan, jnp.asarray(col)))
+
+
+class TestColorfulExactness:
+    @pytest.mark.parametrize("tree_fn", [lambda: path_tree(3), lambda: path_tree(4),
+                                         lambda: star_tree(4), lambda: spider_tree([2, 1])])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_small_graphs(self, tree_fn, seed):
+        tree = tree_fn()
+        g = erdos_renyi(24, 4.0, seed=seed)
+        rng = np.random.default_rng(seed)
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+        got = _dp_count(g, tree, coloring)
+        assert got == pytest.approx(want), (got, want)
+
+    def test_triangle_graph_path3(self):
+        # triangle contains 3 paths-of-3 (as copies); maps = 6
+        g = from_edges(3, np.array([[0, 1], [1, 2], [2, 0]]))
+        tree = path_tree(3)
+        coloring = np.array([0, 1, 2], np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+        got = _dp_count(g, tree, coloring)
+        assert got == want == 6
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_trees_random_graphs(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        tree = random_tree(int(rng.integers(2, 7)), seed=seed)
+        g = erdos_renyi(18, 3.5, seed=seed + 50)
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+        got = _dp_count(g, tree, coloring)
+        assert got == pytest.approx(want), (tree, got, want)
+
+    @pytest.mark.parametrize("root", [0, 1, 2])
+    def test_root_invariance(self, root):
+        tree = spider_tree([2, 2])
+        g = erdos_renyi(20, 4.0, seed=3)
+        coloring = np.random.default_rng(7).integers(0, tree.n, g.n).astype(np.int32)
+        got = _dp_count(g, tree, coloring, root=root)
+        want = count_colorful_maps(g, tree, coloring)
+        assert got == pytest.approx(want)
+
+    def test_spmm_block_plan_matches(self):
+        tree = path_tree(4)
+        g = erdos_renyi(40, 5.0, seed=9)
+        coloring = np.random.default_rng(2).integers(0, 4, g.n).astype(np.int32)
+        a = _dp_count(g, tree, coloring, spmm_kind="edges")
+        b = _dp_count(g, tree, coloring, spmm_kind="blocks")
+        assert a == pytest.approx(b)
+
+
+class TestEstimator:
+    def test_unbiased_small(self):
+        # average over all-iterations estimate converges to the true count
+        tree = path_tree(3)
+        g = erdos_renyi(30, 4.0, seed=11)
+        truth = count_copies(g, tree)
+        plan = build_counting_plan(g, tree)
+        est = estimate_counts(plan, 300, jax.random.key(0))
+        assert est.mean == pytest.approx(truth, rel=0.15), (est.mean, truth)
+        assert est.estimate == pytest.approx(truth, rel=0.25)
+
+    def test_scale_factor(self):
+        tree = star_tree(4)
+        plan_scale = (4 ** 4) / 24 / automorphism_count(tree)
+        g = erdos_renyi(16, 3.0, seed=1)
+        plan = build_counting_plan(g, tree)
+        assert plan.scale == pytest.approx(plan_scale)
+
+
+class TestTemplates:
+    def test_table3_reproduction(self):
+        for name, (mem, comp) in TEMPLATE_TABLE3.items():
+            tr = template(name)
+            chain = partition_tree(tr)
+            m, c = partition_complexity(chain)
+            assert (m, c) == (mem, comp), name
+
+    def test_automorphisms_brute(self):
+        from itertools import permutations
+
+        for seed in range(6):
+            tree = random_tree(6, seed=seed)
+            edges = {frozenset(e) for e in tree.edges}
+            count = 0
+            for perm in permutations(range(tree.n)):
+                if all(frozenset((perm[a], perm[b])) in edges for a, b in edges):
+                    count += 1
+            assert automorphism_count(tree) == count, tree
+
+    def test_partition_sizes(self):
+        for name in TEMPLATE_TABLE3:
+            tr = template(name)
+            chain = partition_tree(tr)
+            for nd in chain.nodes:
+                if not nd.is_leaf:
+                    assert (
+                        chain.nodes[nd.left].size + chain.nodes[nd.right].size
+                        == nd.size
+                    )
+            assert chain.nodes[chain.root_index].size == tr.n
+
+
+class TestGraphs:
+    def test_rmat_skewness_ordering(self):
+        gs = {k: rmat(1 << 12, 40_000, skew=k, seed=0) for k in (1, 3, 8)}
+        sk = {k: g.skewness() for k, g in gs.items()}
+        assert sk[1] < sk[3] < sk[8], sk
+
+    def test_csr_roundtrip(self):
+        g = erdos_renyi(50, 6.0, seed=4)
+        deg = g.degrees()
+        assert deg.sum() == g.num_directed
+        # symmetry
+        for v in range(g.n):
+            for u in g.neighbors(v):
+                assert v in g.neighbors(int(u))

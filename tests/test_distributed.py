@@ -1,0 +1,33 @@
+"""Multi-device tests (8 host devices) run in a subprocess so the main test
+process keeps a single device (see the dry-run/device-count policy).
+
+The worker prints one ``CHECK <name> PASS|FAIL`` line per assertion; this
+wrapper re-exposes them as a single pytest with a readable report.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(900)
+def test_multi_device_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "tests", "_dist_worker.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=880,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed worker failed (see CHECK lines)"
+    assert "ALL OK" in proc.stdout
+    assert "FAIL" not in proc.stdout

@@ -1,0 +1,149 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles.
+
+Each kernel sweeps shapes (and dtypes where meaningful) and asserts
+allclose against ref.py.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import erdos_renyi, rmat
+from repro.core.graphs import edge_list
+from repro.kernels import ops, ref
+from repro.kernels.color_combine import color_combine_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.spmm_edgetile import spmm_block_pallas, spmm_gather_pallas
+
+
+def _random_table(rng, n_pad, width, n_valid, dtype=np.float32):
+    t = rng.random((n_pad, width)).astype(dtype)
+    t[n_valid:] = 0.0
+    return jnp.asarray(t)
+
+
+class TestSpmmKernels:
+    @pytest.mark.parametrize("n,deg,width", [(100, 5.0, 128), (300, 8.0, 256), (64, 3.0, 384)])
+    def test_gather_kernel_matches_ref(self, n, deg, width):
+        g = erdos_renyi(n, deg, seed=n)
+        plan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges")
+        rng = np.random.default_rng(0)
+        table = _random_table(rng, plan.n_pad, width, g.n)
+        got = spmm_gather_pallas(
+            plan.rows, plan.cols, table, num_rows=plan.n_pad - 1, interpret=True
+        )[: plan.n_pad]
+        got = jnp.where(plan.written_mask[:, None], got, 0)
+        want = ref.spmm_segment_ref(plan.rows, plan.cols, table, plan.n_pad - 1)[
+            : plan.n_pad
+        ]
+        np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-6)
+
+    @pytest.mark.parametrize("n,deg,width", [(200, 6.0, 128), (500, 10.0, 256)])
+    def test_block_kernel_matches_ref(self, n, deg, width):
+        g = rmat(n, int(n * deg / 2), skew=3, seed=n)
+        rows, cols = edge_list(g)
+        plan = ops.build_spmm_plan(rows, cols, g.n, kind="blocks")
+        rng = np.random.default_rng(1)
+        table = _random_table(rng, plan.n_pad, width, g.n)
+        got = spmm_block_pallas(
+            plan.block_rows,
+            plan.block_cols,
+            plan.patches,
+            table,
+            num_row_blocks=plan.n_pad // plan.block_size,
+            interpret=True,
+        )[: plan.n_pad]
+        got = jnp.where(plan.written_mask[:, None], got, 0)
+        eplan = ops.build_spmm_plan(rows, cols, g.n, kind="edges")
+        want = ref.spmm_segment_ref(eplan.rows, eplan.cols, table, plan.n_pad - 1)[
+            : plan.n_pad
+        ]
+        np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-5)
+
+    def test_xla_block_path_matches_edges_path(self):
+        g = erdos_renyi(150, 7.0, seed=5)
+        rows, cols = edge_list(g)
+        bplan = ops.build_spmm_plan(rows, cols, g.n, kind="blocks")
+        eplan = ops.build_spmm_plan(rows, cols, g.n, kind="edges")
+        rng = np.random.default_rng(2)
+        table = _random_table(rng, bplan.n_pad, 128, g.n)
+        a = ops.spmm(bplan, table, impl="xla")
+        b = ops.spmm(eplan, table, impl="xla")
+        np.testing.assert_allclose(a[: g.n], b[: g.n], rtol=1e-6)
+
+
+class TestColorCombine:
+    @pytest.mark.parametrize("k,t1,t2", [(5, 2, 2), (7, 3, 2), (10, 3, 3), (12, 4, 3)])
+    def test_matches_ref(self, k, t1, t2):
+        tables = ops.build_combine_tables(k, t1, t2)
+        n_pad = 256
+        a_pad = ops.pad_to(math.comb(k, t1), 128)
+        b_pad = ops.pad_to(math.comb(k, t2), 128)
+        rng = np.random.default_rng(k)
+        left = jnp.asarray(rng.random((n_pad, a_pad)).astype(np.float32))
+        m = jnp.asarray(rng.random((n_pad, b_pad)).astype(np.float32))
+        got = color_combine_pallas(
+            left, m, tables.idx1_t, tables.idx2_t, num_splits=tables.j, interpret=True
+        )
+        want = ref.color_combine_ref(left, m, tables.idx1, tables.idx2)
+        np.testing.assert_allclose(got[:, : tables.s], want, rtol=1e-5)
+
+    def test_xla_chunked_matches_einsum(self):
+        # force the chunked path by a tiny chunk threshold
+        tables = ops.build_combine_tables(9, 4, 3)
+        n_pad = 128
+        rng = np.random.default_rng(3)
+        left = jnp.asarray(rng.random((n_pad, ops.pad_to(math.comb(9, 4), 128))).astype(np.float32))
+        m = jnp.asarray(rng.random((n_pad, ops.pad_to(math.comb(9, 3), 128))).astype(np.float32))
+        want = ref.color_combine_ref(left, m, tables.idx1, tables.idx2)
+
+        def chunked(jc=5):
+            s, j = tables.idx1.shape
+            acc = jnp.zeros((n_pad, s), jnp.float32)
+            for j0 in range(0, j, jc):
+                i1 = tables.idx1[:, j0 : j0 + jc]
+                i2 = tables.idx2[:, j0 : j0 + jc]
+                acc = acc + jnp.einsum("vsj,vsj->vs", left[:, i1], m[:, i2])
+            return acc
+
+        np.testing.assert_allclose(chunked(), want, rtol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,hq,hkv,l,d", [(1, 4, 4, 256, 64), (2, 8, 2, 128, 64), (1, 6, 2, 384, 128)]
+    )
+    def test_causal_matches_ref(self, b, hq, hkv, l, d):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((b, hq, l, d)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((b, hkv, l, d)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((b, hkv, l, d)).astype(np.float32))
+        got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [64, 128, 200])
+    def test_sliding_window(self, window):
+        rng = np.random.default_rng(1)
+        b, h, l, d = 1, 2, 256, 64
+        q = jnp.asarray(rng.standard_normal((b, h, l, d)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((b, h, l, d)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((b, h, l, d)).astype(np.float32))
+        got = flash_attention_pallas(q, k, v, causal=True, window=window, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(2)
+        b, h, l, d = 1, 2, 128, 64
+        q = jnp.asarray(rng.standard_normal((b, h, l, d)), dtype=jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((b, h, l, d)), dtype=jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((b, h, l, d)), dtype=jnp.bfloat16)
+        got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            got.astype(np.float32), want.astype(np.float32), rtol=5e-2, atol=5e-2
+        )

@@ -1,0 +1,153 @@
+"""Hypothesis property tests on system invariants.
+
+The central property — DP colorful count == brute-force colorful count for
+arbitrary (graph, template, coloring) — plus structural invariants of the
+color-set algebra, partition chains, graph substrate, and estimator math.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_counting_plan, colorful_map_count, from_edges
+from repro.core.brute_force import count_colorful_maps
+from repro.core.colorsets import num_sets, rank_of_mask, set_masks, split_tables
+from repro.core.estimator import median_of_means
+from repro.core.graphs import edge_list, erdos_renyi
+from repro.core.templates import (
+    automorphism_count,
+    partition_tree,
+    random_tree,
+)
+
+SETTINGS = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+class TestColorsetAlgebra:
+    @given(st.integers(3, 12), st.data())
+    @SETTINGS
+    def test_rank_bijection(self, k, data):
+        t = data.draw(st.integers(1, min(k, 6)))
+        masks = set_masks(k, t)
+        assert len(masks) == num_sets(k, t)
+        assert len(set(masks)) == len(masks)
+        for i, m in enumerate(masks[:: max(1, len(masks) // 7)]):
+            assert rank_of_mask(k, t, m) == masks.index(m)
+
+    @given(st.integers(4, 10), st.data())
+    @SETTINGS
+    def test_split_tables_partition(self, k, data):
+        t1 = data.draw(st.integers(1, k - 2))
+        t2 = data.draw(st.integers(1, min(k - t1, 4)))
+        idx1, idx2 = split_tables(k, t1, t2)
+        t = t1 + t2
+        assert idx1.shape == (num_sets(k, t), math.comb(t, t1))
+        m1 = set_masks(k, t1)
+        m2 = set_masks(k, t2)
+        mo = set_masks(k, t)
+        # each split row reassembles the output set exactly, disjointly
+        for s in range(0, idx1.shape[0], max(1, idx1.shape[0] // 9)):
+            for j in range(idx1.shape[1]):
+                a, b = m1[idx1[s, j]], m2[idx2[s, j]]
+                assert a & b == 0
+                assert a | b == mo[s]
+
+    @given(st.integers(3, 9))
+    @SETTINGS
+    def test_vandermonde_identity(self, k):
+        # sum over splits of C(k,t) entries == C(t, t1) per output set
+        idx1, _ = split_tables(k, 2, 1)
+        assert idx1.shape[1] == math.comb(3, 2)
+
+
+class TestPartitionInvariants:
+    @given(st.integers(2, 10), st.integers(0, 10_000))
+    @SETTINGS
+    def test_chain_structure(self, n, seed):
+        tree = random_tree(n, seed=seed)
+        chain = partition_tree(tree)
+        leaves = sum(1 for nd in chain.nodes if nd.is_leaf)
+        internal = [nd for nd in chain.nodes if not nd.is_leaf]
+        assert leaves == n  # one leaf per template vertex
+        assert len(internal) == n - 1  # binary tree
+        for nd in internal:
+            assert chain.nodes[nd.left].size + chain.nodes[nd.right].size == nd.size
+        assert chain.nodes[chain.root_index].size == n
+
+    @given(st.integers(2, 7), st.integers(0, 1000))
+    @SETTINGS
+    def test_aut_divides_factorial(self, n, seed):
+        tree = random_tree(n, seed=seed)
+        a = automorphism_count(tree)
+        assert math.factorial(n) % a == 0
+
+
+class TestDPExactness:
+    @given(
+        st.integers(10, 26),
+        st.floats(1.5, 4.0),
+        st.integers(2, 5),
+        st.integers(0, 10_000),
+    )
+    @settings(
+        max_examples=12,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    def test_dp_equals_bruteforce(self, n, deg, k, seed):
+        g = erdos_renyi(n, deg, seed=seed)
+        tree = random_tree(k, seed=seed + 1)
+        rng = np.random.default_rng(seed + 2)
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        plan = build_counting_plan(g, tree)
+        col = np.zeros(plan.n_pad, np.int32)
+        col[: g.n] = coloring
+        got = float(colorful_map_count(plan, jnp.asarray(col)))
+        want = count_colorful_maps(g, tree, coloring)
+        assert got == pytest.approx(want), (n, deg, k, seed)
+
+
+class TestGraphInvariants:
+    @given(st.integers(5, 60), st.integers(0, 500), st.data())
+    @SETTINGS
+    def test_from_edges_symmetry_dedup(self, n, seed, data):
+        rng = np.random.default_rng(seed)
+        m = data.draw(st.integers(0, 80))
+        edges = rng.integers(0, n, (m, 2))
+        g = from_edges(n, edges)
+        rows, cols = edge_list(g)
+        assert len(rows) == 2 * g.num_edges
+        pairs = set(zip(rows.tolist(), cols.tolist()))
+        assert all((c, r) in pairs for r, c in pairs)  # symmetric
+        assert all(r != c for r, c in pairs)  # no self loops
+        assert len(pairs) == len(rows)  # dedup
+
+
+class TestEstimatorMath:
+    @given(st.lists(st.floats(0, 1e6), min_size=1, max_size=50), st.integers(1, 7))
+    @SETTINGS
+    def test_median_of_means_bounds(self, xs, groups):
+        xs_arr = np.asarray(xs)
+        mom = median_of_means(xs_arr, groups)
+        assert xs_arr.min() - 1e-9 <= mom <= xs_arr.max() + 1e-9
+
+    @given(st.integers(2, 8))
+    @SETTINGS
+    def test_scale_factor_formula(self, k):
+        # P[colorful] = k!/k^k; estimator scale is its inverse
+        from repro.core.templates import path_tree
+
+        tree = path_tree(k)
+        g = erdos_renyi(12, 2.0, seed=0)
+        plan = build_counting_plan(g, tree)
+        expected = (k ** k) / math.factorial(k) / automorphism_count(tree)
+        assert plan.scale == pytest.approx(expected)

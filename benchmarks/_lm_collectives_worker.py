@@ -10,10 +10,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import compressed_ring_reduce_scatter, ring_allgather, ring_reduce_scatter
+from repro.compat import make_mesh, shard_map
 
 
 def _mesh():
-    return jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((8,), ("data",))
 
 
 def _coll_bytes(compiled):
@@ -39,7 +40,7 @@ def main():
 
     # fused all-gather
     fused = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: jax.lax.all_gather(x[0], "data"),
             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
         )
@@ -50,7 +51,7 @@ def main():
 
     # relay ring
     ring = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: ring_allgather(x[0], "data"),
             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
         )
@@ -62,13 +63,13 @@ def main():
     # gradient reduce-scatter: fp32 vs int8 payloads
     g = np.random.default_rng(1).standard_normal((8, 8, 2048)).astype(np.float32)
     rs32 = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: ring_reduce_scatter(x[0], "data")[None],
             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
         )
     )
     rs8 = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: compressed_ring_reduce_scatter(x[0], "data")[None],
             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
         )

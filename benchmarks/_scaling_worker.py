@@ -18,14 +18,11 @@ from repro.core.templates import template
 
 
 def make_mesh(shards, iters=1):
+    from repro.launch.mesh import make_mesh as _mk
+
     if iters > 1:
-        return jax.make_mesh(
-            (shards, iters), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
-    return jax.make_mesh(
-        (shards,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+        return _mk((shards, iters), ("data", "model"))
+    return _mk((shards,), ("data",))
 
 
 def time_mode(g, tree, shards, mode, gf=1, iters=2):

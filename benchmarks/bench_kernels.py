@@ -1,0 +1,204 @@
+"""Kernel-level benchmarks for the counting hot path + perf trajectory JSON.
+
+Covers, across the Table-3 bench templates (u3-1 .. u10-2) on the fig6 RMAT
+graph:
+
+  spmm/*           neighbor sum: edges vs blocks vs auto plan kinds
+  color_combine/*  split-table contraction, per template's heaviest node
+  fused/*          fused SpMM->combine vs the two-step path
+  iter/*           full per-coloring-iteration wall-clock:
+                     seed        — the seed engine config (128-lane padded
+                                   tables, unfused, one coloring per call)
+                     batch8      — true-width tables + batch=8 colorings/call
+                     fused_batch8— same plus the fused pipeline
+
+Everything here times the XLA/CPU dispatch path (interpret-mode Pallas is
+an emulator, orders of magnitude off hardware; the kernels' correctness is
+covered by tests).  ``run()`` emits the usual CSV lines and returns a dict;
+``main()`` / ``benchmarks.run`` additionally write ``BENCH_kernels.json``
+at the repo root so the per-PR perf trajectory is machine-readable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_counting_plan, count_fn, rmat
+from repro.core.graphs import edge_list
+from repro.core.templates import partition_tree, template
+from repro.kernels import ops
+
+from .common import ROOT, emit, time_fn
+
+BENCH_TEMPLATES = ["u3-1", "u5-2", "u7-2", "u10-2"]
+JSON_PATH = os.path.join(ROOT, "BENCH_kernels.json")
+
+
+def _fig6_graph(smoke: bool = False):
+    if smoke:
+        return rmat(1 << 10, 10_000, skew=3, seed=0)
+    return rmat(1 << 13, 80_000, skew=3, seed=0)
+
+
+def _heaviest_node(tree):
+    """(k, t1, t2) of the combine node with the largest S * J work term."""
+    chain = partition_tree(tree)
+    best, best_cost = None, -1
+    for nd in chain.nodes:
+        if nd.is_leaf:
+            continue
+        t1 = chain.nodes[nd.left].size
+        t2 = chain.nodes[nd.right].size
+        s = math.comb(tree.n, t1 + t2)
+        j = math.comb(t1 + t2, t1)
+        if s * j > best_cost:
+            best, best_cost = (tree.n, t1, t2), s * j
+    return best
+
+
+def bench_spmm(g, results, iters=3):
+    rows, cols = edge_list(g)
+    rng = np.random.default_rng(0)
+    out = {}
+    width = 128
+    plans = {kind: ops.build_spmm_plan(rows, cols, g.n, kind=kind)
+             for kind in ("edges", "blocks", "auto")}
+    n_pad = plans["edges"].n_pad
+    t = rng.random((n_pad, width)).astype(np.float32)
+    t[g.n:] = 0.0
+    table = jnp.asarray(t)
+    for kind, plan in plans.items():
+        f = jax.jit(lambda tab, p=plan: ops.spmm(p, tab, impl="xla"))
+        sec = time_fn(lambda: f(table), iters=iters)
+        emit(f"spmm/{kind}", sec * 1e6,
+             f"B={width} resolved={plan.kind} density="
+             f"{0.0 if plan.patch_density is None else plan.patch_density:.1f}")
+        out[kind] = {"us": sec * 1e6, "resolved_kind": plan.kind,
+                     "patch_density": plan.patch_density}
+    return out
+
+
+def bench_color_combine(g, results, iters=3):
+    rng = np.random.default_rng(1)
+    out = {}
+    for name in results["templates"]:
+        tr = template(name)
+        k, t1, t2 = _heaviest_node(tr)
+        tables = ops.build_combine_tables(k, t1, t2, lane=1)
+        n_pad = ops.pad_to(g.n + 1, 128)
+        left = jnp.asarray(
+            rng.random((n_pad, math.comb(k, t1))).astype(np.float32))
+        m = jnp.asarray(
+            rng.random((n_pad, math.comb(k, t2))).astype(np.float32))
+        f = jax.jit(lambda l, mm: ops.color_combine(l, mm, tables, impl="xla"))
+        sec = time_fn(lambda: f(left, m), iters=iters)
+        emit(f"color_combine/{name}", sec * 1e6,
+             f"k={k} t1={t1} t2={t2} S={tables.s} J={tables.j}")
+        out[name] = {"us": sec * 1e6, "k": k, "t1": t1, "t2": t2,
+                     "s": tables.s, "j": tables.j}
+    return out
+
+
+def bench_fused(g, results, iters=3):
+    rows, cols = edge_list(g)
+    plan = ops.build_spmm_plan(rows, cols, g.n, kind="edges")
+    rng = np.random.default_rng(2)
+    out = {}
+    for name in results["templates"]:
+        tr = template(name)
+        k, t1, t2 = _heaviest_node(tr)
+        tables = ops.build_combine_tables(k, t1, t2, lane=1)
+        left = jnp.asarray(
+            rng.random((plan.n_pad, math.comb(k, t1))).astype(np.float32))
+        right_np = rng.random((plan.n_pad, math.comb(k, t2))).astype(np.float32)
+        right_np[g.n:] = 0.0
+        right = jnp.asarray(right_np)
+        mask = (jnp.arange(plan.n_pad) < g.n).astype(jnp.float32)[:, None]
+        fused = jax.jit(
+            lambda l, r: ops.fused_count(plan, l, r, tables, impl="xla"))
+        unfused = jax.jit(
+            lambda l, r: ops.color_combine(
+                l, ops.spmm(plan, r, impl="xla") * mask, tables, impl="xla"))
+        sec_f = time_fn(lambda: fused(left, right), iters=iters)
+        sec_u = time_fn(lambda: unfused(left, right), iters=iters)
+        emit(f"fused/{name}", sec_f * 1e6,
+             f"unfused={sec_u * 1e6:.1f}us ratio={sec_u / sec_f:.2f}")
+        out[name] = {"fused_us": sec_f * 1e6, "unfused_us": sec_u * 1e6,
+                     "k": k, "t1": t1, "t2": t2}
+    return out
+
+
+def bench_iteration(g, results, batch=8, iters=2):
+    out = {}
+    for name in results["templates"]:
+        tr = template(name)
+        # the seed engine: 128-lane padded tables, unfused, 1 coloring/call
+        seed_plan = build_counting_plan(g, tr, spmm_kind="edges", lane=128)
+        f_seed = count_fn(seed_plan)
+        key = jax.random.key(0)
+        sec_seed = time_fn(lambda: f_seed(key), iters=iters)
+
+        # this PR's pipeline: true-width tables, batched colorings
+        plan = build_counting_plan(g, tr, spmm_kind="auto")
+        f_b = count_fn(plan, batch=batch)
+        sec_b = time_fn(lambda: f_b(key), iters=iters) / batch
+
+        # plus the fused SpMM->combine path (bounded-M schedule)
+        fplan = build_counting_plan(g, tr, spmm_kind="edges", fuse=True)
+        f_f = count_fn(fplan, batch=batch)
+        sec_f = time_fn(lambda: f_f(key), iters=iters) / batch
+
+        emit(f"iter/{name}/seed", sec_seed * 1e6, f"V={g.n} E={g.num_edges}")
+        emit(f"iter/{name}/batch{batch}", sec_b * 1e6,
+             f"speedup={sec_seed / sec_b:.2f}x")
+        emit(f"iter/{name}/fused_batch{batch}", sec_f * 1e6,
+             f"speedup={sec_seed / sec_f:.2f}x")
+        out[name] = {
+            "seed_us": sec_seed * 1e6,
+            f"batch{batch}_us": sec_b * 1e6,
+            f"fused_batch{batch}_us": sec_f * 1e6,
+            f"speedup_batch{batch}": sec_seed / sec_b,
+            f"speedup_fused_batch{batch}": sec_seed / sec_f,
+        }
+    return out
+
+
+def run(smoke: bool = False, json_path: str = JSON_PATH):
+    g = _fig6_graph(smoke)
+    templates = BENCH_TEMPLATES[:2] if smoke else BENCH_TEMPLATES
+    results = {
+        "backend": jax.default_backend(),
+        "graph": {"v": g.n, "e": g.num_edges, "skew": 3,
+                  "name": "fig6-smoke" if smoke else "fig6"},
+        "templates": templates,
+        "batch": 8,
+    }
+    results["spmm"] = bench_spmm(g, results)
+    results["color_combine"] = bench_color_combine(g, results)
+    results["fused"] = bench_fused(g, results)
+    results["iteration"] = bench_iteration(g, results)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph + first two templates (CI)")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)
+
+
+if __name__ == "__main__":
+    main()

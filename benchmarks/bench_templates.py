@@ -8,6 +8,8 @@ size grows on a fixed RMAT graph (Fig. 6's compute-side trend).
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 
 from repro.core import build_counting_plan, count_fn, rmat
@@ -18,7 +20,7 @@ from .common import emit, time_fn
 BENCH_TEMPLATES = ["u3-1", "u5-2", "u7-2", "u10-2"]  # CPU-feasible sizes
 
 
-def run():
+def run(smoke: bool = False):
     # Table 3 (structural reproduction — exact)
     for name, (mem_want, comp_want) in TEMPLATE_TABLE3.items():
         tr = template(name)
@@ -32,8 +34,13 @@ def run():
         )
 
     # Fig. 6 compute trend: per-iteration time vs template size
-    g = rmat(1 << 13, 80_000, skew=3, seed=0)
-    for name in BENCH_TEMPLATES:
+    if smoke:
+        g = rmat(1 << 10, 10_000, skew=3, seed=0)
+        names = BENCH_TEMPLATES[:2]
+    else:
+        g = rmat(1 << 13, 80_000, skew=3, seed=0)
+        names = BENCH_TEMPLATES
+    for name in names:
         tr = template(name)
         plan = build_counting_plan(g, tr)
         f = count_fn(plan)
@@ -43,7 +50,11 @@ def run():
 
 
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph + first two templates (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@
 Emits ``name,us_per_call,derived`` CSV lines:
   table3/*        Table 3  (template complexity — exact reproduction)
   fig6/*          Fig. 6   (template-size scaling, single node)
+  spmm/*, color_combine/*, fused/*, iter/*
+                  kernel-level hot-path benchmarks (bench_kernels); also
+                  written machine-readable to BENCH_kernels.json at the
+                  repo root — the per-PR perf trajectory record
   strong/*        Fig. 7/9/15 (strong scaling, naive vs pipeline vs adaptive)
   weak/*          Fig. 10  (weak scaling)
   fig11/*         Fig. 11  (load balance vs skew; task-size effects)
@@ -18,7 +22,7 @@ from __future__ import annotations
 
 import traceback
 
-from . import bench_load_balance, bench_templates
+from . import bench_kernels, bench_load_balance, bench_templates
 from .common import run_worker
 
 
@@ -33,6 +37,7 @@ def _section(name, fn):
 
 def main() -> None:
     _section("templates", bench_templates.run)
+    _section("kernels", bench_kernels.run)
     _section("load_balance", bench_load_balance.run)
     _section(
         "strong_scaling",

@@ -38,8 +38,9 @@ def main():
     args = ap.parse_args()
 
     shards = 8
-    mesh = jax.make_mesh((shards,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((shards,), ("data",))
     g = relabel_random(rmat(args.vertices, args.edges, skew=3, seed=0), seed=1)
     tree = template(args.template)
     print(f"graph: {g.n} vertices, {g.num_edges} edges (skew {g.skewness():.0f}); "

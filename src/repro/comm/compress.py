@@ -15,6 +15,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 __all__ = ["int8_compress", "int8_decompress", "compressed_ring_reduce_scatter"]
 
 
@@ -48,7 +50,7 @@ def compressed_ring_reduce_scatter(
     Output: this device's fully reduced chunk (fp32).  Chunk sizes must be a
     multiple of ``block`` elements.
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     p = jax.lax.axis_index(axis_name)
     chunk_shape = x.shape[1:]
     total = 1

@@ -22,6 +22,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 __all__ = ["grouped_exchange", "fused_exchange"]
 
 
@@ -43,7 +45,7 @@ def fused_exchange(
     before compute starts (the paper's peak-memory pathology, kept
     deliberately for the Naive baseline).
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     received = jax.lax.all_to_all(chunks, axis_name, split_axis=0, concat_axis=0)
     p = jax.lax.axis_index(axis_name)
     acc = init
@@ -71,7 +73,7 @@ def grouped_exchange(
     instead of P (Eq. 12); each group's sends overlap the previous group's
     consumes (Eq. 13/14).
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     p = jax.lax.axis_index(axis_name)
     g = max(1, min(group_factor, P - 1))
 

@@ -18,6 +18,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 __all__ = ["ring_allgather", "ring_allgather_overlap", "ring_reduce_scatter"]
 
 
@@ -45,7 +47,7 @@ def ring_allgather(x: jax.Array, axis_name: str, *, tiled: bool = False) -> jax.
     """All-gather via P-1 ring hops (reference; prefer lax.all_gather when
     no overlap is wanted — this exists to bound peak memory per step in
     callers that consume chunks immediately)."""
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     p = jax.lax.axis_index(axis_name)
 
     def body(w, carry):
@@ -80,7 +82,7 @@ def ring_allgather_overlap(
     transfer overlaps the combine (paper Fig. 3 pipeline; ratio rho_w of
     Eq. 14 is realized by XLA async scheduling).
     """
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     p = jax.lax.axis_index(axis_name)
 
     def body(w, carry):
@@ -109,7 +111,7 @@ def ring_reduce_scatter(
     """
     if chunk_axis != 0:
         x = jnp.moveaxis(x, chunk_axis, 0)
-    P = jax.lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     p = jax.lax.axis_index(axis_name)
 
     def body(w, buf):

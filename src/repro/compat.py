@@ -1,0 +1,61 @@
+"""Version-compat shims for the JAX APIs this repo uses across releases.
+
+The repo targets the newest stable JAX but must degrade onto the versions
+actually baked into CI / test containers.  Two shims live here:
+
+``shard_map``
+    ``jax.shard_map`` (new spelling, ``check_vma`` kwarg) vs
+    ``jax.experimental.shard_map.shard_map`` (old spelling, ``check_rep``).
+
+``make_mesh``
+    ``jax.make_mesh(..., axis_types=(AxisType.Auto, ...))`` vs releases
+    that predate ``jax.sharding.AxisType`` (where plain ``make_mesh`` has
+    the same auto-sharding semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "axis_size"]
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with the classic ``psum(1, axis)`` fallback.
+
+    Both return a static Python int for a named mesh axis inside a
+    shard_map/pmap region.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        # old spelling: `auto` is the complement of the manual axis set
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(shape, names):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, names)
+    return jax.make_mesh(shape, names, axis_types=(axis_type.Auto,) * len(names))

@@ -7,9 +7,23 @@ Pipeline per coloring iteration (Algorithm 1 of the paper):
 3. for each internal partition node (postorder):
    ``M = spmm(A, C_right)`` (neighbor sum) then
    ``C_node = color_combine(C_left, M)`` (split-table contraction),
-   with pad rows/cols re-masked;
+   with pad rows/cols re-masked — or, with ``fuse=True``, one
+   ``ops.fused_count`` call that contracts each ``row_tile``-row block of
+   ``M`` as soon as it is produced and never materializes the full
+   ``[n_pad, B]`` neighbor sum (the paper's fine-grained pipeline, §3.2,
+   at kernel granularity; see DESIGN.md §11);
 4. colorful map count = ``sum_v C_root[v, 0]`` (the full color set has rank
    0 in its singleton table).
+
+Column padding is impl-dependent (``lane``): the Pallas kernels need
+128-lane-aligned tables, while the XLA paths run at true table widths —
+on CPU/GPU that alone removes the 12.8x waste of padding the k-wide leaf
+tables to 128 columns.
+
+Batched colorings: the outer color-coding loop is embarrassingly parallel,
+so ``count_fn(plan, batch=B)`` evaluates B independent colorings per jit
+call (vmap over the DP), amortizing dispatch and plan overheads across the
+batch — the single-device mirror of the paper's multi-node outer loop.
 
 The DP uses ``d = 1`` in the recurrence and divides the final count by
 ``|Aut(T)|`` once — equivalent to the paper's per-step over-counting factor
@@ -47,6 +61,10 @@ class CountingPlan:
     combine: Dict[int, ops.CombineTables]  # internal node index -> tables
     widths: Dict[int, int]  # node index -> padded table width
     impl: str = "auto"
+    #: route each internal node through the fused SpMM->combine path
+    fuse: bool = False
+    #: column padding multiple the tables were built with (128 = pallas)
+    lane: int = 128
 
     @property
     def scale(self) -> float:
@@ -62,8 +80,10 @@ def build_counting_plan(
     root: int = 0,
     spmm_kind: str = "edges",
     impl: str = "auto",
+    fuse: bool = False,
     tile_size: int = 128,
     block_size: int = 128,
+    lane: Optional[int] = None,
 ) -> CountingPlan:
     chain = partition_tree(tree, root=root)
     k = tree.n
@@ -71,15 +91,18 @@ def build_counting_plan(
     plan = ops.build_spmm_plan(
         rows, cols, g.n, kind=spmm_kind, tile_size=tile_size, block_size=block_size
     )
+    if lane is None:
+        # Pallas kernels need 128-lane tables; XLA runs at true widths.
+        lane = 128 if ops.resolve_impl(impl) == "pallas" else 1
     combine: Dict[int, ops.CombineTables] = {}
     widths: Dict[int, int] = {}
     for i, nd in enumerate(chain.nodes):
         if nd.is_leaf:
-            widths[i] = ops.pad_to(k, 128)
+            widths[i] = ops.pad_to(k, lane)
         else:
             t1 = chain.nodes[nd.left].size
             t2 = chain.nodes[nd.right].size
-            tables = ops.build_combine_tables(k, t1, t2)
+            tables = ops.build_combine_tables(k, t1, t2, lane=lane)
             combine[i] = tables
             widths[i] = tables.s_pad
     return CountingPlan(
@@ -93,11 +116,13 @@ def build_counting_plan(
         combine=combine,
         widths=widths,
         impl=impl,
+        fuse=fuse,
+        lane=lane,
     )
 
 
 def _leaf_table(plan: CountingPlan, coloring: jax.Array, row_mask: jax.Array):
-    k_pad = ops.pad_to(plan.k, 128)
+    k_pad = ops.pad_to(plan.k, plan.lane)
     onehot = jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32)
     return onehot * row_mask
 
@@ -119,10 +144,16 @@ def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
             tables[i] = leaf
             continue
         tbl = plan.combine[i]
-        m = ops.spmm(plan.spmm_plan, tables[nd.right], impl=plan.impl)
-        # mask pad rows of the neighbor sum before the combine
-        m = m * row_mask
-        out = ops.color_combine(tables[nd.left], m, tbl, impl=plan.impl)
+        if plan.fuse:
+            out = ops.fused_count(
+                plan.spmm_plan, tables[nd.left], tables[nd.right], tbl,
+                impl=plan.impl,
+            )
+        else:
+            m = ops.spmm(plan.spmm_plan, tables[nd.right], impl=plan.impl)
+            # mask pad rows of the neighbor sum before the combine
+            m = m * row_mask
+            out = ops.color_combine(tables[nd.left], m, tbl, impl=plan.impl)
         col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
         tables[i] = out * row_mask * col_mask
         # free children (keeps XLA liveness tight and mirrors the paper's
@@ -134,12 +165,32 @@ def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
     return jnp.sum(root[:, 0], dtype=jnp.float64 if root.dtype == jnp.float64 else jnp.float32)
 
 
-def count_fn(plan: CountingPlan):
-    """Returns jitted ``f(key) -> (maps, estimate)`` for one iteration."""
+def count_fn(plan: CountingPlan, batch: Optional[int] = None):
+    """Jitted per-iteration counter.
 
-    def f(key: jax.Array):
-        coloring = jax.random.randint(key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32)
-        maps = colorful_map_count(plan, coloring)
+    ``batch=None``: returns ``f(key) -> (maps, estimate)`` scalars for one
+    coloring (the original contract).  ``batch=B``: returns
+    ``f(key) -> (maps[B], estimates[B])`` evaluating B independent colorings
+    in one jit call — the colorings are embarrassingly parallel, so vmapping
+    the DP amortizes dispatch and SpMM-plan constant overheads across the
+    batch.
+    """
+    if batch is None:
+
+        def f(key: jax.Array):
+            coloring = jax.random.randint(
+                key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
+            )
+            maps = colorful_map_count(plan, coloring)
+            return maps, maps * plan.scale
+
+        return jax.jit(f)
+
+    def fb(key: jax.Array):
+        colorings = jax.random.randint(
+            key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
+        )
+        maps = jax.vmap(lambda c: colorful_map_count(plan, c))(colorings)
         return maps, maps * plan.scale
 
-    return jax.jit(f)
+    return jax.jit(fb)

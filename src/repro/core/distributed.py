@@ -53,6 +53,7 @@ from repro.comm import (
     grouped_exchange,
     ring_allgather_overlap,
 )
+from repro.compat import shard_map
 from repro.kernels import ops
 from .count_engine import CountingPlan
 from .graphs import Graph
@@ -409,7 +410,7 @@ def make_count_fn(
         P(data_axis),
         P(data_axis),
     )
-    mapped = jax.shard_map(
+    mapped = shard_map(
         sharded_fn, mesh=mesh, in_specs=in_specs, out_specs=iter_spec
     )
 

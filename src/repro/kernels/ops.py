@@ -33,10 +33,12 @@ import numpy as np
 from . import ref
 from .color_combine import color_combine_pallas
 from .flash_attention import flash_attention_pallas
-from .spmm_edgetile import spmm_block_pallas, spmm_gather_pallas
+from .fused_count import fused_count_pallas, fused_count_xla
+from .spmm_edgetile import spmm_block_pallas, spmm_edge_tile_pallas
 
 __all__ = [
     "on_tpu",
+    "resolve_impl",
     "pad_to",
     "SpmmPlan",
     "build_spmm_plan",
@@ -44,6 +46,7 @@ __all__ = [
     "CombineTables",
     "build_combine_tables",
     "color_combine",
+    "fused_count",
     "flash_attention",
 ]
 
@@ -52,10 +55,13 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(impl: str) -> str:
+def resolve_impl(impl: str) -> str:
     if impl == "auto":
         return "pallas" if on_tpu() else "xla"
     return impl
+
+
+_resolve = resolve_impl
 
 
 def pad_to(x: int, multiple: int) -> int:
@@ -71,9 +77,20 @@ def pad_to(x: int, multiple: int) -> int:
 class SpmmPlan:
     """Static preprocessing of a graph for the neighbor-sum op.
 
-    ``kind``: 'edges' (XLA scatter / Pallas gather) or 'blocks'
-    (block-dense Pallas).  All index arrays are np/jnp int32, padded; the
-    sentinel row is ``n`` (< n_pad).
+    ``kind``: 'edges' (XLA scatter / Pallas edge-tiled gather) or 'blocks'
+    (block-dense Pallas); ``"auto"`` at build time picks one from measured
+    patch density.  All index arrays are np/jnp int32, padded; the sentinel
+    row is ``n`` (< n_pad).
+
+    The 'edges' plan carries two layouts of the same edge list:
+
+    * flat ``rows``/``cols`` [E_pad] — XLA segment-sum path and oracles;
+    * slab ``slab_dst``/``slab_cols`` [NRB * slabs_per_block, tile_size] —
+      the paper's bounded neighbor-list tasks (§3.3): slabs of exactly
+      ``tile_size`` edges grouped under the ``row_tile``-row output block
+      of their destinations, consumed by ``spmm_edge_tile_pallas`` and the
+      fused SpMM->combine kernels.  ``slab_dst`` holds block-local dst rows
+      (-1 for pad slots), ``slab_cols`` global src rows (sentinel for pads).
     """
 
     kind: str
@@ -85,9 +102,53 @@ class SpmmPlan:
     block_cols: Optional[jax.Array] = None  # [NB]
     patches: Optional[jax.Array] = None  # [NB, VB, KB]
     block_size: int = 128
-    #: rows the kernel actually writes (zero-degree rows are never visited,
-    #: so their Pallas output is uninitialized and must be masked off)
+    #: rows the kernel actually writes (zero-degree rows are never visited
+    #: by the block kernel, so its output there must be masked off)
     written_mask: Optional[jax.Array] = None  # bool [n_pad]
+    # --- edge-slab layout (kind == 'edges') ---
+    slab_dst: Optional[jax.Array] = None  # [NRB * spb, tile_size]
+    slab_cols: Optional[jax.Array] = None  # [NRB * spb, tile_size]
+    slabs_per_block: int = 0
+    tile_size: int = 128
+    row_tile: int = 128
+    #: measured edges per occupied 128x128 patch (set by kind='auto')
+    patch_density: Optional[float] = None
+
+
+#: 'auto' picks the block-dense plan once occupied 128x128 patches average
+#: this many edges: at that density one patch matmul (128 rows x B lanes per
+#: nnz) costs about the same MXU time as the edge-slab scatter matmuls for
+#: the same edges, and the dense-patch storage (64 KB) stops dominating the
+#: slab metadata (8 B/edge).
+AUTO_DENSITY_THRESHOLD = 64.0
+
+
+def _build_slabs(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n: int,
+    n_pad: int,
+    tile_size: int,
+    row_tile: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Cut the (dst-sorted) edge list into uniform tile_size-edge slabs
+    grouped by 128-row destination block."""
+    nrb = n_pad // row_tile
+    blk = rows // row_tile
+    counts = np.bincount(blk, minlength=nrb)
+    spb = max(1, int(-(-counts.max(initial=0) // tile_size)))
+    slab_dst = np.full((nrb, spb * tile_size), -1, np.int32)
+    slab_cols = np.full((nrb, spb * tile_size), n, np.int32)  # zero sentinel
+    starts = np.zeros(nrb, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    pos = np.arange(len(rows)) - starts[blk]  # rows sorted => in-block rank
+    slab_dst[blk, pos] = (rows % row_tile).astype(np.int32)
+    slab_cols[blk, pos] = cols.astype(np.int32)
+    return (
+        slab_dst.reshape(nrb * spb, tile_size),
+        slab_cols.reshape(nrb * spb, tile_size),
+        spb,
+    )
 
 
 def build_spmm_plan(
@@ -98,16 +159,33 @@ def build_spmm_plan(
     kind: str = "edges",
     block_size: int = 128,
     tile_size: int = 128,
+    row_tile: int = 128,
 ) -> SpmmPlan:
     """Build a plan from a directed edge list (rows sorted nondecreasing).
 
-    ``tile_size`` pads the edge count (the paper's neighbor-list task size
-    ``s`` — every tile of ``tile_size`` edge slots is one uniform unit of
-    work).
+    ``tile_size`` is the paper's neighbor-list task size ``s`` — every slab
+    of ``tile_size`` edge slots is one uniform unit of work regardless of
+    degree skew.  ``kind="auto"`` measures the graph's density over occupied
+    128x128 adjacency patches and picks 'blocks' (dense-patch MXU SpMM) for
+    dense graphs, 'edges' (edge-tiled gather) for sparse ones — the
+    GraphBLAS-style storage/format adaptivity.
     """
     n_pad = pad_to(n + 1, 128)
     sentinel = n
     e = len(rows)
+    density = None
+    if kind == "auto":
+        if e:
+            occupied = len(
+                np.unique(
+                    (rows // block_size).astype(np.int64) * (n_pad // block_size)
+                    + cols // block_size
+                )
+            )
+            density = e / occupied
+        else:
+            density = 0.0
+        kind = "blocks" if density >= AUTO_DENSITY_THRESHOLD else "edges"
     if kind == "edges":
         e_pad = max(pad_to(e, tile_size), tile_size)
         r = np.full(e_pad, sentinel, np.int32)
@@ -116,6 +194,9 @@ def build_spmm_plan(
         c[:e] = cols
         written = np.zeros(n_pad, bool)
         written[r] = True
+        slab_dst, slab_cols, spb = _build_slabs(
+            np.asarray(rows), np.asarray(cols), n, n_pad, tile_size, row_tile
+        )
         return SpmmPlan(
             "edges",
             n,
@@ -123,6 +204,12 @@ def build_spmm_plan(
             rows=jnp.asarray(r),
             cols=jnp.asarray(c),
             written_mask=jnp.asarray(written),
+            slab_dst=jnp.asarray(slab_dst),
+            slab_cols=jnp.asarray(slab_cols),
+            slabs_per_block=spb,
+            tile_size=tile_size,
+            row_tile=row_tile,
+            patch_density=density,
         )
     if kind == "blocks":
         vb = kb = block_size
@@ -152,6 +239,7 @@ def build_spmm_plan(
             patches=jnp.asarray(patches),
             block_size=block_size,
             written_mask=jnp.asarray(written),
+            patch_density=density,
         )
     raise ValueError(f"unknown spmm plan kind {kind!r}")
 
@@ -171,10 +259,16 @@ def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
                 table[plan.cols], plan.rows, num_segments=plan.n_pad
             )
             return out
-        out = spmm_gather_pallas(
-            plan.rows, plan.cols, table, num_rows=plan.n_pad - 1, interpret=not on_tpu()
-        )[: plan.n_pad]
-        return jnp.where(plan.written_mask[:, None], out, 0)
+        # edge-tiled kernel writes every output block (pad slabs contribute
+        # zeros), so zero-degree rows come out correctly zeroed
+        return spmm_edge_tile_pallas(
+            plan.slab_dst,
+            plan.slab_cols,
+            table,
+            slabs_per_block=plan.slabs_per_block,
+            row_tile=plan.row_tile,
+            interpret=not on_tpu(),
+        )
     # blocks
     if impl == "xla":
         # dense-block einsum fallback (oracle for the block kernel)
@@ -214,13 +308,21 @@ class CombineTables:
     s_pad: int
 
 
-def build_combine_tables(k: int, t1: int, t2: int) -> CombineTables:
+def build_combine_tables(
+    k: int, t1: int, t2: int, *, lane: int = 128, sublane: int = 8
+) -> CombineTables:
+    """``lane``/``sublane`` set the column/row padding multiples.
+
+    The Pallas kernels need the TPU-native 128/8; the XLA paths work at any
+    width, and ``lane=1`` (true table widths) saves the 12.8x column-padding
+    waste of small tables (e.g. the k-wide leaf tables) on CPU/GPU.
+    """
     from repro.core.colorsets import split_tables
 
     idx1, idx2 = split_tables(k, t1, t2)
     s, j = idx1.shape
-    s_pad = pad_to(s, 128)
-    j_pad = pad_to(j, 8)
+    s_pad = pad_to(s, lane)
+    j_pad = pad_to(j, sublane)
     idx1_t = np.zeros((j_pad, s_pad), np.int32)
     idx2_t = np.zeros((j_pad, s_pad), np.int32)
     idx1_t[:j, :s] = idx1.T
@@ -291,6 +393,57 @@ def color_combine(
         tables.idx1_t,
         tables.idx2_t,
         num_splits=tables.j,
+        interpret=not on_tpu(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused SpMM -> combine (fine-grained pipeline, §3.2)
+# ---------------------------------------------------------------------------
+
+
+def fused_count(
+    plan: SpmmPlan,
+    left: jax.Array,  # [n_pad, A_pad]
+    right: jax.Array,  # [n_pad, B_pad]; rows >= plan.n must be zero
+    tables: CombineTables,
+    impl: str = "auto",
+) -> jax.Array:
+    """``out[v, s] = sum_j left[v, idx1[s,j]] * (A @ right)[v, idx2[s,j]]``
+    without materializing the full neighbor-sum table ``M = A @ right``.
+
+    Requires the edge-slab layout (``plan.kind == 'edges'``); a block plan
+    falls back to the two-step spmm + combine path.  Returns
+    ``[n_pad, S_pad]``; pad rows/cols are unspecified (engine masks).
+    """
+    impl = _resolve(impl)
+    if plan.slab_dst is None:
+        m = spmm(plan, right, impl=impl)
+        mask = (jnp.arange(plan.n_pad) < plan.n).astype(m.dtype)[:, None]
+        return color_combine(left, m * mask, tables, impl=impl)
+    if impl == "xla":
+        out = fused_count_xla(
+            plan.slab_dst,
+            plan.slab_cols,
+            left,
+            right,
+            tables.idx1,
+            tables.idx2,
+            row_tile=plan.row_tile,
+        )
+        if out.shape[1] < tables.s_pad:
+            out = jnp.pad(out, ((0, 0), (0, tables.s_pad - out.shape[1])))
+        return out
+    return fused_count_pallas(
+        plan.slab_dst,
+        plan.slab_cols,
+        left,
+        right,
+        tables.idx1_t,
+        tables.idx2_t,
+        num_splits=tables.j,
+        slabs_per_block=plan.slabs_per_block,
+        row_tile=plan.row_tile,
         interpret=not on_tpu(),
     )
 

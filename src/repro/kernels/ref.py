@@ -14,6 +14,7 @@ __all__ = [
     "spmm_ref",
     "spmm_segment_ref",
     "color_combine_ref",
+    "fused_count_ref",
     "flash_attention_ref",
 ]
 
@@ -50,6 +51,25 @@ def color_combine_ref(
     lg = left[:, idx1]  # [n, S, J]
     mg = m[:, idx2]  # [n, S, J]
     return jnp.einsum("vsj,vsj->vs", lg, mg)
+
+
+def fused_count_ref(
+    rows: jax.Array,
+    cols: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    idx1: jax.Array,
+    idx2: jax.Array,
+) -> jax.Array:
+    """Unfused composition oracle for the fused SpMM->combine kernels:
+    materialize the full neighbor sum ``M = A @ right``, then contract.
+
+    ``rows``/``cols``: directed edge list (flat layout, see
+    :func:`spmm_segment_ref`); output ``[n, S]`` with ``n = left.shape[0]``.
+    """
+    n = left.shape[0]
+    m = spmm_segment_ref(rows, cols, right, n - 1)[:n]
+    return color_combine_ref(left, m, idx1, idx2)
 
 
 def flash_attention_ref(

@@ -5,27 +5,34 @@ This is the second hotspot of the color-coding DP: for every directed edge
 embodying the paper's *neighbor-list partitioning* (§3.3) — bounded,
 uniform-size tasks independent of degree skew:
 
+``spmm_edge_tile_pallas``
+    Edge-tiled gather SpMM.  The directed edge list is partitioned into
+    *slabs* of exactly ``tile_size`` edges (the paper's bounded task size
+    ``s``), grouped under the 128-row output block their destinations fall
+    in; the grid is ``(row_blocks, slabs_per_block)`` with the slab axis
+    innermost so output-block revisits are consecutive and a ``j == 0``
+    first-visit check re-zeroes the resident accumulator.  Each grid step
+    gathers the slab's ``tile_size`` source rows from the VMEM-resident
+    table and scatters them into the output block with one
+    ``[rows, tile] x [tile, B]`` one-hot MXU matmul — a max-degree
+    "supernode" row simply owns many slabs, every task is the same two
+    dense ops.  Padded slab slots carry ``dst = -1`` (all-zero one-hot row)
+    and the zero sentinel source row, so they are arithmetic no-ops.
+    The whole count table is held resident in VMEM (constant index_map), so
+    this kernel is for tables up to a few MB; larger graphs take
+    ``spmm_block_pallas`` or the XLA scatter path.
+
 ``spmm_block_pallas``
     Block-dense SpMM.  The adjacency is tiled into dense 128x128 0/1
     patches over (dst-block, src-block); only nonzero patches are stored
     (coordinates ``block_rows``/``block_cols``, sorted by dst block).  Each
     grid step issues one MXU matmul ``patch @ C[src_block]`` and accumulates
-    into the resident output block.  A max-degree "supernode" row simply
-    owns many patches — every task is exactly one 128x128 matmul, the
-    MXU-aligned analogue of the paper's bounded task size ``s``.
-    Output-block revisits are consecutive (sorted coordinates), which Pallas
-    supports with read-modify-write + first-visit init.
+    into the resident output block.  Wins over the edge-tiled kernel when
+    occupied patches are dense enough that the 64 KB/patch storage and the
+    full 128x128 matmul beat per-edge slab metadata (``build_spmm_plan``'s
+    ``"auto"`` kind measures exactly this).
 
-``spmm_gather_pallas``
-    Scalar-prefetch row-gather (megablox-style): one directed edge per grid
-    step; the BlockSpec index_map reads the edge endpoints from prefetched
-    scalar arrays, DMA-ing row ``C[u]`` in and accumulating into resident
-    output row ``v`` (edges sorted by ``v`` => consecutive revisits).  Fully
-    general sparsity; DMA granularity is one table row (>= 512B for t >= 2
-    at k >= 10), documented as the fallback for graphs too sparse for
-    profitable 128x128 patches.
-
-Preprocessing helpers that build the patch/edge arrays live in ``ops.py``.
+Preprocessing helpers that build the slab/patch arrays live in ``ops.py``.
 """
 
 from __future__ import annotations
@@ -37,7 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["spmm_block_pallas", "spmm_gather_pallas"]
+__all__ = ["spmm_block_pallas", "spmm_edge_tile_pallas"]
 
 
 # ---------------------------------------------------------------------------
@@ -95,43 +102,62 @@ def spmm_block_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Scalar-prefetch row-gather SpMM (general-sparsity fallback)
+# Edge-tiled gather SpMM (general-sparsity path, tile_size edges per step)
 # ---------------------------------------------------------------------------
 
 
-def _gather_kernel(rows_ref, cols_ref, table_row_ref, out_ref):
-    e = pl.program_id(0)
-    row = rows_ref[e]
-    prev = rows_ref[jnp.maximum(e - 1, 0)]
-    first = jnp.logical_or(e == 0, row != prev)
+def _edge_tile_kernel(dst_ref, col_ref, table_ref, out_ref):
+    j = pl.program_id(1)
 
-    @pl.when(first)
+    @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += table_row_ref[...]
+    dst = dst_ref[0]  # [tile_size] int32 local dst row; -1 = pad slot
+    cols = col_ref[0]  # [tile_size] int32 global src row; sentinel = zero row
+    tab = table_ref[...]  # [n_pad, B] resident across the whole grid
+    gathered = jnp.take(tab, cols, axis=0).astype(jnp.float32)  # [tile, B]
+    row_tile = out_ref.shape[0]
+    onehot = (
+        dst[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], row_tile), 1)
+    ).astype(jnp.float32)  # [tile, rows]; pad slots are all-zero rows
+    # scatter-accumulate as one MXU matmul: out[r] += sum_i [dst_i == r] * C[col_i]
+    out_ref[...] += jax.lax.dot_general(
+        onehot,
+        gathered,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("num_rows", "interpret"))
-def spmm_gather_pallas(
-    rows: jax.Array,  # [E] int32 sorted by dst; sentinel = num_rows
-    cols: jax.Array,  # [E] int32; sentinel points at the zero row n_pad-1
-    table: jax.Array,  # [n_pad, B]
+@functools.partial(
+    jax.jit, static_argnames=("slabs_per_block", "row_tile", "interpret")
+)
+def spmm_edge_tile_pallas(
+    slab_dst: jax.Array,  # [NRB * spb, tile_size] int32 local dst (-1 pad)
+    slab_cols: jax.Array,  # [NRB * spb, tile_size] int32 global src
+    table: jax.Array,  # [n_pad, B]; rows >= n must be zero
     *,
-    num_rows: int,
+    slabs_per_block: int,
+    row_tile: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    e = rows.shape[0]
     n_pad, b = table.shape
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(e,),
-        in_specs=[pl.BlockSpec((1, b), lambda i, rows, cols: (cols[i], 0))],
-        out_specs=pl.BlockSpec((1, b), lambda i, rows, cols: (rows[i], 0)),
-    )
+    nrb = n_pad // row_tile
+    spb = slabs_per_block
+    num_slabs, tile = slab_dst.shape
+    assert num_slabs == nrb * spb, (num_slabs, nrb, spb)
+    grid = (nrb, spb)
     return pl.pallas_call(
-        _gather_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_rows + 1, b), table.dtype),
+        _edge_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
+            pl.BlockSpec((n_pad, b), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, b), table.dtype),
         interpret=interpret,
-    )(rows, cols, table)
+    )(slab_dst, slab_cols, table)

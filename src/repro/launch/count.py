@@ -5,6 +5,13 @@
 Synthesizes the configured RMAT graph, builds the distributed plan over the
 locally available devices (or 1), runs N coloring iterations through the
 selected communication mode and prints the (eps, delta) estimate.
+
+With one shard (``mode=single`` or a single device) the launcher skips
+shard_map entirely and drives the single-device engine's batched fused
+pipeline: ``count_fn(plan, batch=B)`` evaluates B colorings per jit call
+(``--batch``), with ``--fuse`` routing every internal node through the
+fused SpMM->combine kernel and ``--spmm-kind`` selecting the SpMM plan
+(``auto`` adapts edges/blocks to measured patch density).
 """
 
 from __future__ import annotations
@@ -17,31 +24,79 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import COUNTING_CONFIGS
-from repro.core import relabel_random, rmat
+from repro.core import build_counting_plan, count_fn, relabel_random, rmat
 from repro.core.distributed import build_distributed_plan, make_count_fn, shard_coloring
 from repro.core.estimator import median_of_means
 from repro.core.templates import template
+from repro.launch.mesh import make_mesh
+
+
+def _report(mode, shards, iters, dt, ests):
+    print(f"mode={mode} shards={shards}: {iters} colorings in {dt:.2f}s "
+          f"({dt / max(iters, 1) * 1e3:.1f} ms/coloring)")
+    print(f"estimate (median-of-means): {median_of_means(ests, 4):.6g}")
+    print(f"estimate (mean)           : {ests.mean():.6g}  "
+          f"RSD {ests.std() / max(ests.mean(), 1e-12):.2f}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="bench-small", choices=sorted(COUNTING_CONFIGS))
     ap.add_argument("--mode", default=None,
-                    choices=[None, "alltoall", "pipeline", "adaptive", "ring"])
+                    choices=[None, "alltoall", "pipeline", "adaptive", "ring",
+                             "single"])
     ap.add_argument("--iters", type=int, default=16)
     ap.add_argument("--group-factor", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="colorings per jit call on the single-device path")
+    ap.add_argument("--fuse", action="store_true",
+                    help="fused SpMM->combine (never materializes M)")
+    ap.add_argument("--spmm-kind", default="auto",
+                    choices=["auto", "edges", "blocks"])
     args = ap.parse_args()
 
     ccfg = COUNTING_CONFIGS[args.config]
     shards = min(ccfg.num_shards, jax.device_count())
-    mesh = jax.make_mesh((shards,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
     tree = template(ccfg.template)
     print(f"synthesizing RMAT: V={ccfg.num_vertices} E={ccfg.num_edges} "
           f"skew={ccfg.skew}")
     g = relabel_random(
         rmat(ccfg.num_vertices, ccfg.num_edges, skew=ccfg.skew, seed=0), seed=1
     )
+
+    # explicit distributed modes still run through shard_map on one device
+    # (a cheap smoke of those code paths); only mode=single or the default
+    # on a single-device host takes the batched single-device engine
+    if args.mode == "single" or (args.mode is None and shards == 1):
+        if args.batch < 1:
+            ap.error(f"--batch must be >= 1 (got {args.batch})")
+        # a block-dense plan has no edge slabs, so fused_count would fall
+        # back to the unfused path: when fusing, steer 'auto' to 'edges'
+        spmm_kind = args.spmm_kind
+        if args.fuse and spmm_kind == "auto":
+            spmm_kind = "edges"
+        plan = build_counting_plan(g, tree, spmm_kind=spmm_kind, fuse=args.fuse)
+        fused = args.fuse and plan.spmm_plan.slab_dst is not None
+        f = count_fn(plan, batch=args.batch)
+        # hand-rolled sampling loop rather than estimator.estimate_counts:
+        # this is a perf launcher, so compile must stay outside the timer,
+        # which needs the count_fn warm-started and reused across calls
+        n_calls = -(-args.iters // args.batch)
+        keys = jax.random.split(jax.random.key(0), n_calls)
+        f(keys[0])[0].block_until_ready()  # compile outside the timer
+        t0 = time.perf_counter()
+        ests = np.concatenate(
+            [np.asarray(f(k)[1], np.float64) for k in keys]
+        )
+        dt = time.perf_counter() - t0
+        # the timer covers n_calls * batch colorings (the last call may
+        # overshoot --iters); report per-coloring time on what actually ran
+        _report(f"single(batch={args.batch},fuse={fused},"
+                f"spmm={plan.spmm_plan.kind})", 1,
+                n_calls * args.batch, dt, ests[: args.iters])
+        return
+
+    mesh = make_mesh((shards,), ("data",))
     plan = build_distributed_plan(g, tree, shards)
     mode = args.mode or ccfg.mode
     f = make_count_fn(plan, mesh, mode=mode, group_factor=args.group_factor)
@@ -55,9 +110,7 @@ def main():
     counts = np.asarray(f(jnp.asarray(cols)))
     dt = time.perf_counter() - t0
     ests = counts * plan.scale
-    print(f"mode={mode} shards={shards}: {args.iters} colorings in {dt:.2f}s")
-    print(f"estimate (median-of-means): {median_of_means(ests, 4):.6g}")
-    print(f"estimate (mean)           : {ests.mean():.6g}  RSD {ests.std()/max(ests.mean(),1e-12):.2f}")
+    _report(mode, shards, args.iters, dt, ests)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, COUNTING_CONFIGS, get_arch  # noqa: E402
 from repro.configs.base import SHAPES, ShardingConfig  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
 
 FSDP_THRESHOLD = 2e9  # params above this get ZeRO-3 weight sharding
 
@@ -304,9 +304,7 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
     chips = 512 if multi_pod else 256
     if ccfg.mesh_kind == "flat":
         # graph over ALL chips; O(1)-HLO relay ring (beyond-paper mode)
-        mesh = jax.make_mesh(
-            (chips,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh((chips,), ("data",))
         num_shards = chips
         iter_axis = None
     else:

@@ -26,6 +26,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from .attention import attn_init, attention_block, init_kv_cache
 from .layers import Initializer, mlp_apply, mlp_init, rmsnorm
 from .moe import moe_block, moe_init
@@ -237,7 +238,7 @@ def _ffn_apply(p, x, cfg, shard, dtype):
     if fsdp:
         manual.add(fsdp)  # weight specs mention the FSDP axis even when the
         # batch is unsharded (long_500k b=1): it must be manual here too
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(pspecs, P(dp, None, None)),

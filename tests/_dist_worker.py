@@ -17,6 +17,10 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# version-compat shims: jax.sharding.AxisType / jax.shard_map are not present
+# on every supported JAX release (see repro.compat).
+from repro.compat import make_mesh, shard_map  # noqa: E402
+
 FAILURES = []
 
 
@@ -24,12 +28,6 @@ def check(name, ok, details=""):
     print(f"CHECK {name} {'PASS' if ok else 'FAIL'} {details}")
     if not ok:
         FAILURES.append(name)
-
-
-def make_mesh(shape, names):
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
 
 
 def test_ring_collectives():
@@ -46,7 +44,7 @@ def test_ring_collectives():
 
     # ring all-gather == lax.all_gather
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda a: ring_allgather(a[0], "x"),
             mesh=mesh,
             in_specs=P("x"),
@@ -66,7 +64,7 @@ def test_ring_collectives():
             a[0], "x", combine, jnp.zeros_like(a[0])
         )[None]
 
-    f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(x))
     want_each = sum((q + 1) * x[q] for q in range(8))
     check(
@@ -80,7 +78,7 @@ def test_ring_collectives():
     def rs(a):
         return ring_reduce_scatter(a[0], "x")[None]
 
-    f = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    f = jax.jit(shard_map(rs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(xs))
     want = xs.sum(axis=0)  # [chunk, 4, 16]; device p gets chunk p
     check("ring_reduce_scatter", np.allclose(got, want, atol=1e-4), f"max err {np.abs(got - want).max():.2e}")
@@ -88,7 +86,7 @@ def test_ring_collectives():
     def crs(a):
         return compressed_ring_reduce_scatter(a[0], "x")[None]
 
-    f = jax.jit(jax.shard_map(crs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    f = jax.jit(shard_map(crs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(xs))
     rel = np.abs(got - want).max() / np.abs(want).max()
     check("compressed_ring_reduce_scatter", rel < 0.05, f"rel err {rel:.3f}")
@@ -113,7 +111,7 @@ def test_grouped_exchange():
                 return fused_exchange(a[0], "x", consume, init)[None]
             return grouped_exchange(a[0], "x", consume, init, group_factor=g)[None]
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         return np.asarray(f(chunks))
 
     want = np.stack(
@@ -223,7 +221,7 @@ def test_moe_manual_vs_dense():
             "w_down": P("model") if moe_sharding == "ep" else P(None, "model", None),
         }
         f = jax.jit(
-            jax.shard_map(
+            shard_map(
                 body, mesh=mesh,
                 in_specs=(pspecs, P("data", None, None)),
                 out_specs=P("data", None, None),

@@ -16,7 +16,8 @@ from repro.core.graphs import edge_list
 from repro.kernels import ops, ref
 from repro.kernels.color_combine import color_combine_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.spmm_edgetile import spmm_block_pallas, spmm_gather_pallas
+from repro.kernels.fused_count import fused_count_pallas, fused_count_xla
+from repro.kernels.spmm_edgetile import spmm_block_pallas, spmm_edge_tile_pallas
 
 
 def _random_table(rng, n_pad, width, n_valid, dtype=np.float32):
@@ -26,20 +27,67 @@ def _random_table(rng, n_pad, width, n_valid, dtype=np.float32):
 
 
 class TestSpmmKernels:
-    @pytest.mark.parametrize("n,deg,width", [(100, 5.0, 128), (300, 8.0, 256), (64, 3.0, 384)])
-    def test_gather_kernel_matches_ref(self, n, deg, width):
+    @pytest.mark.parametrize(
+        "n,deg,width,tile",
+        [(100, 5.0, 128, 128), (300, 8.0, 256, 64), (64, 3.0, 384, 32)],
+    )
+    def test_edge_tile_kernel_matches_ref(self, n, deg, width, tile):
         g = erdos_renyi(n, deg, seed=n)
-        plan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges")
+        plan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges", tile_size=tile)
         rng = np.random.default_rng(0)
         table = _random_table(rng, plan.n_pad, width, g.n)
-        got = spmm_gather_pallas(
-            plan.rows, plan.cols, table, num_rows=plan.n_pad - 1, interpret=True
-        )[: plan.n_pad]
-        got = jnp.where(plan.written_mask[:, None], got, 0)
+        got = spmm_edge_tile_pallas(
+            plan.slab_dst,
+            plan.slab_cols,
+            table,
+            slabs_per_block=plan.slabs_per_block,
+            interpret=True,
+        )
         want = ref.spmm_segment_ref(plan.rows, plan.cols, table, plan.n_pad - 1)[
             : plan.n_pad
         ]
         np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-6)
+        # zero-degree and pad rows come out exactly zero (pad slabs no-op)
+        np.testing.assert_array_equal(np.asarray(got[g.n :]), 0.0)
+
+    def test_slab_layout_skewed_graph(self):
+        # a supernode row owns many slabs; every slab is still tile_size slots
+        g = rmat(200, 3000, skew=8, seed=3)
+        plan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges", tile_size=64)
+        assert plan.slab_dst.shape == (
+            (plan.n_pad // plan.row_tile) * plan.slabs_per_block,
+            64,
+        )
+        rng = np.random.default_rng(4)
+        table = _random_table(rng, plan.n_pad, 128, g.n)
+        got = spmm_edge_tile_pallas(
+            plan.slab_dst,
+            plan.slab_cols,
+            table,
+            slabs_per_block=plan.slabs_per_block,
+            interpret=True,
+        )
+        want = ref.spmm_segment_ref(plan.rows, plan.cols, table, plan.n_pad - 1)
+        np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-5)
+
+    def test_auto_plan_kind_adapts_to_density(self):
+        # dense small graph: occupied patches are heavy -> block-dense plan
+        dense = rmat(512, 30_000, skew=3, seed=1)
+        p_dense = ops.build_spmm_plan(*edge_list(dense), dense.n, kind="auto")
+        assert p_dense.kind == "blocks"
+        assert p_dense.patch_density >= ops.AUTO_DENSITY_THRESHOLD
+        # large sparse graph: patches nearly empty -> edge-tiled plan
+        sparse = erdos_renyi(5000, 3.0, seed=2)
+        p_sparse = ops.build_spmm_plan(*edge_list(sparse), sparse.n, kind="auto")
+        assert p_sparse.kind == "edges"
+        assert p_sparse.patch_density < ops.AUTO_DENSITY_THRESHOLD
+        # both dispatch paths agree with the oracle
+        rng = np.random.default_rng(5)
+        table = _random_table(rng, p_dense.n_pad, 128, dense.n)
+        got = ops.spmm(p_dense, table, impl="xla")
+        eplan = ops.build_spmm_plan(*edge_list(dense), dense.n, kind="edges")
+        want = ops.spmm(eplan, table, impl="xla")
+        np.testing.assert_allclose(got[: dense.n], want[: dense.n], rtol=1e-5)
 
     @pytest.mark.parametrize("n,deg,width", [(200, 6.0, 128), (500, 10.0, 256)])
     def test_block_kernel_matches_ref(self, n, deg, width):
@@ -110,6 +158,126 @@ class TestColorCombine:
             return acc
 
         np.testing.assert_allclose(chunked(), want, rtol=1e-5)
+
+
+def _iter_eqns(jaxpr):
+    """All equations of a jaxpr, recursing into sub-jaxprs (scan/cond/...)."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def subs(v):
+        if isinstance(v, Jaxpr):
+            return [v]
+        if isinstance(v, ClosedJaxpr):
+            return [v.jaxpr]
+        if isinstance(v, (tuple, list)):
+            return [s for item in v for s in subs(item)]
+        return []
+
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in subs(val):
+                yield from _iter_eqns(sub)
+
+
+class TestFusedCount:
+    """Fused SpMM->combine vs the unfused oracle, k in {3, 5, 7, 10}."""
+
+    CASES = [(3, 1, 1), (5, 2, 2), (7, 3, 2), (10, 4, 3)]
+
+    def _setup(self, k, t1, t2, n=150, deg=6.0, lane=128):
+        g = erdos_renyi(n, deg, seed=k)
+        plan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges")
+        tables = ops.build_combine_tables(k, t1, t2, lane=lane)
+        rng = np.random.default_rng(k)
+        a_pad = ops.pad_to(math.comb(k, t1), lane)
+        b_pad = ops.pad_to(math.comb(k, t2), lane)
+        left = _random_table(rng, plan.n_pad, a_pad, g.n)
+        right = _random_table(rng, plan.n_pad, b_pad, g.n)
+        return g, plan, tables, left, right
+
+    @pytest.mark.parametrize("k,t1,t2", CASES)
+    def test_pallas_matches_ref(self, k, t1, t2):
+        g, plan, tbl, left, right = self._setup(k, t1, t2)
+        want = ref.fused_count_ref(plan.rows, plan.cols, left, right, tbl.idx1, tbl.idx2)
+        got = fused_count_pallas(
+            plan.slab_dst,
+            plan.slab_cols,
+            left,
+            right,
+            tbl.idx1_t,
+            tbl.idx2_t,
+            num_splits=tbl.j,
+            slabs_per_block=plan.slabs_per_block,
+            interpret=True,
+        )
+        np.testing.assert_allclose(got[: g.n, : tbl.s], want[: g.n], rtol=1e-5)
+
+    @pytest.mark.parametrize("k,t1,t2", CASES)
+    def test_xla_matches_ref(self, k, t1, t2):
+        g, plan, tbl, left, right = self._setup(k, t1, t2, lane=1)
+        want = ref.fused_count_ref(plan.rows, plan.cols, left, right, tbl.idx1, tbl.idx2)
+        got = ops.fused_count(plan, left, right, tbl, impl="xla")
+        np.testing.assert_allclose(got[: g.n, : tbl.s], want[: g.n], rtol=1e-5)
+
+    def test_block_plan_falls_back(self):
+        # a block-dense plan has no edge slabs; the wrapper must still give
+        # the fused result via the two-step path
+        k, t1, t2 = 5, 2, 2
+        g = erdos_renyi(100, 6.0, seed=11)
+        eplan = ops.build_spmm_plan(*edge_list(g), g.n, kind="edges")
+        bplan = ops.build_spmm_plan(*edge_list(g), g.n, kind="blocks")
+        tbl = ops.build_combine_tables(k, t1, t2)
+        rng = np.random.default_rng(6)
+        left = _random_table(rng, eplan.n_pad, 128, g.n)
+        right = _random_table(rng, eplan.n_pad, 128, g.n)
+        want = ops.fused_count(eplan, left, right, tbl, impl="xla")
+        got = ops.fused_count(bplan, left, right, tbl, impl="xla")
+        np.testing.assert_allclose(got[: g.n, : tbl.s], want[: g.n, : tbl.s], rtol=1e-5)
+
+    def test_never_materializes_m(self):
+        """The fused jaxpr has no [n_pad, B] intermediate; the unfused one
+        does (which also proves the detector works)."""
+        k, t1, t2 = 7, 2, 2  # C(7,2)=21 != C(7,4)=35: B and S shapes distinct
+        g, plan, tbl, left, right = self._setup(k, t1, t2, n=300, deg=5.0, lane=1)
+        b = right.shape[1]
+        forbidden = (plan.n_pad, b)
+        # test validity: neither the output nor the per-block edge-slab
+        # gather may coincidentally have the forbidden shape
+        assert tbl.s != b
+        assert plan.slabs_per_block * plan.tile_size != plan.n_pad
+
+        def shapes_of(fn):
+            jaxpr = jax.make_jaxpr(fn)(left, right)
+            return [tuple(v.aval.shape) for e in _iter_eqns(jaxpr.jaxpr) for v in e.outvars]
+
+        fused = lambda l, r: ops.fused_count(plan, l, r, tbl, impl="xla")
+        mask = (jnp.arange(plan.n_pad) < plan.n).astype(jnp.float32)[:, None]
+        unfused = lambda l, r: ops.color_combine(
+            l, ops.spmm(plan, r, impl="xla") * mask, tbl, impl="xla"
+        )
+        assert forbidden in shapes_of(unfused)  # detector sanity
+        assert forbidden not in shapes_of(fused)
+
+        # the Pallas kernel only ever allocates M as a [row_tile, B] VMEM
+        # scratch: at the HBM level (top-level jaxpr; the interpret-mode
+        # kernel internals emulate VMEM with host arrays and are not HBM
+        # traffic) its only output is the [n_pad, S] table
+        fused_p = lambda l, r: fused_count_pallas(
+            plan.slab_dst,
+            plan.slab_cols,
+            l,
+            r,
+            tbl.idx1_t,
+            tbl.idx2_t,
+            num_splits=tbl.j,
+            slabs_per_block=plan.slabs_per_block,
+            interpret=True,
+        )
+        top = jax.make_jaxpr(fused_p)(left, right).jaxpr
+        top_shapes = [tuple(v.aval.shape) for e in top.eqns for v in e.outvars]
+        assert forbidden not in top_shapes
+        assert (plan.n_pad, tbl.s_pad) in top_shapes  # the fused output
 
 
 class TestFlashAttention:

@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

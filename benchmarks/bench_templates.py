@@ -12,7 +12,8 @@ import argparse
 
 import jax
 
-from repro.core import build_counting_plan, count_fn, rmat
+from repro.api import Counter
+from repro.core import rmat
 from repro.core.templates import TEMPLATE_TABLE3, partition_complexity, partition_tree, template
 
 from .common import emit, time_fn
@@ -42,10 +43,10 @@ def run(smoke: bool = False):
         names = BENCH_TEMPLATES
     for name in names:
         tr = template(name)
-        plan = build_counting_plan(g, tr)
-        f = count_fn(plan)
+        counter = Counter.from_graph(g, tr, backend="single")
+        sample = counter.sample_fn
         key = jax.random.key(0)
-        sec = time_fn(lambda: f(key), iters=2)
+        sec = time_fn(lambda: sample(key, 1), iters=2)
         emit(f"fig6/iter_time/{name}", sec * 1e6, f"V={g.n} E={g.num_edges}")
 
 

@@ -1,9 +1,12 @@
 """End-to-end distributed subgraph counting (the paper's workload).
 
-Runs the distributed color-coding engine over 8 host devices on an RMAT
-graph, comparing the paper's three communication modes (naive all-to-all /
-pipelined adaptive-group / adaptive switch) plus the beyond-paper relay
-ring, and prints per-mode wall-clock and the agreeing count estimates.
+Runs the unified ``Counter`` facade with ``backend="distributed"`` over 8
+host devices on an RMAT graph, comparing the paper's three communication
+modes (naive all-to-all / pipelined adaptive-group / adaptive switch) plus
+the beyond-paper relay ring.  Every mode uses the key-based contract —
+colorings are sampled on-device inside the shard_map — and reports through
+the shared (eps, delta) estimator, so the printed statistics are directly
+comparable across modes AND with the single-device backend.
 
 Run:  PYTHONPATH=src python examples/count_distributed.py [--template u5-2]
 (device count is set below, before jax imports)
@@ -17,15 +20,9 @@ import argparse  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
+from repro.api import Counter  # noqa: E402
 from repro.core import relabel_random, rmat  # noqa: E402
-from repro.core.distributed import (  # noqa: E402
-    build_distributed_plan,
-    make_count_fn,
-    shard_coloring,
-)
 from repro.core.templates import template  # noqa: E402
 
 
@@ -38,34 +35,26 @@ def main():
     args = ap.parse_args()
 
     shards = 8
-    from repro.launch.mesh import make_mesh
-
-    mesh = make_mesh((shards,), ("data",))
     g = relabel_random(rmat(args.vertices, args.edges, skew=3, seed=0), seed=1)
     tree = template(args.template)
     print(f"graph: {g.n} vertices, {g.num_edges} edges (skew {g.skewness():.0f}); "
           f"template {tree.name} (k={tree.n}); {shards} shards\n")
 
-    plan = build_distributed_plan(g, tree, shards)
-    rng = np.random.default_rng(0)
-    colorings = np.stack([
-        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))
-        for _ in range(args.iters)
-    ])
-
+    key = jax.random.key(0)
+    base = Counter.from_graph(
+        g, tree, backend="distributed", num_shards=shards, mode="alltoall"
+    )
     for mode, gf in (("alltoall", 1), ("pipeline", 1), ("pipeline", 3),
                      ("adaptive", 1), ("ring", 1)):
-        f = make_count_fn(plan, mesh, mode=mode, group_factor=gf)
-        counts = f(jnp.asarray(colorings))
-        jax.block_until_ready(counts)
+        # one plan build (edge bucketing) shared across all exchange modes
+        counter = base.with_options(mode=mode, group_factor=gf)
+        counter.sample_fn(key, args.iters)  # compile outside the timer
         t0 = time.perf_counter()
-        counts = f(jnp.asarray(colorings))
-        jax.block_until_ready(counts)
+        res = counter.estimate(n_iter=args.iters, key=key, batch=args.iters)
         dt = time.perf_counter() - t0
-        est = float(np.mean(np.asarray(counts))) * plan.scale
         label = f"{mode}(g={gf})" if mode == "pipeline" else mode
-        print(f"{label:<14} {dt * 1e3:8.1f} ms / {args.iters} colorings   "
-              f"estimate ~ {est:.4g}")
+        print(f"{label:<14} {dt * 1e3:8.1f} ms / {res.niter} colorings   "
+              f"estimate ~ {res.mean:.4g}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,16 @@
-"""Quickstart: count tree subgraphs in a graph with color-coding.
+"""Quickstart: count tree subgraphs in a graph with the Counter facade.
 
-Counts paths-of-4 (u3-1 is trivial; we use a 4-vertex star) in a small
-Erdos-Renyi graph, compares the (eps, delta) estimate with the exact count,
-and shows the paper's Table-3 complexity data for the big templates.
+Counts 4-vertex stars in a small Erdos-Renyi graph through the unified API
+(``repro.api.Counter``), compares the (eps, delta) estimate with the exact
+count, and shows the paper's Table-3 complexity data for the big templates.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
-from repro.core import build_counting_plan, erdos_renyi, estimate_counts
+from repro.api import Counter
+from repro.core import erdos_renyi
 from repro.core.brute_force import count_copies
 from repro.core.templates import (
     TEMPLATE_TABLE3,
@@ -25,9 +26,12 @@ def main():
     tree = star_tree(4)
     print(f"graph: {g.n} vertices, {g.num_edges} edges; template: {tree.name}")
 
-    plan = build_counting_plan(g, tree)
-    est = estimate_counts(plan, n_iter=150, key=jax.random.key(0))
+    # one facade over every backend; "auto" picks distributed when more
+    # than one device is visible, the in-core engine otherwise
+    counter = Counter.from_graph(g, tree, backend="auto")
+    est = counter.estimate(n_iter=150, key=jax.random.key(0))
     exact = count_copies(g, tree)
+    print(f"backend                : {est.backend}")
     print(f"exact count            : {exact:.0f}")
     print(f"color-coding estimate  : {est.estimate:.0f}  (mean {est.mean:.0f}, "
           f"RSD {est.relative_sd:.2f}, {est.niter} colorings)")

@@ -1,0 +1,396 @@
+"""Unified counting API: one ``Counter`` facade over every backend.
+
+The paper's workload is a single logical operation — estimate the number of
+copies of a tree template in a graph to (eps, delta) — so this module
+exposes exactly one front-end for it, regardless of where the counting
+runs:
+
+>>> from repro.api import Counter
+>>> counter = Counter.from_graph(g, "u5-2", backend="auto")
+>>> result = counter.estimate(n_iter=500, delta=0.1, key=jax.random.key(0))
+>>> result.estimate, result.relative_sd
+
+Backends
+--------
+``single``
+    The in-core engine (:mod:`repro.core.count_engine`): batched/fused
+    per-coloring DP on one device.
+``distributed``
+    The shard_map engine (:mod:`repro.core.distributed`): vertex-sharded
+    tables, pipelined adaptive-group exchange, colorings sampled on-device
+    from the iteration key.
+``auto``
+    ``distributed`` when more than one device is visible, else ``single``.
+
+Both backends are adapted to one protocol — ``sample_fn(key, batch) ->
+float64 [batch]`` per-coloring copy estimates — and every aggregate
+(median-of-means, RSD, progress) is computed by the shared estimator
+(:mod:`repro.core.estimator`), so the two stacks cannot drift apart in what
+they report.  New backends (multi-host, remote, cached) only need to
+implement ``sample_fn``.
+
+Plan construction is lazy: building a ``Counter`` is cheap; the first
+counting call builds and caches the backend plan and its jitted functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterator, Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.count_engine import build_counting_plan, colorful_map_count, plan_sample_fn
+from repro.core.estimator import estimate_counts, niter_bound
+from repro.core.graphs import Graph
+from repro.core.templates import Tree, template as resolve_template
+
+__all__ = ["CountRequest", "CountResult", "Counter", "run"]
+
+#: plan_opts understood by the single-device backend
+_SINGLE_OPTS = frozenset(
+    {"root", "spmm_kind", "impl", "fuse", "tile_size", "block_size", "lane"}
+)
+#: plan_opts understood by the distributed backend
+_DIST_OPTS = frozenset(
+    {"root", "tile_size", "num_shards", "mode", "group_factor", "impl",
+     "mesh", "data_axis", "iter_axis"}
+)
+#: opts consumed by build_distributed_plan (rest go to make_count_fn)
+_DIST_PLAN_OPTS = frozenset({"root", "tile_size", "num_shards"})
+
+
+@dataclasses.dataclass(frozen=True)
+class CountRequest:
+    """A fully-specified counting job: what to count, where, how hard.
+
+    ``plan_opts`` may carry options for either backend (e.g. a config row
+    resolves to one request usable as single OR distributed); the facade
+    selects the subset its chosen backend understands and rejects keys
+    neither backend knows.
+    """
+
+    graph: Graph
+    template: Union[str, Tree]
+    backend: str = "auto"
+    n_iter: Optional[int] = None
+    eps: Optional[float] = None
+    delta: float = 0.1
+    batch: Optional[int] = None
+    plan_opts: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class CountResult:
+    """Estimate plus the provenance needed to read it."""
+
+    estimate: float  # median-of-means copy estimate (the paper's output)
+    mean: float  # plain mean estimate
+    relative_sd: float  # empirical RSD of per-iteration estimates
+    niter: int
+    samples: np.ndarray  # per-iteration copy estimates
+    backend: str  # "single" | "distributed"
+    template: str
+    graph: str
+    delta: float
+    eps: Optional[float]
+    elapsed_s: float
+
+    def __str__(self) -> str:
+        return (
+            f"CountResult({self.template} in {self.graph or 'graph'}: "
+            f"{self.estimate:.6g} via {self.backend}, "
+            f"RSD {self.relative_sd:.2f}, {self.niter} colorings, "
+            f"{self.elapsed_s:.2f}s)"
+        )
+
+
+def _resolve_backend(backend: str, plan_opts: Mapping[str, Any]) -> str:
+    if backend == "auto":
+        # an explicit mesh is an unambiguous request for the sharded engine;
+        # otherwise shard only when this host actually has multiple devices
+        multi = plan_opts.get("mesh") is not None or jax.device_count() > 1
+        return "distributed" if multi else "single"
+    if backend not in ("single", "distributed"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+class Counter:
+    """Facade: one object that counts a template in a graph, anywhere.
+
+    Construct with :meth:`from_graph` (or :meth:`from_request`); then
+
+    * :meth:`estimate` — the (eps, delta) estimator (Algorithm 1);
+    * :meth:`count_one` — one coloring iteration from a key;
+    * :meth:`count_coloring` — exact colorful map count for a FIXED
+      coloring (backend-parity / oracle testing);
+    * :meth:`sample_stream` — endless stream of estimate batches for
+      incremental consumption and serving;
+    * :attr:`sample_fn` — the raw backend protocol, for compile warm-up
+      and for composing with external aggregators.
+    """
+
+    def __init__(self, graph: Graph, tree: Tree, backend: str,
+                 plan_opts: Dict[str, Any]):
+        self.graph = graph
+        self.tree = tree
+        self.backend = backend
+        self.plan_opts = plan_opts
+        self._plan = None
+        self._mesh = None
+        self._fn_kw: Dict[str, Any] = {}
+        self._sample_fn = None
+        self._coloring_fn = None  # fixed-coloring counter (parity/oracle)
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_graph(
+        cls,
+        graph: Graph,
+        template: Union[str, Tree],
+        *,
+        backend: str = "auto",
+        **plan_opts: Any,
+    ) -> "Counter":
+        """Build a counter for ``template`` (name or Tree) over ``graph``.
+
+        ``plan_opts`` may mix options of both backends; keys the resolved
+        backend does not understand are dropped (so one option set can feed
+        either backend), but keys unknown to BOTH backends raise.
+        """
+        unknown = set(plan_opts) - (_SINGLE_OPTS | _DIST_OPTS)
+        if unknown:
+            raise TypeError(f"unknown plan_opts: {sorted(unknown)}")
+        tree = resolve_template(template) if isinstance(template, str) else template
+        resolved = _resolve_backend(backend, plan_opts)
+        keep = _SINGLE_OPTS if resolved == "single" else _DIST_OPTS
+        opts = {k: v for k, v in plan_opts.items() if k in keep}
+        return cls(graph, tree, resolved, opts)
+
+    @classmethod
+    def from_request(cls, request: CountRequest) -> "Counter":
+        return cls.from_graph(
+            request.graph, request.template, backend=request.backend,
+            **dict(request.plan_opts),
+        )
+
+    def with_options(self, **overrides: Any) -> "Counter":
+        """A new Counter sharing this one's built plan, with different
+        exchange options (distributed backend only).
+
+        Plan construction (edge bucketing, request lists) is the expensive
+        host-side step; ``with_options(mode=..., group_factor=...)`` swaps
+        only the communication schedule — e.g. comparing all four exchange
+        modes costs one plan build, not four.
+        """
+        allowed = {"mode", "group_factor", "impl", "iter_axis"}
+        if self.backend != "distributed":
+            raise ValueError("with_options is for the distributed backend")
+        bad = set(overrides) - allowed
+        if bad:
+            raise TypeError(f"with_options only swaps {sorted(allowed)}; "
+                            f"got {sorted(bad)}")
+        self._build_distributed()
+        ax = overrides.get("iter_axis")
+        if ax and ax not in self._mesh.axis_names:
+            raise ValueError(
+                f"iter_axis {ax!r} is not an axis of the mesh "
+                f"{self._mesh.axis_names} — pass an explicit mesh containing "
+                f"it to from_graph"
+            )
+        clone = Counter(self.graph, self.tree, self.backend,
+                        {**self.plan_opts, **overrides})
+        clone._plan = self._plan
+        clone._mesh = self._mesh
+        clone._fn_kw = {**self._fn_kw, **overrides}
+        return clone
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def k(self) -> int:
+        return self.tree.n
+
+    def _build_single(self):
+        if self._plan is None:
+            self._plan = build_counting_plan(self.graph, self.tree, **self.plan_opts)
+        return self._plan
+
+    def _build_distributed(self):
+        if self._plan is None:
+            from repro.core.distributed import build_distributed_plan
+            from repro.launch.mesh import make_mesh
+
+            opts = dict(self.plan_opts)
+            mesh = opts.pop("mesh", None)
+            num_shards = opts.pop("num_shards", None)
+            plan_kw = {k: v for k, v in opts.items() if k in _DIST_PLAN_OPTS}
+            self._fn_kw = {k: v for k, v in opts.items() if k not in _DIST_PLAN_OPTS}
+            data_axis = self._fn_kw.get("data_axis", "data")
+            if mesh is not None:
+                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                num_shards = num_shards or sizes[data_axis]
+                if num_shards != sizes[data_axis]:
+                    raise ValueError(
+                        f"num_shards={num_shards} does not match the mesh's "
+                        f"{data_axis!r} axis size {sizes[data_axis]}"
+                    )
+            else:
+                # a config may ask for more shards than this host has
+                num_shards = min(num_shards or jax.device_count(),
+                                 jax.device_count())
+                mesh = make_mesh((num_shards,), (data_axis,))
+            ax = self._fn_kw.get("iter_axis")
+            if ax and ax not in mesh.axis_names:
+                raise ValueError(
+                    f"iter_axis {ax!r} is not an axis of the mesh "
+                    f"{mesh.axis_names} — pass an explicit mesh containing it"
+                )
+            self._mesh = mesh
+            self._plan = build_distributed_plan(
+                self.graph, self.tree, num_shards, **plan_kw
+            )
+        return self._plan
+
+    def _iter_size(self) -> int:
+        """Size of the iteration mesh axis (1 when colorings aren't sharded)."""
+        ax = self._fn_kw.get("iter_axis")
+        if not ax:
+            return 1
+        return dict(zip(self._mesh.axis_names, self._mesh.devices.shape))[ax]
+
+    @property
+    def sample_fn(self):
+        """The backend protocol: ``sample_fn(key, batch) -> float64 [batch]``.
+
+        Calling it once before timing a run warms the jit cache for that
+        batch size (compile stays outside the measurement).
+        """
+        if self._sample_fn is None:
+            if self.backend == "single":
+                self._sample_fn = plan_sample_fn(self._build_single())
+            else:
+                from repro.core.distributed import keyed_sample_fn
+
+                plan = self._build_distributed()
+                self._sample_fn = keyed_sample_fn(plan, self._mesh, **self._fn_kw)
+        return self._sample_fn
+
+    @property
+    def plan(self):
+        """The lazily-built backend plan (CountingPlan or DistributedPlan)."""
+        return (self._build_single() if self.backend == "single"
+                else self._build_distributed())
+
+    @property
+    def scale(self) -> float:
+        """k^k / k! / |Aut| — maps colorful map counts to copy estimates."""
+        return self.plan.scale
+
+    # ------------------------------------------------------------- counting
+    def estimate(
+        self,
+        n_iter: Optional[int] = None,
+        *,
+        eps: Optional[float] = None,
+        delta: float = 0.1,
+        key: Optional[jax.Array] = None,
+        batch: Optional[int] = None,
+        progress: bool = False,
+    ) -> CountResult:
+        """(eps, delta)-estimate of the copy count — Algorithm 1, any backend.
+
+        ``n_iter`` defaults to the worst-case ``niter_bound(k, eps, delta)``
+        when ``eps`` is given (beware: exponential in k); practical runs pass
+        an explicit budget and read the empirical RSD, as the paper does.
+        ``batch`` colorings are evaluated per backend dispatch (default 8).
+        """
+        if n_iter is None:
+            if eps is None:
+                raise ValueError("pass n_iter or eps (to derive the bound)")
+            n_iter = niter_bound(self.k, eps, delta)
+        if key is None:
+            key = jax.random.key(0)
+        b = batch or min(8, n_iter)
+        t0 = time.perf_counter()
+        est = estimate_counts(
+            self.sample_fn, n_iter, key, delta=delta, batch=b, progress=progress
+        )
+        elapsed = time.perf_counter() - t0
+        return CountResult(
+            estimate=est.estimate,
+            mean=est.mean,
+            relative_sd=est.relative_sd,
+            niter=est.niter,
+            samples=est.samples,
+            backend=self.backend,
+            template=self.tree.name,
+            graph=self.graph.name,
+            delta=delta,
+            eps=eps,
+            elapsed_s=elapsed,
+        )
+
+    def count_one(self, key: jax.Array) -> float:
+        """One coloring iteration: an unbiased copy estimate from ``key``."""
+        return float(self.sample_fn(key, 1)[0])
+
+    def count_coloring(self, coloring: np.ndarray) -> float:
+        """Exact colorful map count for a FIXED global coloring ``[n]``.
+
+        This is the deterministic quantity both backends must agree on bit
+        for bit (the backend-parity invariant); multiply by :attr:`scale`
+        for the per-iteration copy estimate.
+        """
+        coloring = np.asarray(coloring, np.int32).reshape(-1)
+        if coloring.shape[0] != self.graph.n:
+            raise ValueError(f"coloring has {coloring.shape[0]} entries, "
+                             f"graph has {self.graph.n} vertices")
+        if self.backend == "single":
+            plan = self._build_single()
+            col = np.zeros(plan.n_pad, np.int32)
+            col[: self.graph.n] = coloring
+            return float(colorful_map_count(plan, jnp.asarray(col)))
+        from repro.core.distributed import make_count_fn, shard_coloring
+
+        plan = self._build_distributed()
+        if self._coloring_fn is None:
+            self._coloring_fn = make_count_fn(plan, self._mesh, **self._fn_kw)
+        # replicate over the iteration axis (shard_map needs I divisible)
+        cols = np.broadcast_to(
+            shard_coloring(plan, coloring)[None],
+            (self._iter_size(), plan.num_shards, plan.n_loc_pad),
+        )
+        return float(np.asarray(self._coloring_fn(jnp.asarray(cols)))[0])
+
+    def sample_stream(
+        self, key: Optional[jax.Array] = None, *, batch: int = 8
+    ) -> Iterator[np.ndarray]:
+        """Endless stream of per-coloring estimate batches (float64 [batch]).
+
+        For incremental/serving use: consume until the caller's own
+        convergence criterion is met, feed a live dashboard, etc.  The key
+        is split per step, so the stream is reproducible from ``key``.
+        """
+        if key is None:
+            key = jax.random.key(0)
+        while True:
+            key, sub = jax.random.split(key)
+            yield self.sample_fn(sub, batch)
+
+
+def run(
+    request: CountRequest,
+    *,
+    key: Optional[jax.Array] = None,
+    progress: bool = False,
+) -> CountResult:
+    """One-shot: resolve a :class:`CountRequest` and run its estimate."""
+    counter = Counter.from_request(request)
+    return counter.estimate(
+        request.n_iter, eps=request.eps, delta=request.delta, key=key,
+        batch=request.batch, progress=progress,
+    )

@@ -17,10 +17,9 @@ each step has a distinct communication group; use the relay ring
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.compat import axis_size
 

@@ -9,7 +9,6 @@ use the scaled-down rows (CPU container).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 __all__ = ["CountingConfig", "COUNTING_CONFIGS", "PAPER_DATASETS"]
 
@@ -32,6 +31,47 @@ class CountingConfig:
     @property
     def avg_degree(self) -> float:
         return 2 * self.num_edges / self.num_vertices
+
+    def synthesize(self, seed: int = 0):
+        """Materialize the configured RMAT graph (randomly relabeled)."""
+        from repro.core.graphs import relabel_random, rmat
+
+        g = rmat(self.num_vertices, self.num_edges, skew=self.skew,
+                 seed=seed, name=self.name)
+        return relabel_random(g, seed=seed + 1)
+
+    def to_request(self, graph=None, *, backend: str = "auto",
+                   n_iter=None, eps=None, delta: float = 0.1, batch=None,
+                   **plan_opts):
+        """Resolve this config row to a ``repro.api.CountRequest``.
+
+        ``graph`` defaults to the synthesized RMAT dataset; pass a loaded
+        real graph (``load_edge_file``/``load_npz``) to run the same grid
+        row on real data.  The request carries both backends' options —
+        the ``Counter`` facade keeps whichever subset its resolved backend
+        understands — and ``plan_opts`` overrides/extends the config's own
+        (e.g. ``mode=...`` to try another exchange schedule, ``fuse=True``
+        for the single-device fused kernels).
+        """
+        from repro.api import CountRequest
+
+        if graph is None:
+            graph = self.synthesize()
+        return CountRequest(
+            graph=graph,
+            template=self.template,
+            backend=backend,
+            n_iter=n_iter,
+            eps=eps,
+            delta=delta,
+            batch=batch,
+            plan_opts={
+                "num_shards": self.num_shards,
+                "mode": self.mode,
+                "group_factor": self.group_factor,
+                **plan_opts,
+            },
+        )
 
 
 # Paper Table 2 datasets (name -> (V, E, source))

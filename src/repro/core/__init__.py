@@ -1,11 +1,15 @@
 """Core library: color-coding subgraph counting (the paper's contribution).
 
-Public API:
+Public API (most callers should go through the ``repro.api.Counter``
+facade, which wraps all of this behind one backend-agnostic interface):
   - templates: Tree, template(name), partition_tree, automorphism_count
-  - graphs: Graph, rmat, erdos_renyi, from_edges
-  - count_engine: build_counting_plan, colorful_map_count, count_fn
-  - estimator: estimate_counts, niter_bound
-  - distributed: build_distributed_plan, distributed_count_fn (shard_map)
+  - graphs: Graph, rmat, erdos_renyi, from_edges, load_edge_file,
+    save_npz/load_npz
+  - count_engine: build_counting_plan, colorful_map_count, count_fn,
+    plan_sample_fn (the backend sample_fn protocol)
+  - estimator: estimate_counts (plan OR sample_fn), niter_bound
+  - distributed: build_distributed_plan, make_count_fn (colorings- or
+    key-based), keyed_sample_fn (shard_map)
   - brute_force: exact oracles for testing
 """
 
@@ -21,11 +25,26 @@ from .templates import (  # noqa: F401
     star_tree,
     template,
 )
-from .graphs import Graph, erdos_renyi, from_edges, relabel_random, rmat  # noqa: F401
+from .graphs import (  # noqa: F401
+    Graph,
+    erdos_renyi,
+    from_edges,
+    load_edge_file,
+    load_npz,
+    relabel_random,
+    rmat,
+    save_npz,
+)
 from .count_engine import (  # noqa: F401
     CountingPlan,
     build_counting_plan,
     colorful_map_count,
     count_fn,
+    plan_sample_fn,
 )
-from .estimator import CountEstimate, estimate_counts, niter_bound  # noqa: F401
+from .estimator import (  # noqa: F401
+    CountEstimate,
+    estimate_counts,
+    niter_bound,
+    num_groups_for,
+)

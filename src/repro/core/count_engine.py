@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,13 @@ from repro.kernels import ops
 from .graphs import Graph, edge_list
 from .templates import PartitionChain, Tree, automorphism_count, partition_tree
 
-__all__ = ["CountingPlan", "build_counting_plan", "colorful_map_count", "count_fn"]
+__all__ = [
+    "CountingPlan",
+    "build_counting_plan",
+    "colorful_map_count",
+    "count_fn",
+    "plan_sample_fn",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,3 +200,24 @@ def count_fn(plan: CountingPlan, batch: Optional[int] = None):
         return maps, maps * plan.scale
 
     return jax.jit(fb)
+
+
+def plan_sample_fn(plan: CountingPlan):
+    """Adapt a single-device plan to the backend ``sample_fn`` protocol.
+
+    The protocol (shared with the distributed backend and consumed by
+    :func:`repro.core.estimator.estimate_counts`) is
+    ``sample_fn(key, batch) -> float64 [batch]`` copy estimates for ``batch``
+    independent colorings derived from ``key``.  Compiled ``count_fn``
+    closures are cached per batch size so repeated calls reuse the jit cache.
+    """
+    cache: Dict[int, object] = {}
+
+    def sample(key: jax.Array, batch: int) -> np.ndarray:
+        f = cache.get(batch)
+        if f is None:
+            f = cache[batch] = count_fn(plan, batch=batch)
+        _, est = f(key)
+        return np.asarray(est, np.float64).reshape(-1)
+
+    return sample

@@ -31,12 +31,18 @@ table; four exchange modes are provided:
 Iteration parallelism: the outer color-coding loop is embarrassingly
 parallel, so independent colorings shard over a second mesh axis
 (``iter_axis``), mirroring the paper's multi-node outer loop.
+
+Coloring sampling runs **on-device** when the key-based contract is used
+(``make_count_fn(..., keyed=True)`` / :func:`keyed_sample_fn`): each shard
+folds its data-axis index into the iteration key and draws only its own
+rows, giving the distributed backend the same ``f(key)`` interface as the
+single-device engine (see DESIGN.md §12).  Host-side colorings via
+:func:`shard_coloring` remain supported for fixed-coloring parity tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Dict, Optional
 
@@ -55,7 +61,6 @@ from repro.comm import (
 )
 from repro.compat import shard_map
 from repro.kernels import ops
-from .count_engine import CountingPlan
 from .graphs import Graph
 from .templates import PartitionChain, Tree, automorphism_count, partition_tree
 
@@ -63,6 +68,7 @@ __all__ = [
     "DistributedPlan",
     "build_distributed_plan",
     "make_count_fn",
+    "keyed_sample_fn",
     "shard_coloring",
 ]
 
@@ -255,12 +261,21 @@ def abstract_plan(
 
 
 def shard_coloring(plan: DistributedPlan, coloring: np.ndarray) -> np.ndarray:
-    """Global coloring [n] -> sharded layout [P, n_loc_pad]."""
-    out = np.zeros((plan.num_shards, plan.n_loc_pad), np.int32)
-    for p in range(plan.num_shards):
-        lo = p * plan.shard_size
-        hi = min((p + 1) * plan.shard_size, plan.n)
-        out[p, : hi - lo] = coloring[lo:hi]
+    """Global coloring [n] -> sharded layout [P, n_loc_pad].
+
+    One pad+reshape: the global array is zero-padded to ``P * shard_size``
+    (covering the ragged last shard), viewed as ``[P, shard_size]``, and
+    dropped into the first ``shard_size`` columns of the padded layout.
+    Kept exported for tests and host-side callers that bring their own
+    colorings; the keyed path (``make_count_fn(..., keyed=True)``) samples
+    directly on-device and never builds this layout.
+    """
+    Pn, ss = plan.num_shards, plan.shard_size
+    coloring = np.asarray(coloring, np.int32).reshape(-1)[: plan.n]
+    out = np.zeros((Pn, plan.n_loc_pad), np.int32)
+    padded = np.zeros(Pn * ss, np.int32)
+    padded[: plan.n] = coloring
+    out[:, :ss] = padded.reshape(Pn, ss)
     return out
 
 
@@ -297,19 +312,30 @@ def make_count_fn(
     impl: str = "xla",
     hockney: HockneyModel = V5E_ICI,
     return_raw: bool = False,
+    keyed: bool = False,
 ):
     """Build the jitted distributed count function.
 
-    Returns ``f(colorings) -> counts`` where ``colorings`` is int32
+    Default contract: ``f(colorings) -> counts`` where ``colorings`` is int32
     ``[I, P, n_loc_pad]`` (I = number of parallel coloring iterations,
     sharded over ``iter_axis`` when given) and ``counts`` is float32 [I]
     (colorful map counts; multiply by ``plan.scale`` for copy estimates).
+
+    ``keyed=True``: the same key-based contract as the single-device engine —
+    ``f(keys) -> counts`` where ``keys`` is a jax PRNG key array ``[I]`` (or
+    raw uint32 key data ``[I, 2]``).  Colorings are sampled **on-device**
+    inside the shard_map: each shard folds its ``data``-axis index into the
+    iteration key and draws its own ``[n_loc_pad]`` slice with
+    ``jax.random.randint`` — per-vertex colors stay iid uniform over ``k``
+    while no ``[n]`` host array, numpy loop, or host->device coloring
+    transfer exists at all.
 
     ``return_raw=True`` (dry-run): returns ``(jitted_fn, structs, in_shard)``
     where the fn takes all plan arrays as explicit arguments so the plan may
     hold ShapeDtypeStructs (see :func:`abstract_plan`); ``iter_axis`` may be
     a tuple of mesh axes.
     """
+    assert not (keyed and return_raw), "keyed and return_raw are exclusive"
     Pn = plan.num_shards
     n_loc_pad = plan.n_loc_pad
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -402,16 +428,37 @@ def make_count_fn(
         partials = jax.vmap(f)(colorings)  # [I_loc]
         return jax.lax.psum(partials, data_axis)
 
+    def sharded_fn_keyed(key_data, b_rows, b_cols_loc, b_cols_cmp, s_idx):
+        # local shapes: key_data [I_loc, 2] uint32; buckets [1, P, ...]
+        b_rows_l = b_rows[0]
+        b_cols_loc_l = b_cols_loc[0]
+        b_cols_cmp_l = b_cols_cmp[0]
+        s_idx_l = s_idx[0]
+        p = jax.lax.axis_index(data_axis)
+
+        def one(kd):
+            k = jax.random.fold_in(jax.random.wrap_key_data(kd), p)
+            col = jax.random.randint(k, (n_loc_pad,), 0, plan.k, dtype=jnp.int32)
+            return local_count(col, b_rows_l, b_cols_loc_l, b_cols_cmp_l, s_idx_l)
+
+        partials = jax.vmap(one)(key_data)  # [I_loc]
+        return jax.lax.psum(partials, data_axis)
+
     iter_spec = P(iter_axis) if iter_axis else P()
+    lead_spec = (
+        P(iter_axis) if keyed
+        else (P(iter_axis, data_axis) if iter_axis else P(None, data_axis))
+    )
     in_specs = (
-        P(iter_axis, data_axis) if iter_axis else P(None, data_axis),
+        lead_spec,
         P(data_axis),
         P(data_axis),
         P(data_axis),
         P(data_axis),
     )
     mapped = shard_map(
-        sharded_fn, mesh=mesh, in_specs=in_specs, out_specs=iter_spec
+        sharded_fn_keyed if keyed else sharded_fn,
+        mesh=mesh, in_specs=in_specs, out_specs=iter_spec,
     )
 
     if return_raw:
@@ -443,4 +490,41 @@ def make_count_fn(
             plan.send_idx,
         )
 
-    return f
+    if not keyed:
+        return f
+
+    def f_keyed(keys):
+        keys = jnp.asarray(keys)
+        if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+            keys = jax.random.key_data(keys)
+        return f(keys.astype(jnp.uint32))
+
+    return f_keyed
+
+
+def keyed_sample_fn(plan: DistributedPlan, mesh: jax.sharding.Mesh, **kw):
+    """Adapt a distributed plan to the backend ``sample_fn`` protocol.
+
+    Returns ``sample_fn(key, batch) -> float64 [batch]`` copy estimates —
+    the same contract :func:`repro.core.count_engine.plan_sample_fn` gives
+    the single-device engine, so :func:`repro.core.estimator.estimate_counts`
+    (and anything else speaking the protocol) runs unmodified on top of the
+    shard_map backend.  ``kw`` is forwarded to :func:`make_count_fn`
+    (mode/group_factor/axes/...).  Each call evaluates ``batch`` coloring
+    iterations in one jitted dispatch; jit caches per distinct batch size.
+    When colorings shard over ``iter_axis`` the key count is rounded up to
+    a multiple of the axis size (shard_map divisibility) and the surplus
+    estimates are discarded.
+    """
+    f = make_count_fn(plan, mesh, keyed=True, **kw)
+    iter_axis = kw.get("iter_axis")
+    isz = 1
+    if iter_axis:
+        isz = dict(zip(mesh.axis_names, mesh.devices.shape))[iter_axis]
+
+    def sample(key: jax.Array, batch: int) -> np.ndarray:
+        b = -(-batch // isz) * isz
+        counts = f(jax.random.split(key, b))
+        return np.asarray(counts, np.float64).reshape(-1)[:batch] * plan.scale
+
+    return sample

@@ -1,9 +1,18 @@
-"""(epsilon, delta)-estimation on top of the per-coloring DP.
+"""(epsilon, delta)-estimation over any counting backend.
 
 Each coloring iteration yields an unbiased estimate
 ``X_j = maps_j * k^k/k! / |Aut(T)|`` of the copy count.  Following the
 paper (Algorithm 1 line 14), ``Niter`` estimates are split into
 ``t = O(log 1/delta)`` groups; the output is the median of the group means.
+
+Backends plug in through one protocol: ``sample_fn(key, batch)`` returns
+``batch`` independent per-coloring copy estimates (float64 ``[batch]``)
+derived from a jax PRNG key.  :func:`estimate_counts` accepts either a
+single-device :class:`~repro.core.count_engine.CountingPlan` (adapted via
+:func:`~repro.core.count_engine.plan_sample_fn`) or any callable with that
+signature — e.g. :func:`repro.core.distributed.keyed_sample_fn` for the
+shard_map backend — so median-of-means, the RSD, and progress reporting are
+computed in exactly one place no matter where the counting ran.
 
 The worst-case bound ``Niter = O(e^k log(1/delta) / eps^2)`` is reported by
 :func:`niter_bound` but — exactly as in the paper's experiments — practical
@@ -14,20 +23,35 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Callable, Optional, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .count_engine import CountingPlan, count_fn
+from .count_engine import CountingPlan, plan_sample_fn
 
-__all__ = ["niter_bound", "median_of_means", "CountEstimate", "estimate_counts"]
+__all__ = [
+    "SampleFn",
+    "niter_bound",
+    "num_groups_for",
+    "median_of_means",
+    "CountEstimate",
+    "estimate_counts",
+]
+
+#: The backend protocol: ``sample_fn(key, batch) -> float64 [batch]`` copy
+#: estimates for ``batch`` independent colorings derived from ``key``.
+SampleFn = Callable[[jax.Array, int], np.ndarray]
 
 
 def niter_bound(k: int, eps: float, delta: float) -> int:
     """Worst-case iteration count from Alon et al. (reported, not enforced)."""
     return int(math.ceil(math.e ** k * math.log(1.0 / delta) / (eps ** 2)))
+
+
+def num_groups_for(delta: float, n_iter: int) -> int:
+    """Median-of-means group count: ``t = O(log 1/delta)``, clamped to n_iter."""
+    return max(1, min(int(round(math.log(1.0 / delta))), n_iter))
 
 
 def median_of_means(samples: np.ndarray, num_groups: int) -> float:
@@ -48,7 +72,7 @@ class CountEstimate:
 
 
 def estimate_counts(
-    plan: CountingPlan,
+    source: Union[CountingPlan, SampleFn],
     n_iter: int,
     key: jax.Array,
     *,
@@ -56,39 +80,33 @@ def estimate_counts(
     batch: Optional[int] = None,
     progress: bool = False,
 ) -> CountEstimate:
-    """Run ``n_iter`` independent colorings and aggregate.
+    """Run ``n_iter`` independent colorings and aggregate (Algorithm 1 l.14).
 
-    ``batch=B`` evaluates B colorings per jit call (see
-    :func:`repro.core.count_engine.count_fn`), amortizing dispatch overhead
-    over the embarrassingly-parallel outer loop; the estimate is identical
-    in distribution to the ``batch=None`` loop.
+    ``source`` is either a single-device :class:`CountingPlan` or any
+    ``sample_fn(key, batch)`` callable (the backend protocol above) — the
+    aggregation is backend-agnostic.  ``batch=B`` evaluates B colorings per
+    backend call, amortizing dispatch overhead over the embarrassingly
+    parallel outer loop; the estimate is identical in distribution to the
+    one-at-a-time loop.
     """
-    if batch is not None and batch > 1:
-        f = count_fn(plan, batch=batch)
-        n_calls = -(-n_iter // batch)
-        keys = jax.random.split(key, n_calls)
-        chunks = []
-        for i in range(n_calls):
-            _, est = f(keys[i])
-            chunks.append(np.asarray(est, np.float64))
-            if progress and (i + 1) % max(1, n_calls // 10) == 0:
-                done = np.concatenate(chunks)
-                print(
-                    f"  iter {min((i + 1) * batch, n_iter)}/{n_iter}: "
-                    f"running mean {done.mean():.6g}"
-                )
-        ests = np.concatenate(chunks)[:n_iter]
-    else:
-        f = count_fn(plan)
-        keys = jax.random.split(key, n_iter)
-        ests = np.zeros(n_iter, np.float64)
-        for i in range(n_iter):
-            _, est = f(keys[i])
-            ests[i] = float(est)
-            if progress and (i + 1) % max(1, n_iter // 10) == 0:
-                print(f"  iter {i + 1}/{n_iter}: running mean {ests[: i + 1].mean():.6g}")
-    num_groups = max(1, int(round(math.log(1.0 / delta))))
-    mom = median_of_means(ests, num_groups)
+    sample = source if callable(source) else plan_sample_fn(source)
+    b = batch if batch is not None and batch > 1 else 1
+    n_calls = -(-n_iter // b)
+    keys = jax.random.split(key, n_calls)
+    chunks = []
+    done = 0
+    for i in range(n_calls):
+        est = np.asarray(sample(keys[i], b), np.float64).reshape(-1)
+        chunks.append(est)
+        done += len(est)
+        if progress and (i + 1) % max(1, n_calls // 10) == 0:
+            cur = np.concatenate(chunks)
+            print(
+                f"  iter {min(done, n_iter)}/{n_iter}: "
+                f"running mean {cur.mean():.6g}"
+            )
+    ests = np.concatenate(chunks)[:n_iter]
+    mom = median_of_means(ests, num_groups_for(delta, n_iter))
     mean = float(ests.mean())
     rsd = float(ests.std() / mean) if mean != 0 else float("inf")
     return CountEstimate(mom, mean, rsd, ests, n_iter)

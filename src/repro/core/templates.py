@@ -23,9 +23,8 @@ exactly match Table 3 (see ``tools/find_templates.py``).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 __all__ = [
     "Tree",

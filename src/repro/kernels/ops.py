@@ -23,7 +23,6 @@ Padding conventions (hardware-true even in interpret mode):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 import jax

@@ -2,16 +2,19 @@
 
 ``python -m repro.launch.count --config bench-small --mode adaptive``
 
-Synthesizes the configured RMAT graph, builds the distributed plan over the
-locally available devices (or 1), runs N coloring iterations through the
-selected communication mode and prints the (eps, delta) estimate.
+Resolves the configured graph (synthesized RMAT, or a real dataset via
+``--graph edges.txt|graph.npz``) into a ``repro.api.CountRequest`` and runs
+it through the unified ``Counter`` facade: the same key-based contract,
+on-device coloring sampling, and (eps, delta) estimator on BOTH backends.
 
-With one shard (``mode=single`` or a single device) the launcher skips
-shard_map entirely and drives the single-device engine's batched fused
-pipeline: ``count_fn(plan, batch=B)`` evaluates B colorings per jit call
-(``--batch``), with ``--fuse`` routing every internal node through the
-fused SpMM->combine kernel and ``--spmm-kind`` selecting the SpMM plan
-(``auto`` adapts edges/blocks to measured patch density).
+``--mode single`` (or the default on a single-device host) drives the
+in-core batched/fused engine (``--batch``/``--fuse``/``--spmm-kind``);
+any other mode drives the shard_map engine with that exchange schedule.
+Either way the report comes from one place — the shared estimator — so the
+median-of-means (over ``log(1/delta)`` groups), mean, and RSD are computed
+identically no matter where the counting ran.  Compilation is warmed
+outside the timer via ``counter.sample_fn``, so the printed wall-clock is
+pure counting.
 """
 
 from __future__ import annotations
@@ -20,97 +23,93 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.api import Counter
 from repro.configs import COUNTING_CONFIGS
-from repro.core import build_counting_plan, count_fn, relabel_random, rmat
-from repro.core.distributed import build_distributed_plan, make_count_fn, shard_coloring
-from repro.core.estimator import median_of_means
-from repro.core.templates import template
-from repro.launch.mesh import make_mesh
+from repro.core import load_edge_file, load_npz
+from repro.core.estimator import num_groups_for
 
 
-def _report(mode, shards, iters, dt, ests):
-    print(f"mode={mode} shards={shards}: {iters} colorings in {dt:.2f}s "
-          f"({dt / max(iters, 1) * 1e3:.1f} ms/coloring)")
-    print(f"estimate (median-of-means): {median_of_means(ests, 4):.6g}")
-    print(f"estimate (mean)           : {ests.mean():.6g}  "
-          f"RSD {ests.std() / max(ests.mean(), 1e-12):.2f}")
+def _report(label, shards, res, dt, ran):
+    # the timer covers every coloring that actually executed (the last
+    # batched dispatch may overshoot --iters); the statistics use --iters
+    print(f"mode={label} shards={shards}: {ran} colorings in {dt:.2f}s "
+          f"({dt / max(ran, 1) * 1e3:.1f} ms/coloring)")
+    groups = num_groups_for(res.delta, res.niter)
+    print(f"estimate (median-of-means, {groups} groups): {res.estimate:.6g}")
+    print(f"estimate (mean)           : {res.mean:.6g}  RSD {res.relative_sd:.2f}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="bench-small", choices=sorted(COUNTING_CONFIGS))
+    ap.add_argument("--graph", default=None, metavar="PATH",
+                    help="real dataset (.npz from save_npz, else an edge-list "
+                         "text file); default: synthesize the config's RMAT")
     ap.add_argument("--mode", default=None,
                     choices=[None, "alltoall", "pipeline", "adaptive", "ring",
                              "single"])
     ap.add_argument("--iters", type=int, default=16)
+    ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--group-factor", type=int, default=1)
     ap.add_argument("--batch", type=int, default=8,
-                    help="colorings per jit call on the single-device path")
+                    help="colorings per jit dispatch (both backends)")
     ap.add_argument("--fuse", action="store_true",
                     help="fused SpMM->combine (never materializes M)")
     ap.add_argument("--spmm-kind", default="auto",
                     choices=["auto", "edges", "blocks"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1 (got {args.batch})")
 
     ccfg = COUNTING_CONFIGS[args.config]
-    shards = min(ccfg.num_shards, jax.device_count())
-    tree = template(ccfg.template)
-    print(f"synthesizing RMAT: V={ccfg.num_vertices} E={ccfg.num_edges} "
-          f"skew={ccfg.skew}")
-    g = relabel_random(
-        rmat(ccfg.num_vertices, ccfg.num_edges, skew=ccfg.skew, seed=0), seed=1
-    )
+    if args.graph:
+        g = load_npz(args.graph) if args.graph.endswith(".npz") \
+            else load_edge_file(args.graph)
+        print(f"loaded {g.name}: V={g.n} E={g.num_edges} skew={g.skewness():.0f}")
+    else:
+        print(f"synthesizing RMAT: V={ccfg.num_vertices} E={ccfg.num_edges} "
+              f"skew={ccfg.skew}")
+        g = ccfg.synthesize()
 
-    # explicit distributed modes still run through shard_map on one device
-    # (a cheap smoke of those code paths); only mode=single or the default
-    # on a single-device host takes the batched single-device engine
-    if args.mode == "single" or (args.mode is None and shards == 1):
-        if args.batch < 1:
-            ap.error(f"--batch must be >= 1 (got {args.batch})")
+    single = args.mode == "single" or (args.mode is None and jax.device_count() == 1)
+    if single:
         # a block-dense plan has no edge slabs, so fused_count would fall
         # back to the unfused path: when fusing, steer 'auto' to 'edges'
         spmm_kind = args.spmm_kind
         if args.fuse and spmm_kind == "auto":
             spmm_kind = "edges"
-        plan = build_counting_plan(g, tree, spmm_kind=spmm_kind, fuse=args.fuse)
-        fused = args.fuse and plan.spmm_plan.slab_dst is not None
-        f = count_fn(plan, batch=args.batch)
-        # hand-rolled sampling loop rather than estimator.estimate_counts:
-        # this is a perf launcher, so compile must stay outside the timer,
-        # which needs the count_fn warm-started and reused across calls
-        n_calls = -(-args.iters // args.batch)
-        keys = jax.random.split(jax.random.key(0), n_calls)
-        f(keys[0])[0].block_until_ready()  # compile outside the timer
-        t0 = time.perf_counter()
-        ests = np.concatenate(
-            [np.asarray(f(k)[1], np.float64) for k in keys]
+        request = ccfg.to_request(
+            g, backend="single", n_iter=args.iters, delta=args.delta,
+            batch=args.batch, spmm_kind=spmm_kind, fuse=args.fuse,
         )
-        dt = time.perf_counter() - t0
-        # the timer covers n_calls * batch colorings (the last call may
-        # overshoot --iters); report per-coloring time on what actually ran
-        _report(f"single(batch={args.batch},fuse={fused},"
-                f"spmm={plan.spmm_plan.kind})", 1,
-                n_calls * args.batch, dt, ests[: args.iters])
-        return
+    else:
+        request = ccfg.to_request(
+            g, backend="distributed", n_iter=args.iters, delta=args.delta,
+            batch=args.batch, mode=args.mode or ccfg.mode,
+            group_factor=args.group_factor,
+        )
+    counter = Counter.from_request(request)
+    if single:
+        shards = 1
+        # fusion needs the edge-slab layout; report whether it engaged
+        fused = args.fuse and counter.plan.spmm_plan.slab_dst is not None
+        label = (f"single(batch={args.batch},fuse={fused},"
+                 f"spmm={counter.plan.spmm_plan.kind})")
+    else:
+        shards = counter.plan.num_shards
+        label = request.plan_opts["mode"]
 
-    mesh = make_mesh((shards,), ("data",))
-    plan = build_distributed_plan(g, tree, shards)
-    mode = args.mode or ccfg.mode
-    f = make_count_fn(plan, mesh, mode=mode, group_factor=args.group_factor)
-
-    rng = np.random.default_rng(0)
-    cols = np.stack([
-        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))
-        for _ in range(args.iters)
-    ])
+    key = jax.random.key(args.seed)
+    counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
-    counts = np.asarray(f(jnp.asarray(cols)))
+    res = counter.estimate(
+        n_iter=request.n_iter, delta=request.delta, key=key, batch=request.batch
+    )
     dt = time.perf_counter() - t0
-    ests = counts * plan.scale
-    _report(mode, shards, args.iters, dt, ests)
+    ran = -(-args.iters // args.batch) * args.batch
+    _report(label, shards, res, dt, ran)
 
 
 if __name__ == "__main__":

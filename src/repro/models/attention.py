@@ -12,7 +12,6 @@ q reshaped to [B, Hkv, G, L, D] against k/v [B, Hkv, L, D].
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -18,7 +18,6 @@ over ``model`` (kv-head counts don't divide the axis).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -26,14 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec, ShardingConfig
-from .transformer import (
-    cache_buffer_len,
-    encode,
-    forward,
-    init_caches,
-    init_params,
-    layer_plan,
-)
+from .transformer import cache_buffer_len, encode, forward, init_caches, init_params
 
 __all__ = ["Model", "build_model", "chunked_ce_loss"]
 

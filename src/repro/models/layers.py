@@ -8,7 +8,6 @@ f32; casts happen at use sites), matching mixed-precision training.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ depth) for train/prefill and a single fused step for decode.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ the test oracle.  Decode carries (state S, last token x) per layer.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

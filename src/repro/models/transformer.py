@@ -20,8 +20,7 @@ Caches/states mirror the layer structure ({'groups': {pos_j: stacked},
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

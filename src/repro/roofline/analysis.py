@@ -22,7 +22,7 @@ import dataclasses
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 __all__ = ["RooflineTerms", "analyze_record", "analyze_dir", "format_table"]
 

@@ -8,7 +8,7 @@ generation runs greedy or with temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

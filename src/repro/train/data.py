@@ -9,11 +9,10 @@ Tokens follow a Zipfian-ish distribution (realistic softmax/embedding load).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["DataConfig", "synthetic_batch", "data_iterator"]
 

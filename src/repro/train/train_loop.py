@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import signal
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax

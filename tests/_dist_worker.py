@@ -125,7 +125,7 @@ def test_grouped_exchange():
 
 
 def test_distributed_counting():
-    from repro.core import build_counting_plan, colorful_map_count, erdos_renyi
+    from repro.core import erdos_renyi
     from repro.core.brute_force import count_colorful_maps
     from repro.core.distributed import (
         build_distributed_plan,
@@ -170,6 +170,73 @@ def test_distributed_counting():
                     ok,
                     f"got {got[0]} want {want}",
                 )
+
+
+def test_unified_api():
+    """Counter facade over 8 real shards: fixed-coloring parity with the
+    single-device backend, and the keyed on-device sampling path agreeing
+    with the brute-force oracle through the shared estimator."""
+    from repro.api import Counter
+    from repro.core import erdos_renyi
+    from repro.core.brute_force import count_colorful_maps, count_copies
+    from repro.core.distributed import make_count_fn
+    from repro.core.templates import path_tree, spider_tree
+
+    g = erdos_renyi(97, 5.0, seed=7)  # ragged shard sizes on purpose
+    rng = np.random.default_rng(11)
+
+    # parity: single vs 8-shard distributed on a fixed coloring
+    for tree, tname in ((path_tree(4), "p4"), (spider_tree([2, 1]), "sp21")):
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+        single = Counter.from_graph(g, tree, backend="single")
+        dist = Counter.from_graph(
+            g, tree, backend="distributed", num_shards=8, mode="adaptive"
+        )
+        got_s = single.count_coloring(coloring)
+        got_d = dist.count_coloring(coloring)
+        ok = np.allclose([got_s, got_d], want, rtol=1e-6)
+        check(f"api_parity_{tname}_P8", ok, f"single {got_s} dist {got_d} want {want}")
+
+    # keyed estimate: on-device coloring sampling, estimator vs oracle
+    tree = path_tree(3)
+    truth = count_copies(g, tree)
+    dist = Counter.from_graph(
+        g, tree, backend="distributed", num_shards=8, mode="pipeline"
+    )
+    res = dist.estimate(n_iter=192, key=jax.random.key(0), batch=32)
+    rel = abs(res.mean - truth) / truth
+    check("api_keyed_estimate_P8", rel < 0.25,
+          f"mean {res.mean:.1f} truth {truth:.1f} rel {rel:.2f}")
+
+    # keyed fn over a 4x2 mesh: iteration axis shards the keys
+    from repro.core.distributed import build_distributed_plan
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan4 = build_distributed_plan(g, tree, 4)
+    fk = make_count_fn(plan4, mesh, mode="ring", iter_axis="model", keyed=True)
+    counts = np.asarray(fk(jax.random.split(jax.random.key(5), 6)))
+    ests = counts * plan4.scale
+    rel = abs(ests.mean() - truth) / truth
+    check("api_keyed_iter_axis", counts.shape == (6,) and rel < 0.6,
+          f"ests mean {ests.mean():.1f} truth {truth:.1f}")
+
+    # facade over an explicit 4x2 mesh: num_shards derived from the data
+    # axis, count_coloring replicated over the iter axis, estimate rounding
+    # an odd batch up to the iter-axis multiple
+    fc = Counter.from_graph(
+        g, tree, backend="distributed", mesh=mesh, iter_axis="model",
+        mode="pipeline",
+    )
+    coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+    want = count_colorful_maps(g, tree, coloring)
+    got = fc.count_coloring(coloring)
+    check("api_mesh_count_coloring", np.allclose(got, want), f"got {got} want {want}")
+    res = fc.estimate(n_iter=5, key=jax.random.key(6), batch=5)  # 5 % 2 != 0
+    rel = abs(res.mean - truth) / truth
+    check("api_mesh_estimate_odd_batch",
+          res.niter == 5 and len(res.samples) == 5 and rel < 1.0,
+          f"mean {res.mean:.1f} truth {truth:.1f}")
 
 
 def test_moe_manual_vs_dense():
@@ -268,6 +335,7 @@ def main():
     test_ring_collectives()
     test_grouped_exchange()
     test_distributed_counting()
+    test_unified_api()
     test_moe_manual_vs_dense()
     test_elastic_restore()
     if FAILURES:

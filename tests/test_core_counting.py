@@ -22,7 +22,7 @@ from repro.core import (
     star_tree,
     template,
 )
-from repro.core.brute_force import count_colorful_maps, count_copies, count_embedding_maps
+from repro.core.brute_force import count_colorful_maps, count_copies
 from repro.core.estimator import estimate_counts
 from repro.core.templates import (
     TEMPLATE_TABLE3,

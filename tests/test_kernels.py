@@ -16,7 +16,7 @@ from repro.core.graphs import edge_list
 from repro.kernels import ops, ref
 from repro.kernels.color_combine import color_combine_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fused_count import fused_count_pallas, fused_count_xla
+from repro.kernels.fused_count import fused_count_pallas
 from repro.kernels.spmm_edgetile import spmm_block_pallas, spmm_edge_tile_pallas
 
 

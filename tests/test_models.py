@@ -11,8 +11,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_arch
-from repro.models import build_model, init_params
-from repro.models.transformer import cache_buffer_len, forward, init_caches
+from repro.models import build_model
+from repro.models.transformer import forward
 
 ALL_ARCHS = sorted(ARCHS)
 

@@ -7,7 +7,6 @@ color-set algebra, partition chains, graph substrate, and estimator math.
 
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,33 +1,49 @@
 """Paper Fig. 11 + §3.3: neighbor-list partitioning under degree skew.
 
-Two measurements:
-  * structural — per-tile load balance: with fixed-size edge tiles, the
-    padding waste (padded slots / real edges) is bounded for every skew,
-    while per-vertex tasks have max/mean task-size ratios equal to the
-    graph skewness (the thread-imbalance the paper fixes);
-  * wall-clock — single-device counting time across RMAT skew 1/3/8 and a
-    task-size (tile) sweep, reproducing the paper's 40-60 sweet spot study
-    (on TPU the tile is the Pallas block; on CPU the XLA segment width).
+Three measurements:
+  * structural (single-device) — per-tile load balance: with fixed-size
+    edge tiles, the padding waste (padded slots / real edges) is bounded
+    for every skew, while per-vertex tasks have max/mean task-size ratios
+    equal to the graph skewness (the thread-imbalance the paper fixes);
+  * structural (distributed) — bucket-array padding waste of the seed's
+    global-max layout ([P, P, max_e]: every (src, dst)-shard bucket padded
+    to the largest) vs the tiled layout (fixed-size tiles + CSR offsets,
+    O(E + tiles)) across RMAT skew 1/3/8 under the paper's random
+    partition;
+  * wall-clock — single-device counting time across the same skews.
+
+``run()`` emits the usual CSV lines and returns a dict; ``main()`` writes
+``BENCH_load_balance.json`` at the repo root (like ``BENCH_kernels.json``)
+so the per-PR load-balance trajectory is machine-readable.
 """
 
 from __future__ import annotations
 
-import jax
-import numpy as np
+import argparse
+import json
+import os
 
-from repro.core import build_counting_plan, count_fn, rmat
+import jax
+
+from repro.core import build_counting_plan, count_fn, relabel_random, rmat
+from repro.core.distributed import build_distributed_plan
 from repro.core.graphs import edge_list
 from repro.core.templates import template
 from repro.kernels import ops
 
-from .common import emit, time_fn
+from .common import ROOT, emit, time_fn
+
+JSON_PATH = os.path.join(ROOT, "BENCH_load_balance.json")
 
 
-def run():
+def bench_single_device(smoke=False):
     tree = template("u5-2")
+    out = {}
+    v, e = (1 << 10, 10_000) if smoke else (1 << 13, 80_000)
     for skew in (1, 3, 8):
-        g = rmat(1 << 13, 80_000, skew=skew, seed=skew)
-        deg = g.degrees()
+        g = rmat(v, e, skew=skew, seed=skew)
+        rec = {"imbalance": g.skewness(), "max_deg": g.max_degree,
+               "tiles": {}}
         # per-vertex tasks: imbalance = max/mean (paper's pathology)
         emit(
             f"fig11/per_vertex_imbalance/skew{skew}",
@@ -40,6 +56,7 @@ def run():
             rows, cols = edge_list(g)
             plan = ops.build_spmm_plan(rows, cols, g.n, tile_size=s)
             waste = plan.rows.shape[0] / max(len(rows), 1) - 1.0
+            rec["tiles"][s] = {"pad_frac": waste}
             emit(
                 f"fig11/edge_tile_waste/skew{skew}/s{s}",
                 0.0,
@@ -50,11 +67,89 @@ def run():
         f = count_fn(plan)
         key = jax.random.key(0)
         sec = time_fn(lambda: f(key), iters=2)
+        rec["iter_us"] = sec * 1e6
         emit(f"fig11/iter_time/skew{skew}", sec * 1e6, "")
+        out[f"skew{skew}"] = rec
+    return out
+
+
+def bench_distributed_buckets(smoke=False, shards=8, bucket_tile=128):
+    """Seed [P, P, max_e] layout vs §3.3 tiled buckets: padding-waste ratio
+    (stored bucket slots / true directed edges) under the paper's random
+    partition.  The old layout's waste scales with the largest bucket —
+    i.e. with skew — while the tiled layout is bounded by one partial tile
+    per bucket plus cross-shard alignment."""
+    out = {}
+    v, e = (1 << 10, 10_000) if smoke else (1 << 13, 80_000)
+    tree = template("u5-2")
+    for skew in (1, 3, 8):
+        raw = rmat(v, e, skew=skew, seed=skew)
+        rec = {}
+        # "random" = the paper's partition (what CountingConfig.synthesize
+        # produces); "contiguous" = worst case, hubs concentrated in one
+        # shard — where the old layout's global-max padding explodes
+        for pname, g in (("random", relabel_random(raw, seed=skew + 1)),
+                         ("contiguous", raw)):
+            plan = build_distributed_plan(
+                g, tree, shards, bucket_tile=bucket_tile
+            )
+            e_dir = g.num_directed
+            counts = plan.bucket_counts
+            max_e_old = max(
+                ops.pad_to(int(counts.max(initial=0)), bucket_tile),
+                bucket_tile,
+            )
+            old_slots = shards * shards * max_e_old
+            tiled_slots = shards * plan.num_tiles * bucket_tile
+            waste_old = old_slots / max(e_dir, 1)
+            waste_tiled = tiled_slots / max(e_dir, 1)
+            # 3 index arrays in either layout (dst + two src views)
+            rec[pname] = {
+                "directed_edges": e_dir,
+                "max_bucket": int(counts.max(initial=0)),
+                "mean_bucket": float(counts.mean()),
+                "old_slots": old_slots,
+                "tiled_slots": tiled_slots,
+                "waste_old": waste_old,
+                "waste_tiled": waste_tiled,
+                "old_bytes": 3 * old_slots * 4,
+                "tiled_bytes": 3 * tiled_slots * 4,
+                "num_tiles": plan.num_tiles,
+            }
+            emit(
+                f"fig11/dist_bucket_waste/skew{skew}/{pname}",
+                0.0,
+                f"old={waste_old:.2f}x tiled={waste_tiled:.2f}x "
+                f"max_bucket={int(counts.max(initial=0))} "
+                f"P={shards} s={bucket_tile}",
+            )
+        out[f"skew{skew}"] = rec
+    return out
+
+
+def run(smoke: bool = False, json_path: str = JSON_PATH):
+    results = {
+        "backend": jax.default_backend(),
+        "shards": 8,
+        "bucket_tile": 128,
+        "smoke": smoke,
+    }
+    results["single_device"] = bench_single_device(smoke=smoke)
+    results["distributed_buckets"] = bench_distributed_buckets(smoke=smoke)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return results
 
 
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graphs (CI)")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)
 
 
 if __name__ == "__main__":

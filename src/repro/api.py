@@ -54,13 +54,15 @@ __all__ = ["CountRequest", "CountResult", "Counter", "run"]
 _SINGLE_OPTS = frozenset(
     {"root", "spmm_kind", "impl", "fuse", "tile_size", "block_size", "lane"}
 )
-#: plan_opts understood by the distributed backend
+#: plan_opts understood by the distributed backend (``impl``/``fuse`` carry
+#: the same kernel-routing semantics as the single-device engine;
+#: ``bucket_tile`` is the §3.3 task size of the tiled bucket layout)
 _DIST_OPTS = frozenset(
-    {"root", "tile_size", "num_shards", "mode", "group_factor", "impl",
-     "mesh", "data_axis", "iter_axis"}
+    {"root", "bucket_tile", "num_shards", "mode", "group_factor", "impl",
+     "fuse", "mesh", "data_axis", "iter_axis"}
 )
 #: opts consumed by build_distributed_plan (rest go to make_count_fn)
-_DIST_PLAN_OPTS = frozenset({"root", "tile_size", "num_shards"})
+_DIST_PLAN_OPTS = frozenset({"root", "bucket_tile", "num_shards"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,20 +182,29 @@ class Counter:
 
     def with_options(self, **overrides: Any) -> "Counter":
         """A new Counter sharing this one's built plan, with different
-        exchange options (distributed backend only).
+        execution options (distributed backend only).
 
-        Plan construction (edge bucketing, request lists) is the expensive
-        host-side step; ``with_options(mode=..., group_factor=...)`` swaps
-        only the communication schedule — e.g. comparing all four exchange
-        modes costs one plan build, not four.
+        Plan construction (edge tiling, request lists) is the expensive
+        host-side step; ``with_options(mode=..., group_factor=..., impl=...,
+        fuse=...)`` swaps only the communication schedule / kernel routing —
+        e.g. comparing all four exchange modes costs one plan build, not
+        four.  ``bucket_tile`` alone changes the §3.3 tiled bucket layout
+        itself, so overriding it rebuilds the plan (lazily) instead of
+        sharing it.
         """
-        allowed = {"mode", "group_factor", "impl", "iter_axis"}
+        allowed = {"mode", "group_factor", "impl", "fuse", "iter_axis",
+                   "bucket_tile"}
         if self.backend != "distributed":
-            raise ValueError("with_options is for the distributed backend")
+            raise ValueError(
+                f"with_options is for the distributed backend; this Counter "
+                f"uses the {self.backend!r} backend"
+            )
         bad = set(overrides) - allowed
         if bad:
-            raise TypeError(f"with_options only swaps {sorted(allowed)}; "
-                            f"got {sorted(bad)}")
+            raise TypeError(
+                f"with_options on the {self.backend!r} backend only swaps "
+                f"{sorted(allowed)}; got {sorted(bad)}"
+            )
         self._build_distributed()
         ax = overrides.get("iter_axis")
         if ax and ax not in self._mesh.axis_names:
@@ -204,9 +215,13 @@ class Counter:
             )
         clone = Counter(self.graph, self.tree, self.backend,
                         {**self.plan_opts, **overrides})
+        if ("bucket_tile" in overrides
+                and overrides["bucket_tile"] != self._plan.bucket_tile):
+            return clone  # different tiling: plan rebuilds lazily
         clone._plan = self._plan
         clone._mesh = self._mesh
-        clone._fn_kw = {**self._fn_kw, **overrides}
+        fn_over = {k: v for k, v in overrides.items() if k != "bucket_tile"}
+        clone._fn_kw = {**self._fn_kw, **fn_over}
         return clone
 
     # ------------------------------------------------------------- plumbing

@@ -18,29 +18,13 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.compat import axis_size
+from repro.compat import axis_size, pvary_like
 
 __all__ = ["ring_allgather", "ring_allgather_overlap", "ring_reduce_scatter"]
 
 
 def _shift_perm(P: int, shift: int = 1):
     return [(i, (i + shift) % P) for i in range(P)]
-
-
-def _pvary_like(val, like):
-    """Promote ``val``'s varying-manual-axes to match ``like`` (shard_map).
-
-    Loop carries must have stable types under shard_map; a ``jnp.zeros``
-    init is unvarying while permuted data is varying, so the init must be
-    pcast before entering the loop.
-    """
-    try:
-        need = set(jax.typeof(like).vma) - set(jax.typeof(val).vma)
-    except AttributeError:  # not in a manual-axes context
-        return val
-    if need:
-        val = jax.lax.pcast(val, tuple(sorted(need)), to="varying")
-    return val
 
 
 def ring_allgather(x: jax.Array, axis_name: str, *, tiled: bool = False) -> jax.Array:
@@ -95,7 +79,7 @@ def ring_allgather_overlap(
     # w = 0 consumes the local shard (the paper's cold-start stage) while the
     # first hop flies; the final received chunk is consumed after the loop
     # without issuing another hop (P-1 permutes, P combines total).
-    acc, buf = jax.lax.fori_loop(0, P - 1, body, (_pvary_like(init, x), x))
+    acc, buf = jax.lax.fori_loop(0, P - 1, body, (pvary_like(init, x), x))
     acc = combine(acc, buf, (p + 1) % P)
     return acc
 

@@ -11,13 +11,17 @@ actually baked into CI / test containers.  Two shims live here:
     ``jax.make_mesh(..., axis_types=(AxisType.Auto, ...))`` vs releases
     that predate ``jax.sharding.AxisType`` (where plain ``make_mesh`` has
     the same auto-sharding semantics).
+
+``pvary_like``
+    Varying-manual-axes promotion for shard_map loop carries on releases
+    with the ``vma`` type system; a no-op on releases without it.
 """
 
 from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "axis_size"]
+__all__ = ["shard_map", "make_mesh", "axis_size", "pvary_like"]
 
 
 def axis_size(axis_name):
@@ -29,6 +33,23 @@ def axis_size(axis_name):
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+def pvary_like(val, like):
+    """Promote ``val``'s varying-manual-axes to match ``like`` (shard_map).
+
+    Loop carries must have stable types under shard_map: a ``jnp.zeros``
+    init is unvarying while permuted/sharded data is varying, so the init
+    must be pcast before entering a ``fori_loop``/``while_loop``.  On JAX
+    releases without the ``vma`` type system this is the identity.
+    """
+    try:
+        need = set(jax.typeof(like).vma) - set(jax.typeof(val).vma)
+    except AttributeError:  # no vma tracking, or not in a manual-axes context
+        return val
+    if need:
+        val = jax.lax.pcast(val, tuple(sorted(need)), to="varying")
+    return val
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):

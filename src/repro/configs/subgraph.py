@@ -22,6 +22,7 @@ class CountingConfig:
     num_shards: int  # graph shards over the data axis
     mode: str = "adaptive"  # alltoall | pipeline | adaptive | ring
     group_factor: int = 1
+    bucket_tile: int = 128  # §3.3 task size of the tiled bucket layout
     skew: int = 3  # RMAT skew when synthesized
     #: 'grid' — graph over data(16), colorings over model(16) with the
     #: unrolled grouped exchange; 'flat' — graph over all chips with the
@@ -69,6 +70,7 @@ class CountingConfig:
                 "num_shards": self.num_shards,
                 "mode": self.mode,
                 "group_factor": self.group_factor,
+                "bucket_tile": self.bucket_tile,
                 **plan_opts,
             },
         )

@@ -5,6 +5,8 @@ facade, which wraps all of this behind one backend-agnostic interface):
   - templates: Tree, template(name), partition_tree, automorphism_count
   - graphs: Graph, rmat, erdos_renyi, from_edges, load_edge_file,
     save_npz/load_npz
+  - table_program: run_table_program — THE partition-chain DP executor,
+    shared by both engines (backends supply a neighbor-sum strategy)
   - count_engine: build_counting_plan, colorful_map_count, count_fn,
     plan_sample_fn (the backend sample_fn protocol)
   - estimator: estimate_counts (plan OR sample_fn), niter_bound
@@ -34,6 +36,12 @@ from .graphs import (  # noqa: F401
     relabel_random,
     rmat,
     save_npz,
+)
+from .table_program import (  # noqa: F401
+    build_node_tables,
+    local_node_fn,
+    root_count,
+    run_table_program,
 )
 from .count_engine import (  # noqa: F401
     CountingPlan,

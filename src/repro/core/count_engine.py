@@ -42,6 +42,13 @@ import numpy as np
 
 from repro.kernels import ops
 from .graphs import Graph, edge_list
+from .table_program import (
+    leaf_table,
+    local_node_fn,
+    build_node_tables,
+    root_count,
+    run_table_program,
+)
 from .templates import PartitionChain, Tree, automorphism_count, partition_tree
 
 __all__ = [
@@ -100,17 +107,7 @@ def build_counting_plan(
     if lane is None:
         # Pallas kernels need 128-lane tables; XLA runs at true widths.
         lane = 128 if ops.resolve_impl(impl) == "pallas" else 1
-    combine: Dict[int, ops.CombineTables] = {}
-    widths: Dict[int, int] = {}
-    for i, nd in enumerate(chain.nodes):
-        if nd.is_leaf:
-            widths[i] = ops.pad_to(k, lane)
-        else:
-            t1 = chain.nodes[nd.left].size
-            t2 = chain.nodes[nd.right].size
-            tables = ops.build_combine_tables(k, t1, t2, lane=lane)
-            combine[i] = tables
-            widths[i] = tables.s_pad
+    combine, widths = build_node_tables(chain, k, lane=lane)
     return CountingPlan(
         tree=tree,
         chain=chain,
@@ -127,48 +124,22 @@ def build_counting_plan(
     )
 
 
-def _leaf_table(plan: CountingPlan, coloring: jax.Array, row_mask: jax.Array):
-    k_pad = ops.pad_to(plan.k, plan.lane)
-    onehot = jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32)
-    return onehot * row_mask
-
-
 def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
     """Number of colorful rooted embedding maps for one coloring.
 
     ``coloring``: int32 [n_pad] (entries past plan.n ignored).
     Differentiable-free pure function of the coloring; jit with
     ``jax.jit(functools.partial(colorful_map_count, plan))`` or use
-    :func:`count_fn`.
+    :func:`count_fn`.  The DP itself is the shared table program
+    (:mod:`repro.core.table_program`) with the ``local`` (whole-graph SpMM)
+    neighbor-sum strategy.
     """
     n_pad = plan.n_pad
     row_mask = (jnp.arange(n_pad) < plan.n).astype(jnp.float32)[:, None]
-    leaf = _leaf_table(plan, coloring, row_mask)
-    tables: Dict[int, jax.Array] = {}
-    for i, nd in enumerate(plan.chain.nodes):
-        if nd.is_leaf:
-            tables[i] = leaf
-            continue
-        tbl = plan.combine[i]
-        if plan.fuse:
-            out = ops.fused_count(
-                plan.spmm_plan, tables[nd.left], tables[nd.right], tbl,
-                impl=plan.impl,
-            )
-        else:
-            m = ops.spmm(plan.spmm_plan, tables[nd.right], impl=plan.impl)
-            # mask pad rows of the neighbor sum before the combine
-            m = m * row_mask
-            out = ops.color_combine(tables[nd.left], m, tbl, impl=plan.impl)
-        col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
-        tables[i] = out * row_mask * col_mask
-        # free children (keeps XLA liveness tight and mirrors the paper's
-        # sub-template table lifetime management); every chain node is the
-        # child of exactly one parent, so both entries are dead here.
-        del tables[nd.right]
-        del tables[nd.left]
-    root = tables[plan.chain.root_index]
-    return jnp.sum(root[:, 0], dtype=jnp.float64 if root.dtype == jnp.float64 else jnp.float32)
+    leaf = leaf_table(coloring, ops.pad_to(plan.k, plan.lane), row_mask)
+    node_fn = local_node_fn(plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse)
+    root = run_table_program(plan.chain, plan.combine, leaf, row_mask, node_fn)
+    return root_count(root)
 
 
 def count_fn(plan: CountingPlan, batch: Optional[int] = None):

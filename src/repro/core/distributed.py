@@ -2,19 +2,26 @@
 
 The graph is vertex-partitioned in contiguous blocks over the ``data`` mesh
 axis (combine with :func:`repro.core.graphs.relabel_random` for the paper's
-random partition).  Count tables are row-sharded alongside.  For each
-internal partition node the neighbor sum needs remote rows of the child
-table; four exchange modes are provided:
+random partition).  Count tables are row-sharded alongside.  The DP itself
+is the shared table program (:mod:`repro.core.table_program`); this module
+contributes the *exchange* neighbor-sum strategy: for each internal
+partition node the neighbor sum needs remote rows of the child table, and
+four exchange modes provide them:
 
 ``alltoall``  (paper: Naive)
     Compact per-pair request lists exchanged with one fused
     ``lax.all_to_all``; all P received chunks are materialized before any
-    compute (peak memory O(P * R * B) — Eq. 7's pathology).
+    compute (peak memory O(P * R * B) — Eq. 7's pathology).  Because the
+    whole buffer exists anyway, the consume is one call of the SAME
+    edge-tile / fused SpMM->combine kernels as the in-core engine
+    (``ops.spmm_slabs`` / ``ops.fused_count_slabs``) over the concatenated
+    ``[P * r_pad, B]`` buffer — ``impl="pallas"`` and ``fuse=True`` route
+    through ``kernels/spmm_edgetile.py`` / ``kernels/fused_count.py``.
 
 ``pipeline``  (paper: Pipeline, Algorithm 3)
     The same compact requests, but sent with W = ceil((P-1)/g) grouped
     ``ppermute`` steps; each step's transfer overlaps the previous chunk's
-    segment-sum (peak memory O(g * R * B) — Eq. 12).
+    consume (peak memory O(g * R * B) — Eq. 12).
 
 ``adaptive``  (paper: Adaptive)
     Per-sub-template trace-time choice between the two via the Hockney
@@ -27,6 +34,18 @@ table; four exchange modes are provided:
     full shards; this is what lets the engine shard over hundreds of
     devices where the unrolled direct-send schedule would explode compile
     time.  See DESIGN.md §4.
+
+**Tiled buckets (§3.3).**  The per-(shard, shard) edge buckets are stored
+as fixed-size ``bucket_tile``-edge tiles with CSR-style offsets
+(``tile_off[p, q]``), so plan memory is O(E + tiles) — independent of the
+largest bucket — and every incremental consume task is one uniform tile:
+a gather of ``bucket_tile`` chunk rows plus one bounded scatter-add,
+regardless of degree skew.  (The seed layout padded every bucket to the
+global max, [P, P, max_e]: memory and per-chunk work scaled with skew.)
+With ``fuse=True`` the incremental modes exploit the combine's linearity
+in ``M`` to accumulate each tile's contribution **directly into the output
+table** — the full ``[n_loc_pad, B]`` neighbor sum never exists, the
+paper's fine-grained pipeline (§3.2) stretched across exchange chunks.
 
 Iteration parallelism: the outer color-coding loop is embarrassingly
 parallel, so independent colorings shard over a second mesh axis
@@ -44,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,13 +74,18 @@ from repro.comm import (
     V5E_ICI,
     HockneyModel,
     choose_mode,
-    fused_exchange,
     grouped_exchange,
     ring_allgather_overlap,
 )
-from repro.compat import shard_map
+from repro.compat import pvary_like, shard_map
 from repro.kernels import ops
 from .graphs import Graph
+from .table_program import (
+    build_node_tables,
+    leaf_table,
+    root_count,
+    run_table_program,
+)
 from .templates import PartitionChain, Tree, automorphism_count, partition_tree
 
 __all__ = [
@@ -82,22 +106,42 @@ class DistributedPlan:
     num_shards: int
     shard_size: int  # vertices per shard (last shard may be ragged)
     n_loc_pad: int  # padded local rows; row `shard_size` is the zero sentinel
-    r_pad: int  # padded request-list length
-    max_e: int  # padded per-bucket edge count
+    r_pad: int  # padded request-list length (slot r_pad-1 always a zero row)
+    bucket_tile: int  # §3.3 task size: edges per bucket tile
+    num_tiles: int  # T: per-shard tile-array height (uniform across shards)
+    slabs_per_block: int  # alltoall slab layout (uniform across shards)
     aut: int
     combine: Dict[int, ops.CombineTables]
     widths: Dict[int, int]
-    # host-global arrays; sharded over dim 0 by the data axis:
-    bucket_rows: jax.Array  # [P, P, max_e] int32: local dst row
-    bucket_cols_local: jax.Array  # [P, P, max_e] int32: src-local row (ring)
-    bucket_cols_compact: jax.Array  # [P, P, max_e] int32: request slot (a2a)
+    # host-global arrays; sharded over dim 0 by the data axis.  The bucket
+    # arrays are O(E + tiles): tiles are addressed via CSR offsets, never
+    # padded to the largest bucket.
+    tile_dst: jax.Array  # [P, T, tile] int32 local dst row (pad: shard_size)
+    tile_src_local: jax.Array  # [P, T, tile] int32 src-shard-local row (ring)
+    tile_src_compact: jax.Array  # [P, T, tile] int32 request slot (pipeline)
+    tile_off: jax.Array  # [P, P+1] int32 CSR tile offsets by src shard
     send_idx: jax.Array  # [P, P, r_pad] int32: rows this shard sends to q
+    a2a_slab_dst: jax.Array  # [P, NRB*spb, tile] int32 block-local dst (-1 pad)
+    a2a_slab_cols: jax.Array  # [P, NRB*spb, tile] int32 col into [P*r_pad]
     bucket_counts: np.ndarray  # [P, P] true bucket sizes (diagnostics)
 
     @property
     def scale(self) -> float:
         k = self.k
         return (k ** k) / math.factorial(k) / self.aut
+
+    @property
+    def device_arrays(self) -> Tuple[jax.Array, ...]:
+        """The per-shard plan arrays, in ``make_count_fn`` argument order."""
+        return (
+            self.tile_dst,
+            self.tile_src_local,
+            self.tile_src_compact,
+            self.tile_off,
+            self.send_idx,
+            self.a2a_slab_dst,
+            self.a2a_slab_cols,
+        )
 
 
 def build_distributed_plan(
@@ -106,7 +150,7 @@ def build_distributed_plan(
     num_shards: int,
     *,
     root: int = 0,
-    tile_size: int = 128,
+    bucket_tile: int = 128,
 ) -> DistributedPlan:
     from .graphs import edge_list
 
@@ -118,63 +162,85 @@ def build_distributed_plan(
     sentinel = shard_size
 
     rows, cols = edge_list(g)
-    p_of = rows // shard_size
-    q_of = cols // shard_size
+    p_of = (rows // shard_size).astype(np.int64)
+    q_of = (cols // shard_size).astype(np.int64)
     counts = np.zeros((Pn, Pn), np.int64)
     np.add.at(counts, (p_of, q_of), 1)
-    max_e = int(counts.max(initial=0))
-    max_e = max(ops.pad_to(max_e, tile_size), tile_size)
 
-    b_rows = np.full((Pn, Pn, max_e), sentinel, np.int32)
-    b_cols = np.full((Pn, Pn, max_e), sentinel, np.int32)
+    # --- compact request lists + per-edge request slots -------------------
+    # bucket (p, q): the distinct src-local rows device p requests from
+    # device q (paper's C_{q,p}); slot_of[e] is edge e's index into them.
     key = p_of * Pn + q_of
-    order = np.argsort(key, kind="stable")
-    skey = key[order]
-    group_start = np.zeros(Pn * Pn, np.int64)
-    np.cumsum(np.bincount(skey, minlength=Pn * Pn)[:-1], out=group_start[1:])
-    pos = np.arange(len(order)) - group_start[skey]
-    fr = b_rows.reshape(Pn * Pn, max_e)
-    fc = b_cols.reshape(Pn * Pn, max_e)
-    fr[skey, pos] = (rows[order] - p_of[order] * shard_size).astype(np.int32)
-    fc[skey, pos] = (cols[order] - q_of[order] * shard_size).astype(np.int32)
-
-    # sort each bucket by dst row (keeps segment ids grouped; cheap locality)
-    dst_order = np.argsort(fr, axis=1, kind="stable")
-    fr = np.take_along_axis(fr, dst_order, axis=1)
-    fc = np.take_along_axis(fc, dst_order, axis=1)
-    b_rows = fr.reshape(Pn, Pn, max_e)
-    b_cols = fc.reshape(Pn, Pn, max_e)
-
-    # compact request lists: for bucket (p, q), the distinct src-local rows
-    # (the counts device p requests from device q — paper's C_{q,p})
-    r_len = 0
+    order = np.argsort(key, kind="stable")  # rows sorted -> dst-sorted buckets
+    bkt_start = np.zeros(Pn * Pn + 1, np.int64)
+    np.cumsum(np.bincount(key, minlength=Pn * Pn), out=bkt_start[1:])
+    slot_of = np.zeros(len(rows), np.int64)
     uniq_lists = {}
-    inv_store = np.zeros((Pn, Pn, max_e), np.int32)
+    r_len = 0
     for pp in range(Pn):
         for qq in range(Pn):
-            uniq, inv = np.unique(b_cols[pp, qq], return_inverse=True)
+            sel = order[bkt_start[pp * Pn + qq] : bkt_start[pp * Pn + qq + 1]]
+            uniq, inv = np.unique(cols[sel] - qq * shard_size, return_inverse=True)
             uniq_lists[(pp, qq)] = uniq
-            inv_store[pp, qq] = inv.astype(np.int32)
+            slot_of[sel] = inv
             r_len = max(r_len, len(uniq))
-    r_pad = ops.pad_to(r_len, 128)
+    # strict +1: slot r_pad-1 is a pad slot in EVERY chunk, so it always
+    # carries the zero sentinel row — the tile/slab pad sentinel points there
+    r_pad = ops.pad_to(r_len + 1, 128)
     send_idx = np.full((Pn, Pn, r_pad), sentinel, np.int32)
-    for pp in range(Pn):
-        for qq in range(Pn):
-            u = uniq_lists[(pp, qq)]
-            # device q sends rows u to device p: stored at send_idx[q, p]
-            send_idx[qq, pp, : len(u)] = u
+    for (pp, qq), u in uniq_lists.items():
+        # device q sends rows u to device p: stored at send_idx[q, p]
+        send_idx[qq, pp, : len(u)] = u
 
-    combine: Dict[int, ops.CombineTables] = {}
-    widths: Dict[int, int] = {}
-    for i, nd in enumerate(chain.nodes):
-        if nd.is_leaf:
-            widths[i] = ops.pad_to(k, 128)
-        else:
-            t1 = chain.nodes[nd.left].size
-            t2 = chain.nodes[nd.right].size
-            tables = ops.build_combine_tables(k, t1, t2)
-            combine[i] = tables
-            widths[i] = tables.s_pad
+    # --- §3.3 tiled buckets: fixed-size tiles + CSR offsets ---------------
+    tiles_per_dev = (-(-counts // bucket_tile)).sum(axis=1)
+    num_tiles = max(1, int(tiles_per_dev.max(initial=0)))
+    tile_dst = np.full((Pn, num_tiles, bucket_tile), sentinel, np.int32)
+    tile_src_local = np.full((Pn, num_tiles, bucket_tile), sentinel, np.int32)
+    tile_src_compact = np.full((Pn, num_tiles, bucket_tile), r_pad - 1, np.int32)
+    tile_off = np.zeros((Pn, Pn + 1), np.int32)
+    # --- alltoall slab layout over the concatenated exchange buffer -------
+    dev_slice = np.searchsorted(p_of, np.arange(Pn + 1))
+    dst_local_all = (rows - p_of * shard_size).astype(np.int64)
+    concat_col_all = q_of * r_pad + slot_of
+    spb = 1
+    nrb_loc = n_loc_pad // 128
+    for pp in range(Pn):
+        sl = slice(dev_slice[pp], dev_slice[pp + 1])
+        blk_counts = np.bincount(dst_local_all[sl] // 128, minlength=nrb_loc)
+        spb = max(spb, int(-(-blk_counts.max(initial=0) // bucket_tile)))
+    a2a_slab_dst = np.empty((Pn, nrb_loc * spb, bucket_tile), np.int32)
+    a2a_slab_cols = np.empty((Pn, nrb_loc * spb, bucket_tile), np.int32)
+    for pp in range(Pn):
+        sl = slice(dev_slice[pp], dev_slice[pp + 1])
+        # tiled buckets: stable sort by src shard keeps dst order per bucket
+        sub = np.argsort(q_of[sl], kind="stable")
+        td, (tsl, tsc), toff = ops.build_bucket_tiles(
+            q_of[sl][sub],
+            dst_local_all[sl][sub],
+            ((cols[sl] - q_of[sl] * shard_size)[sub], slot_of[sl][sub]),
+            Pn,
+            bucket_tile,
+            dst_sentinel=sentinel,
+            src_sentinels=(sentinel, r_pad - 1),
+            num_tiles=num_tiles,
+        )
+        tile_dst[pp], tile_src_local[pp], tile_src_compact[pp] = td, tsl, tsc
+        tile_off[pp] = toff
+        # alltoall slabs: this shard's edges (already dst-sorted), columns
+        # pointing into the [P * r_pad] concatenated compact buffer
+        sd, sc, _ = ops.build_slab_layout(
+            dst_local_all[sl],
+            concat_col_all[sl],
+            n_loc_pad,
+            bucket_tile,
+            128,
+            sentinel_col=r_pad - 1,
+            slabs_per_block=spb,
+        )
+        a2a_slab_dst[pp], a2a_slab_cols[pp] = sd, sc
+
+    combine, widths = build_node_tables(chain, k, lane=128)
 
     return DistributedPlan(
         tree=tree,
@@ -185,14 +251,19 @@ def build_distributed_plan(
         shard_size=shard_size,
         n_loc_pad=n_loc_pad,
         r_pad=r_pad,
-        max_e=max_e,
+        bucket_tile=bucket_tile,
+        num_tiles=num_tiles,
+        slabs_per_block=spb,
         aut=automorphism_count(tree),
         combine=combine,
         widths=widths,
-        bucket_rows=jnp.asarray(b_rows),
-        bucket_cols_local=jnp.asarray(b_cols),
-        bucket_cols_compact=jnp.asarray(inv_store),
+        tile_dst=jnp.asarray(tile_dst),
+        tile_src_local=jnp.asarray(tile_src_local),
+        tile_src_compact=jnp.asarray(tile_src_compact),
+        tile_off=jnp.asarray(tile_off),
         send_idx=jnp.asarray(send_idx),
+        a2a_slab_dst=jnp.asarray(a2a_slab_dst),
+        a2a_slab_cols=jnp.asarray(a2a_slab_cols),
         bucket_counts=counts,
     )
 
@@ -206,39 +277,46 @@ def abstract_plan(
     root: int = 0,
     skew_headroom: float = 3.0,
     compact: bool = True,  # False (ring mode): compact-exchange arrays minimal
+    bucket_tile: int = 128,
 ) -> DistributedPlan:
     """Shape-only plan for dry-run lowering at paper-scale graph sizes.
 
-    Bucket/request sizes follow the paper's Eq. 5 expectation
-    E[bucket] = |E_directed| / P^2 with a skew headroom factor (the padding a
-    real relabeled-random partition needs); array fields are
-    ShapeDtypeStructs — nothing is allocated.
+    Tile/request sizes follow the paper's Eq. 5 expectation
+    E[bucket] = |E_directed| / P^2 with a skew headroom factor; with tiled
+    buckets the headroom costs O(E) extra tile slots, not O(P^2 * max_e).
+    Array fields are ShapeDtypeStructs — nothing is allocated.  Arrays the
+    requested mode never touches are kept minimal so the dry-run memory
+    analysis reflects what the program actually ships.
     """
     Pn = num_shards
     chain = partition_tree(tree, root=root)
     k = tree.n
     shard_size = (num_vertices + Pn - 1) // Pn
     n_loc_pad = ops.pad_to(shard_size + 1, 128)
-    avg_bucket = 2.0 * num_edges / (Pn * Pn)
-    max_e = ops.pad_to(int(avg_bucket * skew_headroom) + 128, 128)
-    r_pad = ops.pad_to(min(max_e, shard_size + 1), 128)
+    e_dev = 2.0 * num_edges / Pn
+    avg_bucket = e_dev / Pn
+    r_pad = ops.pad_to(
+        min(int(avg_bucket * skew_headroom) + 128, shard_size + 1), 128
+    )
+    num_tiles = Pn * (int(avg_bucket * skew_headroom / bucket_tile) + 1)
+    nrb_loc = n_loc_pad // 128
+    spb = int(e_dev * skew_headroom / (nrb_loc * bucket_tile)) + 1
 
-    combine: Dict[int, ops.CombineTables] = {}
-    widths: Dict[int, int] = {}
-    for i, nd in enumerate(chain.nodes):
-        if nd.is_leaf:
-            widths[i] = ops.pad_to(k, 128)
-        else:
-            t1 = chain.nodes[nd.left].size
-            t2 = chain.nodes[nd.right].size
-            tables = ops.build_combine_tables(k, t1, t2)
-            combine[i] = tables
-            widths[i] = tables.s_pad
+    combine, widths = build_node_tables(chain, k, lane=128)
 
     s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
-    cmp_e = max_e if compact else 128
-    if not compact:
+    if compact:
+        tsl = s(Pn, 1, bucket_tile)  # ring-only array
+        tsc = s(Pn, num_tiles, bucket_tile)
+        sidx = s(Pn, Pn, r_pad)
+        sd = sc = s(Pn, nrb_loc * spb, bucket_tile)
+    else:
+        tsl = s(Pn, num_tiles, bucket_tile)
+        tsc = s(Pn, 1, bucket_tile)
         r_pad = 128
+        sidx = s(Pn, Pn, r_pad)
+        spb = 1
+        sd = sc = s(Pn, 1, bucket_tile)
     return DistributedPlan(
         tree=tree,
         chain=chain,
@@ -248,14 +326,19 @@ def abstract_plan(
         shard_size=shard_size,
         n_loc_pad=n_loc_pad,
         r_pad=r_pad,
-        max_e=max_e,
+        bucket_tile=bucket_tile,
+        num_tiles=num_tiles,
+        slabs_per_block=spb,
         aut=automorphism_count(tree),
         combine=combine,
         widths=widths,
-        bucket_rows=s(Pn, Pn, max_e),
-        bucket_cols_local=s(Pn, Pn, max_e),
-        bucket_cols_compact=s(Pn, Pn, cmp_e),
-        send_idx=s(Pn, Pn, r_pad),
+        tile_dst=s(Pn, num_tiles, bucket_tile),
+        tile_src_local=tsl,
+        tile_src_compact=tsc,
+        tile_off=s(Pn, Pn + 1),
+        send_idx=sidx,
+        a2a_slab_dst=sd,
+        a2a_slab_cols=sc,
         bucket_counts=np.zeros((Pn, Pn), np.int64),
     )
 
@@ -293,7 +376,10 @@ def _node_mode(
     b_width = plan.widths[nd.right]
     Pn = plan.num_shards
     total_bytes = (Pn - 1) * plan.r_pad * b_width * 4
-    spmm_flops = 2.0 * Pn * plan.max_e * b_width
+    edges_dev = float(plan.bucket_counts.sum()) / Pn
+    if edges_dev <= 0:  # abstract plan: estimate from the tile capacity
+        edges_dev = float(plan.num_tiles * plan.bucket_tile)
+    spmm_flops = 2.0 * edges_dev * b_width
     combine_flops = 2.0 * plan.n_loc_pad * tbl.s * tbl.j
     picked, _ = choose_mode(
         total_bytes, spmm_flops + combine_flops, Pn, hockney, group_factor
@@ -310,6 +396,7 @@ def make_count_fn(
     iter_axis: Optional[str] = None,
     group_factor: int = 1,
     impl: str = "xla",
+    fuse: bool = False,
     hockney: HockneyModel = V5E_ICI,
     return_raw: bool = False,
     keyed: bool = False,
@@ -320,6 +407,14 @@ def make_count_fn(
     ``[I, P, n_loc_pad]`` (I = number of parallel coloring iterations,
     sharded over ``iter_axis`` when given) and ``counts`` is float32 [I]
     (colorful map counts; multiply by ``plan.scale`` for copy estimates).
+
+    ``impl``/``fuse`` carry the same semantics as the in-core engine:
+    ``impl`` routes the SpMM/combine kernels (``"pallas"`` engages the
+    edge-tile and fused kernels on the alltoall consume and the Pallas
+    combine everywhere), and ``fuse=True`` never materializes the full
+    per-node neighbor sum ``M`` — via ``ops.fused_count_slabs`` on the
+    materialized alltoall buffer, and via per-tile accumulation directly
+    into the output table on the incremental (pipeline/ring) modes.
 
     ``keyed=True``: the same key-based contract as the single-device engine —
     ``f(keys) -> counts`` where ``keys`` is a jax PRNG key array ``[I]`` (or
@@ -338,6 +433,7 @@ def make_count_fn(
     assert not (keyed and return_raw), "keyed and return_raw are exclusive"
     Pn = plan.num_shards
     n_loc_pad = plan.n_loc_pad
+    r_pad = plan.r_pad
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     assert axis_sizes[data_axis] == Pn, (axis_sizes, Pn)
 
@@ -347,99 +443,136 @@ def make_count_fn(
         if not nd.is_leaf
     }
 
-    edge_chunk = 1 << 19  # bound the [chunk, B] gather (paper §3.2.1)
+    def local_count(
+        coloring, tile_dst, tile_src_loc, tile_src_cmp, tile_off, s_idx,
+        slab_dst, slab_cols,
+    ):
+        """One coloring iteration on this device's shard; returns partial sum.
 
-    def consume_factory(bucket_rows, bucket_cols, n_rows):
-        """bucket_* are this device's [P, max_e]; returns consume(acc, chunk, src)."""
-
-        def consume(acc, chunk, src):
-            ce = jax.lax.dynamic_index_in_dim(bucket_cols, src, 0, keepdims=False)
-            re = jax.lax.dynamic_index_in_dim(bucket_rows, src, 0, keepdims=False)
-            e = ce.shape[0]
-            if e <= edge_chunk:
-                gathered = jnp.take(chunk, ce, axis=0)
-                return acc + jax.ops.segment_sum(gathered, re, num_segments=n_rows)
-
-            # big buckets: chunked scatter-add keeps the gather bounded
-            from repro.comm.ring import _pvary_like
-
-            acc = _pvary_like(acc, chunk)
-            n_chunks = (e + edge_chunk - 1) // edge_chunk
-            pad = n_chunks * edge_chunk - e
-            ce_p = jnp.pad(ce, (0, pad), constant_values=chunk.shape[0] - 1)
-            re_p = jnp.pad(re, (0, pad), constant_values=n_rows - 1)
-
-            def body(i, a):
-                cs = jax.lax.dynamic_slice_in_dim(ce_p, i * edge_chunk, edge_chunk)
-                rs = jax.lax.dynamic_slice_in_dim(re_p, i * edge_chunk, edge_chunk)
-                return a.at[rs].add(jnp.take(chunk, cs, axis=0))
-
-            return jax.lax.fori_loop(0, n_chunks, body, acc)
-
-        return consume
-
-    def local_count(coloring, b_rows, b_cols_loc, b_cols_cmp, s_idx):
-        """One coloring iteration on this device's shard; returns partial sum."""
+        The DP loop is the shared executor; only the neighbor-sum strategy
+        below (exchange + tiled-bucket consume) is distributed-specific.
+        """
         row_mask = (jnp.arange(n_loc_pad) < plan.shard_size).astype(jnp.float32)[:, None]
-        k_pad = ops.pad_to(plan.k, 128)
-        leaf = jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32) * row_mask
-        tables: Dict[int, jax.Array] = {}
-        for i, nd in enumerate(plan.chain.nodes):
-            if nd.is_leaf:
-                tables[i] = leaf
-                continue
-            tbl = plan.combine[i]
-            c_right = tables[nd.right]
-            init = jnp.zeros((n_loc_pad, c_right.shape[1]), c_right.dtype)
-            nm = node_modes[i]
-            if nm == "ring":
-                consume = consume_factory(b_rows, b_cols_loc, n_loc_pad)
-                m = ring_allgather_overlap(c_right, data_axis, consume, init)
-            else:
-                consume = consume_factory(b_rows, b_cols_cmp, n_loc_pad)
-                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
-                if nm == "alltoall":
-                    m = fused_exchange(chunks, data_axis, consume, init)
-                else:
-                    m = grouped_exchange(
-                        chunks,
-                        data_axis,
-                        consume,
-                        init,
-                        group_factor=group_factor,
-                    )
-            m = m * row_mask
-            out = ops.color_combine(tables[nd.left], m, tbl, impl=impl)
-            col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
-            tables[i] = out * row_mask * col_mask
-            del tables[nd.right]
-            del tables[nd.left]
-        root = tables[plan.chain.root_index]
-        return jnp.sum(root[:, 0])
+        leaf = leaf_table(coloring, ops.pad_to(plan.k, 128), row_mask)
 
-    def sharded_fn(colorings, b_rows, b_cols_loc, b_cols_cmp, s_idx):
-        # local shapes: colorings [I_loc, 1, n_loc_pad]; buckets [1, P, ...]
+        def consume_into_m(tile_src):
+            """Accumulate a chunk's bucket into the neighbor sum M.
+
+            One uniform §3.3 task per tile: gather ``bucket_tile`` chunk
+            rows, one bounded scatter-add — per-chunk work scales with the
+            bucket's edge count, never with the globally largest bucket.
+            """
+
+            def consume(acc, chunk, src):
+                acc = pvary_like(acc, chunk)
+
+                def tile_task(t, a):
+                    d = jax.lax.dynamic_index_in_dim(tile_dst, t, 0, keepdims=False)
+                    s = jax.lax.dynamic_index_in_dim(tile_src, t, 0, keepdims=False)
+                    return a.at[d].add(jnp.take(chunk, s, axis=0))
+
+                return jax.lax.fori_loop(
+                    tile_off[src], tile_off[src + 1], tile_task, acc
+                )
+
+            return consume
+
+        def consume_into_out(tile_src, c_left, tbl):
+            """Fused incremental consume: the combine is linear in M, so each
+            tile's contribution lands directly in the output table — the
+            full [n_loc_pad, B] neighbor sum never exists (§3.2 across
+            exchange chunks)."""
+
+            def consume(acc, chunk, src):
+                acc = pvary_like(acc, chunk)
+
+                def tile_task(t, a):
+                    d = jax.lax.dynamic_index_in_dim(tile_dst, t, 0, keepdims=False)
+                    s = jax.lax.dynamic_index_in_dim(tile_src, t, 0, keepdims=False)
+                    g1 = jnp.take(c_left, d, axis=0)  # [tile, A]
+                    g2 = jnp.take(chunk, s, axis=0)  # [tile, B]
+                    contrib = jnp.einsum(
+                        "esj,esj->es", g1[:, tbl.idx1], g2[:, tbl.idx2]
+                    )
+                    contrib = jnp.pad(
+                        contrib, ((0, 0), (0, tbl.s_pad - tbl.s))
+                    )
+                    return a.at[d].add(contrib)
+
+                return jax.lax.fori_loop(
+                    tile_off[src], tile_off[src + 1], tile_task, acc
+                )
+
+            return consume
+
+        def node_fn(i, tbl, c_left, c_right):
+            nm = node_modes[i]
+            bw = c_right.shape[1]
+            if nm == "alltoall":
+                # Naive mode: the whole exchange buffer is materialized
+                # anyway, so consume it with the in-core engine's kernels
+                # over the [P * r_pad, B] concatenation (slab columns were
+                # built against exactly this layout).
+                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
+                received = jax.lax.all_to_all(
+                    chunks, data_axis, split_axis=0, concat_axis=0
+                )
+                remote = received.reshape(Pn * r_pad, bw)
+                if fuse:
+                    return ops.fused_count_slabs(
+                        slab_dst, slab_cols, c_left, remote, tbl,
+                        slabs_per_block=plan.slabs_per_block, impl=impl,
+                    )
+                m = ops.spmm_slabs(
+                    slab_dst, slab_cols, remote, out_rows=n_loc_pad,
+                    slabs_per_block=plan.slabs_per_block, impl=impl,
+                )
+                return ops.color_combine(c_left, m * row_mask, tbl, impl=impl)
+            # incremental modes: per-chunk tiled-bucket consume
+            if fuse:
+                init = jnp.zeros((n_loc_pad, tbl.s_pad), jnp.float32)
+            else:
+                init = jnp.zeros((n_loc_pad, bw), c_right.dtype)
+            if nm == "ring":
+                src_arr = tile_src_loc  # chunks are whole remote shards
+                consume = (
+                    consume_into_out(src_arr, c_left, tbl) if fuse
+                    else consume_into_m(src_arr)
+                )
+                out = ring_allgather_overlap(c_right, data_axis, consume, init)
+            else:  # pipeline
+                src_arr = tile_src_cmp  # chunks are compact request lists
+                consume = (
+                    consume_into_out(src_arr, c_left, tbl) if fuse
+                    else consume_into_m(src_arr)
+                )
+                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
+                out = grouped_exchange(
+                    chunks, data_axis, consume, init, group_factor=group_factor
+                )
+            if fuse:
+                return out
+            return ops.color_combine(c_left, out * row_mask, tbl, impl=impl)
+
+        root = run_table_program(plan.chain, plan.combine, leaf, row_mask, node_fn)
+        return root_count(root)
+
+    def sharded_fn(colorings, *arrs):
+        # local shapes: colorings [I_loc, 1, n_loc_pad]; plan arrays [1, ...]
         colorings = colorings[:, 0]
-        b_rows_l = b_rows[0]
-        b_cols_loc_l = b_cols_loc[0]
-        b_cols_cmp_l = b_cols_cmp[0]
-        s_idx_l = s_idx[0]
-        f = lambda col: local_count(col, b_rows_l, b_cols_loc_l, b_cols_cmp_l, s_idx_l)
-        partials = jax.vmap(f)(colorings)  # [I_loc]
+        local = tuple(a[0] for a in arrs)
+        partials = jax.vmap(lambda col: local_count(col, *local))(colorings)
         return jax.lax.psum(partials, data_axis)
 
-    def sharded_fn_keyed(key_data, b_rows, b_cols_loc, b_cols_cmp, s_idx):
-        # local shapes: key_data [I_loc, 2] uint32; buckets [1, P, ...]
-        b_rows_l = b_rows[0]
-        b_cols_loc_l = b_cols_loc[0]
-        b_cols_cmp_l = b_cols_cmp[0]
-        s_idx_l = s_idx[0]
+    def sharded_fn_keyed(key_data, *arrs):
+        # local shapes: key_data [I_loc, 2] uint32; plan arrays [1, ...]
+        local = tuple(a[0] for a in arrs)
         p = jax.lax.axis_index(data_axis)
 
         def one(kd):
             k = jax.random.fold_in(jax.random.wrap_key_data(kd), p)
             col = jax.random.randint(k, (n_loc_pad,), 0, plan.k, dtype=jnp.int32)
-            return local_count(col, b_rows_l, b_cols_loc_l, b_cols_cmp_l, s_idx_l)
+            return local_count(col, *local)
 
         partials = jax.vmap(one)(key_data)  # [I_loc]
         return jax.lax.psum(partials, data_axis)
@@ -449,16 +582,13 @@ def make_count_fn(
         P(iter_axis) if keyed
         else (P(iter_axis, data_axis) if iter_axis else P(None, data_axis))
     )
-    in_specs = (
-        lead_spec,
-        P(data_axis),
-        P(data_axis),
-        P(data_axis),
-        P(data_axis),
-    )
+    in_specs = (lead_spec,) + (P(data_axis),) * len(plan.device_arrays)
+    # check_vma=False: the tiled-bucket consume iterates a traced CSR tile
+    # range (a `while` under jit), which the replication checker cannot
+    # type; outputs are psum-reduced, hence replicated by construction.
     mapped = shard_map(
         sharded_fn_keyed if keyed else sharded_fn,
-        mesh=mesh, in_specs=in_specs, out_specs=iter_spec,
+        mesh=mesh, in_specs=in_specs, out_specs=iter_spec, check_vma=False,
     )
 
     if return_raw:
@@ -471,24 +601,14 @@ def make_count_fn(
         as_struct = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.int32)
         structs = (
             jax.ShapeDtypeStruct((iter_size, Pn, n_loc_pad), jnp.int32),
-            as_struct(plan.bucket_rows),
-            as_struct(plan.bucket_cols_local),
-            as_struct(plan.bucket_cols_compact),
-            as_struct(plan.send_idx),
-        )
+        ) + tuple(as_struct(a) for a in plan.device_arrays)
         in_shard = tuple(NamedSharding(mesh, s) for s in in_specs)
         fn = jax.jit(mapped, in_shardings=in_shard)
         return fn, structs, in_shard
 
     @jax.jit
     def f(colorings):
-        return mapped(
-            colorings,
-            plan.bucket_rows,
-            plan.bucket_cols_local,
-            plan.bucket_cols_compact,
-            plan.send_idx,
-        )
+        return mapped(colorings, *plan.device_arrays)
 
     if not keyed:
         return f
@@ -510,11 +630,11 @@ def keyed_sample_fn(plan: DistributedPlan, mesh: jax.sharding.Mesh, **kw):
     the single-device engine, so :func:`repro.core.estimator.estimate_counts`
     (and anything else speaking the protocol) runs unmodified on top of the
     shard_map backend.  ``kw`` is forwarded to :func:`make_count_fn`
-    (mode/group_factor/axes/...).  Each call evaluates ``batch`` coloring
-    iterations in one jitted dispatch; jit caches per distinct batch size.
-    When colorings shard over ``iter_axis`` the key count is rounded up to
-    a multiple of the axis size (shard_map divisibility) and the surplus
-    estimates are discarded.
+    (mode/group_factor/impl/fuse/axes/...).  Each call evaluates ``batch``
+    coloring iterations in one jitted dispatch; jit caches per distinct
+    batch size.  When colorings shard over ``iter_axis`` the key count is
+    rounded up to a multiple of the axis size (shard_map divisibility) and
+    the surplus estimates are discarded.
     """
     f = make_count_fn(plan, mesh, keyed=True, **kw)
     iter_axis = kw.get("iter_axis")

@@ -1,0 +1,144 @@
+"""One table program: THE partition-chain DP executor, shared by backends.
+
+The color-coding DP is one *table program*: walk the partition chain in
+postorder, keep a table ``C_node [rows, width]`` per live node, and at each
+internal node contract the left child against the neighbor sum of the right
+child.  Until this module existed that recursion was written twice — once in
+``count_engine`` (in-core) and once inside ``distributed`` (shard_map) — and
+the two copies had already drifted (fusion, true-width tables, and batched
+colorings only worked in-core).
+
+Now the recursion lives here, once, and the backends differ only in their
+**neighbor-sum strategy** — the ``node_fn`` callback that produces one
+internal node's (unmasked) output table:
+
+``local`` (:func:`local_node_fn`)
+    ``M = spmm(A, C_right)`` over the whole in-core graph, or the fused
+    SpMM->combine kernel that never materializes ``M``.
+
+``exchange`` (built inside :mod:`repro.core.distributed`)
+    ``M`` assembled from remote shards via one of the four exchange modes
+    (``alltoall``/``pipeline``/``adaptive``/``ring``), consumed through the
+    §3.3 tiled bucket layout — the same edge-tile/fused kernels, per chunk.
+
+The executor owns everything the strategies must agree on: leaf
+construction, pad-row/pad-column re-masking after every combine, child
+table lifetime (each chain node is the child of exactly one parent, so both
+children die as soon as the parent is built — the paper's sub-template
+table lifetime management), and the root reduction.  A strategy cannot
+forget to mask or leak a table; the backends cannot drift.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .templates import PartitionChain
+
+__all__ = [
+    "build_node_tables",
+    "leaf_table",
+    "run_table_program",
+    "root_count",
+    "local_node_fn",
+]
+
+#: strategy signature: (node_index, combine_tables, c_left, c_right) ->
+#: unmasked output table [rows, >= s_pad] for that internal node
+NodeFn = Callable[[int, ops.CombineTables, jax.Array, jax.Array], jax.Array]
+
+
+def build_node_tables(
+    chain: PartitionChain, k: int, *, lane: int = 128
+) -> Tuple[Dict[int, ops.CombineTables], Dict[int, int]]:
+    """Per-node split tables + padded widths for one partition chain.
+
+    ``lane`` is the column-padding multiple (128 for the Pallas kernels,
+    1 for true-width XLA tables).  Shared by both plan builders.
+    """
+    combine: Dict[int, ops.CombineTables] = {}
+    widths: Dict[int, int] = {}
+    for i, nd in enumerate(chain.nodes):
+        if nd.is_leaf:
+            widths[i] = ops.pad_to(k, lane)
+        else:
+            t1 = chain.nodes[nd.left].size
+            t2 = chain.nodes[nd.right].size
+            tables = ops.build_combine_tables(k, t1, t2, lane=lane)
+            combine[i] = tables
+            widths[i] = tables.s_pad
+    return combine, widths
+
+
+def leaf_table(
+    coloring: jax.Array, k_pad: int, row_mask: jax.Array
+) -> jax.Array:
+    """Leaf tables: one-hot of the coloring, pad rows zeroed."""
+    return jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32) * row_mask
+
+
+def run_table_program(
+    chain: PartitionChain,
+    combine: Mapping[int, ops.CombineTables],
+    leaf: jax.Array,
+    row_mask: jax.Array,
+    node_fn: NodeFn,
+) -> jax.Array:
+    """Execute the partition-chain DP; returns the (masked) root table.
+
+    This is the only copy of the node recursion in the codebase.  Every
+    leaf shares the single ``leaf`` table; each internal node's output from
+    ``node_fn`` is re-masked (pad rows via ``row_mask``, pad columns past
+    the node's true width) and both children are freed immediately.
+    """
+    tables: Dict[int, jax.Array] = {}
+    for i, nd in enumerate(chain.nodes):
+        if nd.is_leaf:
+            tables[i] = leaf
+            continue
+        tbl = combine[i]
+        out = node_fn(i, tbl, tables[nd.left], tables[nd.right])
+        col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
+        tables[i] = out * row_mask * col_mask
+        # free children (keeps XLA liveness tight); every chain node is the
+        # child of exactly one parent, so both entries are dead here.
+        del tables[nd.right]
+        del tables[nd.left]
+    return tables[chain.root_index]
+
+
+def root_count(root: jax.Array) -> jax.Array:
+    """Colorful map count: ``sum_v C_root[v, 0]`` (the full color set has
+    rank 0 in its singleton table)."""
+    acc_dtype = jnp.float64 if root.dtype == jnp.float64 else jnp.float32
+    return jnp.sum(root[:, 0], dtype=acc_dtype)
+
+
+def local_node_fn(
+    spmm_plan: ops.SpmmPlan,
+    row_mask: jax.Array,
+    *,
+    impl: str = "auto",
+    fuse: bool = False,
+) -> NodeFn:
+    """The in-core neighbor-sum strategy: SpMM over the whole graph.
+
+    With ``fuse=True`` each node is one ``ops.fused_count`` call that
+    contracts every ``row_tile``-row block of ``M`` as soon as it is
+    produced and never materializes the full ``[n_pad, B]`` neighbor sum
+    (the paper's fine-grained pipeline, §3.2, at kernel granularity).
+    """
+
+    def node_fn(i, tbl, c_left, c_right):
+        if fuse:
+            return ops.fused_count(spmm_plan, c_left, c_right, tbl, impl=impl)
+        m = ops.spmm(spmm_plan, c_right, impl=impl)
+        # mask pad rows of the neighbor sum before the combine
+        m = m * row_mask
+        return ops.color_combine(c_left, m, tbl, impl=impl)
+
+    return node_fn

@@ -104,9 +104,9 @@ def _fused_kernel(
 )
 def fused_count_pallas(
     slab_dst: jax.Array,  # [NRB * spb, tile] int32 local dst (-1 pad)
-    slab_cols: jax.Array,  # [NRB * spb, tile] int32 global src
-    left: jax.Array,  # [n_pad, A]
-    right: jax.Array,  # [n_pad, B]; rows >= n must be zero
+    slab_cols: jax.Array,  # [NRB * spb, tile] int32 src row of `right`
+    left: jax.Array,  # [out_rows, A] — output height follows `left`
+    right: jax.Array,  # [C, B]; sentinel source rows must be zero
     idx1_t: jax.Array,  # [J_pad, S_pad] int32 transposed split table (left)
     idx2_t: jax.Array,  # [J_pad, S_pad] int32 (neighbor-sum side)
     *,
@@ -115,10 +115,10 @@ def fused_count_pallas(
     row_tile: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    n_pad, b = right.shape
-    _, a = left.shape
+    c, b = right.shape
+    out_rows, a = left.shape
     s_pad = idx1_t.shape[1]
-    nrb = n_pad // row_tile
+    nrb = out_rows // row_tile
     spb = slabs_per_block
     num_slabs, tile = slab_dst.shape
     assert num_slabs == nrb * spb, (num_slabs, nrb, spb)
@@ -131,13 +131,13 @@ def fused_count_pallas(
         in_specs=[
             pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
             pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
-            pl.BlockSpec((n_pad, b), lambda i, j: (0, 0)),
+            pl.BlockSpec((c, b), lambda i, j: (0, 0)),
             pl.BlockSpec((row_tile, a), lambda i, j: (i, 0)),
             pl.BlockSpec((idx1_t.shape[0], s_pad), lambda i, j: (0, 0)),
             pl.BlockSpec((idx2_t.shape[0], s_pad), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, s_pad), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, s_pad), left.dtype),
+        out_shape=jax.ShapeDtypeStruct((out_rows, s_pad), left.dtype),
         scratch_shapes=[pltpu.VMEM((row_tile, b), jnp.float32)],
         interpret=interpret,
     )(slab_dst, slab_cols, right, left, idx1_t, idx2_t)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import pvary_like
+
 from . import ref
 from .color_combine import color_combine_pallas
 from .flash_attention import flash_attention_pallas
@@ -41,11 +43,15 @@ __all__ = [
     "pad_to",
     "SpmmPlan",
     "build_spmm_plan",
+    "build_slab_layout",
+    "build_bucket_tiles",
     "spmm",
+    "spmm_slabs",
     "CombineTables",
     "build_combine_tables",
     "color_combine",
     "fused_count",
+    "fused_count_slabs",
     "flash_attention",
 ]
 
@@ -122,22 +128,36 @@ class SpmmPlan:
 AUTO_DENSITY_THRESHOLD = 64.0
 
 
-def _build_slabs(
+def build_slab_layout(
     rows: np.ndarray,
     cols: np.ndarray,
-    n: int,
     n_pad: int,
     tile_size: int,
     row_tile: int,
+    *,
+    sentinel_col: int,
+    slabs_per_block: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Cut the (dst-sorted) edge list into uniform tile_size-edge slabs
-    grouped by 128-row destination block."""
+    """Cut a (dst-sorted) edge list into uniform tile_size-edge slabs
+    grouped by ``row_tile``-row destination block (the paper's §3.3
+    bounded-task layout).
+
+    ``rows`` are destination rows in ``[0, n_pad)``; ``cols`` may index any
+    source table (the graph's own vertex table, or a concatenated exchange
+    buffer in the distributed engine) — pad slots carry ``dst = -1`` and
+    ``sentinel_col`` (which must name an all-zero source row).
+    ``slabs_per_block`` forces a larger uniform slab count per block (so
+    layouts built per shard can share one shape across shards).
+    """
     nrb = n_pad // row_tile
     blk = rows // row_tile
     counts = np.bincount(blk, minlength=nrb)
     spb = max(1, int(-(-counts.max(initial=0) // tile_size)))
+    if slabs_per_block is not None:
+        assert slabs_per_block >= spb, (slabs_per_block, spb)
+        spb = slabs_per_block
     slab_dst = np.full((nrb, spb * tile_size), -1, np.int32)
-    slab_cols = np.full((nrb, spb * tile_size), n, np.int32)  # zero sentinel
+    slab_cols = np.full((nrb, spb * tile_size), sentinel_col, np.int32)
     starts = np.zeros(nrb, np.int64)
     np.cumsum(counts[:-1], out=starts[1:])
     pos = np.arange(len(rows)) - starts[blk]  # rows sorted => in-block rank
@@ -147,6 +167,69 @@ def _build_slabs(
         slab_dst.reshape(nrb * spb, tile_size),
         slab_cols.reshape(nrb * spb, tile_size),
         spb,
+    )
+
+
+def build_bucket_tiles(
+    bucket: np.ndarray,
+    dst: np.ndarray,
+    srcs: Tuple[np.ndarray, ...],
+    num_buckets: int,
+    tile_size: int,
+    *,
+    dst_sentinel: int,
+    src_sentinels: Tuple[int, ...],
+    num_tiles: Optional[int] = None,
+) -> Tuple[np.ndarray, Tuple[np.ndarray, ...], np.ndarray]:
+    """Cut a bucketed edge list into fixed-size tiles with CSR offsets.
+
+    This is the §3.3 neighbor-list partitioning applied to the distributed
+    engine's (src-shard) buckets: every bucket ``q`` becomes
+    ``ceil(count_q / tile_size)`` tiles of exactly ``tile_size`` slots, laid
+    out back to back, so storage is ``O(edges + num_buckets * tile_size)``
+    — independent of the largest bucket — and every consume task is one
+    uniform tile.  ``bucket`` must be nondecreasing (edges pre-sorted by
+    bucket).  ``srcs`` is a tuple of parallel per-edge source-index arrays
+    (the distributed plan carries both a shard-local and a compact-slot
+    view of the same edges); each gets its own sentinel for pad slots.
+
+    Returns ``(tile_dst [T, tile], tuple of tile_src [T, tile],
+    tile_off [num_buckets + 1])``; ``num_tiles`` pads T to a caller-chosen
+    value (uniform shape across shards).
+    """
+    counts = np.bincount(bucket, minlength=num_buckets)
+    tiles_per = -(-counts // tile_size)  # ceil; empty buckets take 0 tiles
+    tile_off = np.zeros(num_buckets + 1, np.int32)
+    np.cumsum(tiles_per, out=tile_off[1:])
+    t_need = int(tile_off[-1])
+    t = t_need if num_tiles is None else num_tiles
+    assert t >= t_need, (t, t_need)
+    tile_dst = np.full((t, tile_size), dst_sentinel, np.int32)
+    tile_srcs = tuple(
+        np.full((t, tile_size), s, np.int32) for s in src_sentinels
+    )
+    starts = np.zeros(num_buckets, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    # in-bucket rank -> (tile, slot); buckets own disjoint tile ranges
+    rank = np.arange(len(bucket)) - starts[bucket]
+    tidx = tile_off[bucket] + rank // tile_size
+    slot = rank % tile_size
+    tile_dst[tidx, slot] = dst.astype(np.int32)
+    for out, src in zip(tile_srcs, srcs):
+        out[tidx, slot] = src.astype(np.int32)
+    return tile_dst, tile_srcs, tile_off
+
+
+def _build_slabs(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n: int,
+    n_pad: int,
+    tile_size: int,
+    row_tile: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    return build_slab_layout(
+        rows, cols, n_pad, tile_size, row_tile, sentinel_col=n
     )
 
 
@@ -289,6 +372,47 @@ def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
     return jnp.where(plan.written_mask[:, None], out, 0)
 
 
+def spmm_slabs(
+    slab_dst: jax.Array,  # [NRB * spb, tile] int32 block-local dst (-1 pad)
+    slab_cols: jax.Array,  # [NRB * spb, tile] int32 rows of `table`
+    table: jax.Array,  # [C, B] source table; sentinel cols must be zero rows
+    *,
+    out_rows: int,
+    slabs_per_block: int,
+    row_tile: int = 128,
+    impl: str = "auto",
+) -> jax.Array:
+    """Neighbor sum over an explicit slab layout — the rectangular form of
+    :func:`spmm` where the source table need not be the output table.
+
+    The distributed engine routes its all-to-all consume through here: the
+    slab columns index a ``[P * r_pad, B]`` concatenation of the received
+    exchange chunks, while the output is this shard's ``[out_rows, B]``
+    neighbor sum — the same edge-tile kernel as the single-device engine,
+    one uniform ``tile``-edge task per grid step.  Returns [out_rows, B].
+    """
+    impl = _resolve(impl)
+    num_slabs, tile = slab_dst.shape
+    nrb = out_rows // row_tile
+    assert num_slabs == nrb * slabs_per_block, (num_slabs, nrb, slabs_per_block)
+    if impl == "xla":
+        blk = (jnp.arange(num_slabs, dtype=jnp.int32) // slabs_per_block) * row_tile
+        dst_g = jnp.where(slab_dst < 0, out_rows, slab_dst + blk[:, None])
+        gathered = jnp.take(table, slab_cols.reshape(-1), axis=0)
+        return jax.ops.segment_sum(
+            gathered, dst_g.reshape(-1), num_segments=out_rows + 1
+        )[:out_rows]
+    return spmm_edge_tile_pallas(
+        slab_dst,
+        slab_cols,
+        table,
+        slabs_per_block=slabs_per_block,
+        row_tile=row_tile,
+        out_rows=out_rows,
+        interpret=not on_tpu(),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Color-set combine
 # ---------------------------------------------------------------------------
@@ -367,9 +491,7 @@ def color_combine(
                 return acc + jnp.einsum("vsj,vsj->vs", left[:, i1], m[:, i2])
 
             # iterate full chunks; handle the ragged tail separately
-            from repro.comm.ring import _pvary_like
-
-            acc = _pvary_like(jnp.zeros((n, s), left.dtype), left)
+            acc = pvary_like(jnp.zeros((n, s), left.dtype), left)
             full = (j // xla_chunk) * xla_chunk
             acc = jax.lax.fori_loop(
                 0,
@@ -443,6 +565,49 @@ def fused_count(
         num_splits=tables.j,
         slabs_per_block=plan.slabs_per_block,
         row_tile=plan.row_tile,
+        interpret=not on_tpu(),
+    )
+
+
+def fused_count_slabs(
+    slab_dst: jax.Array,  # [NRB * spb, tile] int32 block-local dst (-1 pad)
+    slab_cols: jax.Array,  # [NRB * spb, tile] int32 rows of `right`
+    left: jax.Array,  # [out_rows, A]
+    right: jax.Array,  # [C, B] source table; sentinel cols must be zero rows
+    tables: CombineTables,
+    *,
+    slabs_per_block: int,
+    row_tile: int = 128,
+    impl: str = "auto",
+) -> jax.Array:
+    """Rectangular form of :func:`fused_count` over an explicit slab layout.
+
+    ``right`` may be any source table (the distributed engine passes the
+    concatenated all-to-all exchange buffer); the ``[out_rows, B]`` neighbor
+    sum is never materialized — each ``row_tile`` block of it lives only as
+    the kernel scratch (or one ``lax.map`` step on XLA) before being
+    contracted against the resident ``left`` block.  Returns
+    ``[out_rows, S_pad]``; pad rows/cols unspecified (engine masks).
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        out = fused_count_xla(
+            slab_dst, slab_cols, left, right, tables.idx1, tables.idx2,
+            row_tile=row_tile,
+        )
+        if out.shape[1] < tables.s_pad:
+            out = jnp.pad(out, ((0, 0), (0, tables.s_pad - out.shape[1])))
+        return out
+    return fused_count_pallas(
+        slab_dst,
+        slab_cols,
+        left,
+        right,
+        tables.idx1_t,
+        tables.idx2_t,
+        num_splits=tables.j,
+        slabs_per_block=slabs_per_block,
+        row_tile=row_tile,
         interpret=not on_tpu(),
     )
 

@@ -132,19 +132,26 @@ def _edge_tile_kernel(dst_ref, col_ref, table_ref, out_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("slabs_per_block", "row_tile", "interpret")
+    jax.jit, static_argnames=("slabs_per_block", "row_tile", "out_rows", "interpret")
 )
 def spmm_edge_tile_pallas(
     slab_dst: jax.Array,  # [NRB * spb, tile_size] int32 local dst (-1 pad)
-    slab_cols: jax.Array,  # [NRB * spb, tile_size] int32 global src
-    table: jax.Array,  # [n_pad, B]; rows >= n must be zero
+    slab_cols: jax.Array,  # [NRB * spb, tile_size] int32 src row of `table`
+    table: jax.Array,  # [C, B]; sentinel source rows must be zero
     *,
     slabs_per_block: int,
     row_tile: int = 128,
+    out_rows: int = None,
     interpret: bool = False,
 ) -> jax.Array:
-    n_pad, b = table.shape
-    nrb = n_pad // row_tile
+    """``out_rows`` decouples the output height from the source table: the
+    distributed engine scatters a ``[P * r_pad, B]`` exchange buffer into
+    this shard's ``[n_loc_pad, B]`` neighbor sum; the single-device square
+    case (``out_rows=None``) scatters the vertex table into itself."""
+    c, b = table.shape
+    if out_rows is None:
+        out_rows = c
+    nrb = out_rows // row_tile
     spb = slabs_per_block
     num_slabs, tile = slab_dst.shape
     assert num_slabs == nrb * spb, (num_slabs, nrb, spb)
@@ -155,9 +162,9 @@ def spmm_edge_tile_pallas(
         in_specs=[
             pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
             pl.BlockSpec((1, tile), lambda i, j: (i * spb + j, 0)),
-            pl.BlockSpec((n_pad, b), lambda i, j: (0, 0)),
+            pl.BlockSpec((c, b), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, b), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, b), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((out_rows, b), table.dtype),
         interpret=interpret,
     )(slab_dst, slab_cols, table)

@@ -55,9 +55,15 @@ def main():
     ap.add_argument("--batch", type=int, default=8,
                     help="colorings per jit dispatch (both backends)")
     ap.add_argument("--fuse", action="store_true",
-                    help="fused SpMM->combine (never materializes M)")
+                    help="fused SpMM->combine: never materializes the "
+                         "neighbor sum M (both backends)")
+    ap.add_argument("--impl", default=None, choices=["auto", "xla", "pallas"],
+                    help="kernel routing (both backends; default: "
+                         "backend-appropriate)")
     ap.add_argument("--spmm-kind", default="auto",
                     choices=["auto", "edges", "blocks"])
+    ap.add_argument("--bucket-tile", type=int, default=128,
+                    help="distributed §3.3 task size: edges per bucket tile")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.batch < 1:
@@ -74,6 +80,7 @@ def main():
         g = ccfg.synthesize()
 
     single = args.mode == "single" or (args.mode is None and jax.device_count() == 1)
+    impl_opt = {"impl": args.impl} if args.impl else {}
     if single:
         # a block-dense plan has no edge slabs, so fused_count would fall
         # back to the unfused path: when fusing, steer 'auto' to 'edges'
@@ -82,13 +89,14 @@ def main():
             spmm_kind = "edges"
         request = ccfg.to_request(
             g, backend="single", n_iter=args.iters, delta=args.delta,
-            batch=args.batch, spmm_kind=spmm_kind, fuse=args.fuse,
+            batch=args.batch, spmm_kind=spmm_kind, fuse=args.fuse, **impl_opt,
         )
     else:
         request = ccfg.to_request(
             g, backend="distributed", n_iter=args.iters, delta=args.delta,
             batch=args.batch, mode=args.mode or ccfg.mode,
-            group_factor=args.group_factor,
+            group_factor=args.group_factor, fuse=args.fuse,
+            bucket_tile=args.bucket_tile, **impl_opt,
         )
     counter = Counter.from_request(request)
     if single:
@@ -99,7 +107,9 @@ def main():
                  f"spmm={counter.plan.spmm_plan.kind})")
     else:
         shards = counter.plan.num_shards
-        label = request.plan_opts["mode"]
+        label = (f"{request.plan_opts['mode']}(fuse={args.fuse},"
+                 f"impl={args.impl or 'xla'},"
+                 f"tile={counter.plan.bucket_tile}x{counter.plan.num_tiles})")
 
     key = jax.random.key(args.seed)
     counter.sample_fn(key, args.batch)  # compile outside the timer

@@ -172,6 +172,74 @@ def test_distributed_counting():
                 )
 
 
+def test_tiled_skew_parity():
+    """RMAT skew-8 graph, 8 shards: distributed vs brute force across all
+    four exchange modes on the §3.3 tiled bucket layout, with the fused
+    (never-materialize-M) and Pallas kernel routings; plus a structural
+    jaxpr scan asserting no [P, P, max_e]-shaped bucket array survives in
+    the traced count program."""
+    from repro.core import rmat
+    from repro.core.brute_force import count_colorful_maps
+    from repro.core.distributed import (
+        build_distributed_plan,
+        make_count_fn,
+        shard_coloring,
+    )
+    from repro.core.templates import path_tree
+    from repro.kernels import ops
+
+    g = rmat(1024, 12_000, skew=8, seed=2)  # contiguous shards: heavy skew
+    tree = path_tree(4)
+    rng = np.random.default_rng(9)
+    coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+    want = count_colorful_maps(g, tree, coloring)
+    mesh = make_mesh((8,), ("data",))
+    plan = build_distributed_plan(g, tree, 8)
+    max_e_pad = max(
+        ops.pad_to(int(plan.bucket_counts.max()), plan.bucket_tile),
+        plan.bucket_tile,
+    )
+    check("tiled_plan_no_global_max",
+          all(a.shape[2] < max_e_pad for a in plan.device_arrays
+              if a.ndim == 3 and a.shape[:2] == (8, 8)),
+          f"max_e_pad={max_e_pad}")
+    cols = jnp.asarray(shard_coloring(plan, coloring)[None])
+
+    for mode in ("alltoall", "pipeline", "adaptive", "ring"):
+        for fuse in (False, True):
+            f = make_count_fn(plan, mesh, mode=mode, fuse=fuse)
+            got = np.asarray(f(cols))
+            ok = np.allclose(got, want, rtol=1e-6)
+            check(f"skew8_{mode}_fuse{int(fuse)}", ok, f"got {got[0]} want {want}")
+    # Pallas routing: the edge-tile / fused kernels over the exchange
+    # buffer (alltoall) and the Pallas combine on the incremental modes
+    for mode, fuse in (("alltoall", False), ("alltoall", True),
+                       ("pipeline", True), ("ring", False)):
+        f = make_count_fn(plan, mesh, mode=mode, fuse=fuse, impl="pallas")
+        got = np.asarray(f(cols))
+        ok = np.allclose(got, want, rtol=1e-6)
+        check(f"skew8_{mode}_fuse{int(fuse)}_pallas", ok,
+              f"got {got[0]} want {want}")
+
+    # structural: no traced value in the count program has the seed's
+    # [P, P, max_e] global-max bucket shape (or anything at least as wide)
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_kernels import _iter_eqns
+
+    for mode in ("pipeline", "alltoall", "ring"):
+        f = make_count_fn(plan, mesh, mode=mode)
+        jaxpr = jax.make_jaxpr(f)(cols)
+        bad = [
+            tuple(v.aval.shape)
+            for e in _iter_eqns(jaxpr.jaxpr)
+            for v in list(e.outvars) + [a for a in e.invars if hasattr(a, "aval")]
+            if len(getattr(v.aval, "shape", ())) == 3
+            and v.aval.shape[:2] == (8, 8)
+            and v.aval.shape[2] >= max_e_pad
+        ]
+        check(f"jaxpr_no_global_max_{mode}", not bad, f"found {bad[:3]}")
+
+
 def test_unified_api():
     """Counter facade over 8 real shards: fixed-coloring parity with the
     single-device backend, and the keyed on-device sampling path agreeing
@@ -335,6 +403,7 @@ def main():
     test_ring_collectives()
     test_grouped_exchange()
     test_distributed_counting()
+    test_tiled_skew_parity()
     test_unified_api()
     test_moe_manual_vs_dense()
     test_elastic_restore()

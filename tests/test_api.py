@@ -107,6 +107,34 @@ class TestRequests:
         with pytest.raises(TypeError, match="only swaps"):
             base.with_options(num_shards=2)
 
+    def test_with_options_distributed_knobs(self):
+        """The distributed with_options allow-list covers the shared kernel
+        knobs (impl/fuse) and the §3.3 tile size; unknown keys are rejected
+        with a message naming the backend; bucket_tile rebuilds the plan."""
+        g = erdos_renyi(60, 4.0, seed=8)
+        tree = path_tree(3)
+        rng = np.random.default_rng(2)
+        coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+        want = count_colorful_maps(g, tree, coloring)
+        base = Counter.from_graph(
+            g, tree, backend="distributed", num_shards=1, mode="pipeline"
+        )
+        # exchange/kernel knobs share the built plan
+        fused = base.with_options(mode="ring", fuse=True, impl="xla")
+        assert fused.plan is base.plan
+        assert fused.count_coloring(coloring) == pytest.approx(want)
+        # bucket_tile changes the tiled layout itself -> plan rebuilds
+        retiled = base.with_options(bucket_tile=64)
+        assert retiled.plan is not base.plan
+        assert retiled.plan.bucket_tile == 64
+        assert retiled.count_coloring(coloring) == pytest.approx(want)
+        # unknown keys: rejected, message names the backend
+        with pytest.raises(TypeError, match="distributed"):
+            base.with_options(spmm_kind="edges")
+        single = Counter.from_graph(g, tree, backend="single")
+        with pytest.raises(ValueError, match="single"):
+            single.with_options(mode="ring")
+
     def test_estimate_requires_budget_or_eps(self):
         g = erdos_renyi(20, 3.0, seed=0)
         c = Counter.from_graph(g, path_tree(3), backend="single")

@@ -2,7 +2,6 @@
 and fp32 vs int8 gradient reduce-scatter, from compiled HLO + wall clock."""
 
 import re
-import time
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +19,13 @@ def _mesh():
 def _coll_bytes(compiled):
     txt = compiled.as_text()
     out = {}
-    for kind in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                 "collective-permute"):
+    for kind in (
+        "all-gather",
+        "all-reduce",
+        "reduce-scatter",
+        "all-to-all",
+        "collective-permute",
+    ):
         total = 0
         for m in re.finditer(rf"= (\w+)\[([\d,]*)\][^\n]*? {kind}(?:-start)?\(", txt):
             dims = m.group(2)
@@ -42,7 +46,9 @@ def main():
     fused = jax.jit(
         shard_map(
             lambda x: jax.lax.all_gather(x[0], "data"),
-            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P("data"),
         )
     )
     cf = fused.lower(w).compile()
@@ -53,7 +59,9 @@ def main():
     ring = jax.jit(
         shard_map(
             lambda x: ring_allgather(x[0], "data"),
-            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P("data"),
         )
     )
     cr = ring.lower(w).compile()
@@ -65,13 +73,17 @@ def main():
     rs32 = jax.jit(
         shard_map(
             lambda x: ring_reduce_scatter(x[0], "data")[None],
-            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P("data"),
         )
     )
     rs8 = jax.jit(
         shard_map(
             lambda x: compressed_ring_reduce_scatter(x[0], "data")[None],
-            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P("data"),
         )
     )
     b32 = _coll_bytes(rs32.lower(g).compile())

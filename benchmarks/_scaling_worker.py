@@ -5,7 +5,6 @@ subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 
 import argparse
-import sys
 import time
 
 import jax

@@ -68,8 +68,10 @@ def bench_spmm(g, results, iters=3):
     rng = np.random.default_rng(0)
     out = {}
     width = 128
-    plans = {kind: ops.build_spmm_plan(rows, cols, g.n, kind=kind)
-             for kind in ("edges", "blocks", "auto")}
+    plans = {
+        kind: ops.build_spmm_plan(rows, cols, g.n, kind=kind)
+        for kind in ("edges", "blocks", "auto")
+    }
     n_pad = plans["edges"].n_pad
     t = rng.random((n_pad, width)).astype(np.float32)
     t[g.n:] = 0.0
@@ -77,11 +79,17 @@ def bench_spmm(g, results, iters=3):
     for kind, plan in plans.items():
         f = jax.jit(lambda tab, p=plan: ops.spmm(p, tab, impl="xla"))
         sec = time_fn(lambda: f(table), iters=iters)
-        emit(f"spmm/{kind}", sec * 1e6,
-             f"B={width} resolved={plan.kind} density="
-             f"{0.0 if plan.patch_density is None else plan.patch_density:.1f}")
-        out[kind] = {"us": sec * 1e6, "resolved_kind": plan.kind,
-                     "patch_density": plan.patch_density}
+        emit(
+            f"spmm/{kind}",
+            sec * 1e6,
+            f"B={width} resolved={plan.kind} density="
+            f"{0.0 if plan.patch_density is None else plan.patch_density:.1f}",
+        )
+        out[kind] = {
+            "us": sec * 1e6,
+            "resolved_kind": plan.kind,
+            "patch_density": plan.patch_density,
+        }
     return out
 
 
@@ -93,16 +101,23 @@ def bench_color_combine(g, results, iters=3):
         k, t1, t2 = _heaviest_node(tr)
         tables = ops.build_combine_tables(k, t1, t2, lane=1)
         n_pad = ops.pad_to(g.n + 1, 128)
-        left = jnp.asarray(
-            rng.random((n_pad, math.comb(k, t1))).astype(np.float32))
-        m = jnp.asarray(
-            rng.random((n_pad, math.comb(k, t2))).astype(np.float32))
+        left = jnp.asarray(rng.random((n_pad, math.comb(k, t1))).astype(np.float32))
+        m = jnp.asarray(rng.random((n_pad, math.comb(k, t2))).astype(np.float32))
         f = jax.jit(lambda l, mm: ops.color_combine(l, mm, tables, impl="xla"))
         sec = time_fn(lambda: f(left, m), iters=iters)
-        emit(f"color_combine/{name}", sec * 1e6,
-             f"k={k} t1={t1} t2={t2} S={tables.s} J={tables.j}")
-        out[name] = {"us": sec * 1e6, "k": k, "t1": t1, "t2": t2,
-                     "s": tables.s, "j": tables.j}
+        emit(
+            f"color_combine/{name}",
+            sec * 1e6,
+            f"k={k} t1={t1} t2={t2} S={tables.s} J={tables.j}",
+        )
+        out[name] = {
+            "us": sec * 1e6,
+            "k": k,
+            "t1": t1,
+            "t2": t2,
+            "s": tables.s,
+            "j": tables.j,
+        }
     return out
 
 
@@ -115,23 +130,31 @@ def bench_fused(g, results, iters=3):
         tr = template(name)
         k, t1, t2 = _heaviest_node(tr)
         tables = ops.build_combine_tables(k, t1, t2, lane=1)
-        left = jnp.asarray(
-            rng.random((plan.n_pad, math.comb(k, t1))).astype(np.float32))
+        left = jnp.asarray(rng.random((plan.n_pad, math.comb(k, t1))).astype(np.float32))
         right_np = rng.random((plan.n_pad, math.comb(k, t2))).astype(np.float32)
         right_np[g.n:] = 0.0
         right = jnp.asarray(right_np)
         mask = (jnp.arange(plan.n_pad) < g.n).astype(jnp.float32)[:, None]
-        fused = jax.jit(
-            lambda l, r: ops.fused_count(plan, l, r, tables, impl="xla"))
+        fused = jax.jit(lambda l, r: ops.fused_count(plan, l, r, tables, impl="xla"))
         unfused = jax.jit(
             lambda l, r: ops.color_combine(
-                l, ops.spmm(plan, r, impl="xla") * mask, tables, impl="xla"))
+                l, ops.spmm(plan, r, impl="xla") * mask, tables, impl="xla"
+            )
+        )
         sec_f = time_fn(lambda: fused(left, right), iters=iters)
         sec_u = time_fn(lambda: unfused(left, right), iters=iters)
-        emit(f"fused/{name}", sec_f * 1e6,
-             f"unfused={sec_u * 1e6:.1f}us ratio={sec_u / sec_f:.2f}")
-        out[name] = {"fused_us": sec_f * 1e6, "unfused_us": sec_u * 1e6,
-                     "k": k, "t1": t1, "t2": t2}
+        emit(
+            f"fused/{name}",
+            sec_f * 1e6,
+            f"unfused={sec_u * 1e6:.1f}us ratio={sec_u / sec_f:.2f}",
+        )
+        out[name] = {
+            "fused_us": sec_f * 1e6,
+            "unfused_us": sec_u * 1e6,
+            "k": k,
+            "t1": t1,
+            "t2": t2,
+        }
     return out
 
 
@@ -156,10 +179,8 @@ def bench_iteration(g, results, batch=8, iters=2):
         sec_f = time_fn(lambda: f_f(key), iters=iters) / batch
 
         emit(f"iter/{name}/seed", sec_seed * 1e6, f"V={g.n} E={g.num_edges}")
-        emit(f"iter/{name}/batch{batch}", sec_b * 1e6,
-             f"speedup={sec_seed / sec_b:.2f}x")
-        emit(f"iter/{name}/fused_batch{batch}", sec_f * 1e6,
-             f"speedup={sec_seed / sec_f:.2f}x")
+        emit(f"iter/{name}/batch{batch}", sec_b * 1e6, f"speedup={sec_seed / sec_b:.2f}x")
+        emit(f"iter/{name}/fused_batch{batch}", sec_f * 1e6, f"speedup={sec_seed / sec_f:.2f}x")
         out[name] = {
             "seed_us": sec_seed * 1e6,
             f"batch{batch}_us": sec_b * 1e6,
@@ -175,8 +196,13 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
     templates = BENCH_TEMPLATES[:2] if smoke else BENCH_TEMPLATES
     results = {
         "backend": jax.default_backend(),
-        "graph": {"v": g.n, "e": g.num_edges, "skew": 3,
-                  "name": "fig6-smoke" if smoke else "fig6"},
+        "smoke": smoke,
+        "graph": {
+            "v": g.n,
+            "e": g.num_edges,
+            "skew": 3,
+            "name": "fig6-smoke" if smoke else "fig6",
+        },
         "templates": templates,
         "batch": 8,
     }
@@ -193,8 +219,9 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="small graph + first two templates (CI)")
+    ap.add_argument(
+        "--smoke", action="store_true", help="small graph + first two templates (CI)"
+    )
     ap.add_argument("--no-json", action="store_true")
     args = ap.parse_args()
     run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)

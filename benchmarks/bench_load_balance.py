@@ -42,8 +42,7 @@ def bench_single_device(smoke=False):
     v, e = (1 << 10, 10_000) if smoke else (1 << 13, 80_000)
     for skew in (1, 3, 8):
         g = rmat(v, e, skew=skew, seed=skew)
-        rec = {"imbalance": g.skewness(), "max_deg": g.max_degree,
-               "tiles": {}}
+        rec = {"imbalance": g.skewness(), "max_deg": g.max_degree, "tiles": {}}
         # per-vertex tasks: imbalance = max/mean (paper's pathology)
         emit(
             f"fig11/per_vertex_imbalance/skew{skew}",
@@ -88,8 +87,10 @@ def bench_distributed_buckets(smoke=False, shards=8, bucket_tile=128):
         # "random" = the paper's partition (what CountingConfig.synthesize
         # produces); "contiguous" = worst case, hubs concentrated in one
         # shard — where the old layout's global-max padding explodes
-        for pname, g in (("random", relabel_random(raw, seed=skew + 1)),
-                         ("contiguous", raw)):
+        for pname, g in (
+            ("random", relabel_random(raw, seed=skew + 1)),
+            ("contiguous", raw),
+        ):
             plan = build_distributed_plan(
                 g, tree, shards, bucket_tile=bucket_tile
             )
@@ -145,8 +146,7 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="small graphs (CI)")
+    ap.add_argument("--smoke", action="store_true", help="small graphs (CI)")
     ap.add_argument("--no-json", action="store_true")
     args = ap.parse_args()
     run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)

@@ -1,0 +1,140 @@
+"""Multi-template counting: cross-template subtree reuse (DESIGN.md §14).
+
+Two measurements per template family:
+
+  * structural — the compiled :class:`TemplateDag`'s unique-table count
+    against the sum of the per-template partition-chain nodes (what N
+    independent ``Counter.estimate`` calls would compute), plus the same
+    ratio restricted to internal nodes (the tables that actually cost an
+    SpMM + combine per coloring);
+  * wall-clock — one shared-DAG ``estimate_many`` pass vs N independent
+    per-template passes over the SAME colorings (``n_colors = k``, the
+    apples-to-apples baseline) and vs today's default independent passes
+    (each template with its native color budget).
+
+``run()`` emits the usual CSV lines and returns a dict; ``main()`` writes
+``BENCH_multi_template.json`` at the repo root (like the other BENCH
+files) so the per-PR reuse trajectory is machine-readable and the CI
+bench gate can hold the line on it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.core import rmat
+from repro.core.count_engine import (
+    build_counting_plan,
+    build_multi_counting_plan,
+    count_fn,
+    count_fn_many,
+)
+from repro.core.templates import compile_templates, partition_tree, template
+
+from .common import ROOT, emit, time_fn
+
+JSON_PATH = os.path.join(ROOT, "BENCH_multi_template.json")
+
+#: benchmark families: nested spiders (maximal sharing: u3-1 ⊂ u5-2 ⊂ the
+#: u7-2 two-leg spider) and the named paper trio used by the config rows
+FAMILIES = {
+    "spiders": ("u3-1", "u5-2", "u7-2"),
+    "paper": ("u5-2", "u7-2", "u10-2"),
+}
+
+
+def dedup_stats(names) -> dict:
+    """Structural reuse: unique DAG tables vs sum of per-chain nodes."""
+    dag = compile_templates(names)
+    chains = [partition_tree(template(n)) for n in names]
+    chain_nodes = sum(len(c.nodes) for c in chains)
+    chain_internal = sum(len(c.internal_nodes()) for c in chains)
+    return {
+        "k": dag.k,
+        "chain_nodes_sum": chain_nodes,
+        "dag_nodes": len(dag.nodes),
+        "chain_internal_sum": chain_internal,
+        "dag_internal": len(dag.internal_nodes()),
+        "unique_table_ratio": len(dag.nodes) / chain_nodes,
+        "unique_internal_ratio": len(dag.internal_nodes()) / chain_internal,
+    }
+
+
+def bench_family(fname: str, names, g, batch: int) -> dict:
+    """Shared-pass vs independent-pass wall clock on one graph."""
+    rec = dedup_stats(names)
+    key = jax.random.key(0)
+
+    mp = build_multi_counting_plan(g, names)
+    f_many = count_fn_many(mp, batch=batch)
+    sec_shared = time_fn(lambda: f_many(key), iters=5)
+    rec["shared_us"] = sec_shared * 1e6
+
+    # independent passes over the SAME colorings (shared k): what N
+    # Counter.estimate calls recomputing the shared subtree tables cost
+    sec_same_k = 0.0
+    for n in names:
+        p = build_counting_plan(g, template(n), n_colors=mp.k)
+        f = count_fn(p, batch=batch)
+        sec_same_k += time_fn(lambda f=f: f(key), iters=5)
+    rec["independent_same_k_us"] = sec_same_k * 1e6
+
+    # today's default: each template with its native color budget
+    sec_native = 0.0
+    for n in names:
+        p = build_counting_plan(g, template(n))
+        f = count_fn(p, batch=batch)
+        sec_native += time_fn(lambda f=f: f(key), iters=5)
+    rec["independent_native_k_us"] = sec_native * 1e6
+
+    rec["speedup_vs_independent"] = sec_same_k / sec_shared
+    rec["speedup_vs_native"] = sec_native / sec_shared
+    emit(
+        f"multi_template/{fname}",
+        sec_shared * 1e6,
+        f"dag={rec['dag_nodes']}/{rec['chain_nodes_sum']} "
+        f"shared={sec_shared * 1e3:.0f}ms same_k={sec_same_k * 1e3:.0f}ms "
+        f"native={sec_native * 1e3:.0f}ms "
+        f"speedup={rec['speedup_vs_independent']:.2f}x",
+    )
+    return rec
+
+
+def run(smoke: bool = False, json_path: str = JSON_PATH):
+    v, e, batch = (1 << 11, 16_000, 4) if smoke else (1 << 12, 40_000, 8)
+    g = rmat(v, e, skew=3, seed=0)
+    results = {
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "graph": {"v": g.n, "e": g.num_edges, "skew": 3},
+        "batch": batch,
+        "families": {},
+    }
+    for fname, names in FAMILIES.items():
+        if smoke and fname == "paper":
+            # u10-2's k=10 tables are too wide for the CI smoke budget;
+            # its structural reuse is still recorded below
+            results["families"][fname] = dedup_stats(names)
+            continue
+        results["families"][fname] = bench_family(fname, names, g, batch)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small graphs (CI)")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)
+
+
+if __name__ == "__main__":
+    main()

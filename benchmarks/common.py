@@ -2,12 +2,11 @@
 
 from __future__ import annotations
 
-import json
 import os
 import subprocess
 import sys
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -12,6 +12,8 @@ Emits ``name,us_per_call,derived`` CSV lines:
   fig11/*         Fig. 11  (load balance vs skew; task-size effects)
   peakmem/*       Fig. 12  (peak memory: naive vs pipeline vs ring)
   overall/*       Fig. 13  (end-to-end, naive vs adaptive, template sweep)
+  multi_template/* family counting: shared-DAG reuse vs independent passes
+                  (bench_multi_template; BENCH_multi_template.json)
   adaptive_policy/*, lm_coll/*  (beyond paper: LM collectives)
 
 Multi-device sections run in subprocesses with 8 host devices; the main
@@ -22,7 +24,7 @@ from __future__ import annotations
 
 import traceback
 
-from . import bench_kernels, bench_load_balance, bench_templates
+from . import bench_kernels, bench_load_balance, bench_multi_template, bench_templates
 from .common import run_worker
 
 
@@ -39,6 +41,7 @@ def main() -> None:
     _section("templates", bench_templates.run)
     _section("kernels", bench_kernels.run)
     _section("load_balance", bench_load_balance.run)
+    _section("multi_template", bench_multi_template.run)
     _section(
         "strong_scaling",
         lambda: print(

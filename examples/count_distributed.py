@@ -37,15 +37,22 @@ def main():
     shards = 8
     g = relabel_random(rmat(args.vertices, args.edges, skew=3, seed=0), seed=1)
     tree = template(args.template)
-    print(f"graph: {g.n} vertices, {g.num_edges} edges (skew {g.skewness():.0f}); "
-          f"template {tree.name} (k={tree.n}); {shards} shards\n")
+    print(
+        f"graph: {g.n} vertices, {g.num_edges} edges (skew {g.skewness():.0f}); "
+        f"template {tree.name} (k={tree.n}); {shards} shards\n"
+    )
 
     key = jax.random.key(0)
     base = Counter.from_graph(
         g, tree, backend="distributed", num_shards=shards, mode="alltoall"
     )
-    for mode, gf in (("alltoall", 1), ("pipeline", 1), ("pipeline", 3),
-                     ("adaptive", 1), ("ring", 1)):
+    for mode, gf in (
+        ("alltoall", 1),
+        ("pipeline", 1),
+        ("pipeline", 3),
+        ("adaptive", 1),
+        ("ring", 1),
+    ):
         # one plan build (edge bucketing) shared across all exchange modes
         counter = base.with_options(mode=mode, group_factor=gf)
         counter.sample_fn(key, args.iters)  # compile outside the timer
@@ -53,8 +60,10 @@ def main():
         res = counter.estimate(n_iter=args.iters, key=key, batch=args.iters)
         dt = time.perf_counter() - t0
         label = f"{mode}(g={gf})" if mode == "pipeline" else mode
-        print(f"{label:<14} {dt * 1e3:8.1f} ms / {res.niter} colorings   "
-              f"estimate ~ {res.mean:.4g}")
+        print(
+            f"{label:<14} {dt * 1e3:8.1f} ms / {res.niter} colorings   "
+            f"estimate ~ {res.mean:.4g}"
+        )
 
 
 if __name__ == "__main__":

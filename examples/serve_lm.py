@@ -52,8 +52,10 @@ def main():
     out = eng.generate(prompts, context=context)
     dt = time.perf_counter() - t0
     total_tokens = args.batch * args.new_tokens
-    print(f"arch {cfg.name}: generated {out.shape} in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s incl. compile)")
+    print(
+        f"arch {cfg.name}: generated {out.shape} in {dt:.2f}s "
+        f"({total_tokens / dt:.1f} tok/s incl. compile)"
+    )
     print("first sequence:", out[0].tolist())
 
 

@@ -36,8 +36,10 @@ def main():
     if not args.full:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    print(f"arch {cfg.name}: {cfg.params_count() / 1e6:.1f}M params "
-          f"({cfg.active_params_count() / 1e6:.1f}M active)")
+    print(
+        f"arch {cfg.name}: {cfg.params_count() / 1e6:.1f}M params "
+        f"({cfg.active_params_count() / 1e6:.1f}M active)"
+    )
 
     tcfg = TrainConfig(
         steps=args.steps,
@@ -46,8 +48,7 @@ def main():
         checkpoint_every=100,
         log_every=20,
     )
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch,
-                      seq_len=args.seq)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch, seq_len=args.seq)
 
     step, _ = make_train_step(model, tcfg)
     params = jax.jit(model.init_fn)(jax.random.key(0))
@@ -66,13 +67,17 @@ def main():
         if first_loss is None:
             first_loss = float(metrics["loss"])
         if (i + 1) % tcfg.log_every == 0:
-            print(f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"lr {float(metrics['lr']):.2e}")
+            print(
+                f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}  "
+                f"lr {float(metrics['lr']):.2e}"
+            )
         if (i + 1) % tcfg.checkpoint_every == 0:
             ckpt.save(i + 1, {"params": params, "opt": opt})
     ckpt.wait()
-    print(f"\nloss: {first_loss:.4f} -> {float(metrics['loss']):.4f} "
-          f"over {args.steps - start} steps")
+    print(
+        f"\nloss: {first_loss:.4f} -> {float(metrics['loss']):.4f} "
+        f"over {args.steps - start} steps"
+    )
 
 
 if __name__ == "__main__":

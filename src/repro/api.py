@@ -43,26 +43,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.count_engine import build_counting_plan, colorful_map_count, plan_sample_fn
-from repro.core.estimator import estimate_counts, niter_bound
+from repro.core.count_engine import (
+    build_counting_plan,
+    build_multi_counting_plan,
+    colorful_map_count,
+    colorful_map_count_many,
+    multi_sample_fn,
+    plan_sample_fn,
+)
+from repro.core.estimator import estimate_counts, estimate_counts_many, niter_bound
 from repro.core.graphs import Graph
-from repro.core.templates import Tree, template as resolve_template
+from repro.core.templates import Tree, partition_tree, template as resolve_template
 
-__all__ = ["CountRequest", "CountResult", "Counter", "run"]
+__all__ = ["CountRequest", "CountResult", "MultiCountResult", "Counter", "run"]
 
-#: plan_opts understood by the single-device backend
+#: plan_opts understood by the single-device backend (``n_colors`` widens
+#: the color budget past the template size — the shared-k contract of
+#: family counting, see ``estimate_many``)
 _SINGLE_OPTS = frozenset(
-    {"root", "spmm_kind", "impl", "fuse", "tile_size", "block_size", "lane"}
+    {"root", "spmm_kind", "impl", "fuse", "tile_size", "block_size", "lane",
+     "n_colors"}
 )
 #: plan_opts understood by the distributed backend (``impl``/``fuse`` carry
 #: the same kernel-routing semantics as the single-device engine;
 #: ``bucket_tile`` is the §3.3 task size of the tiled bucket layout)
 _DIST_OPTS = frozenset(
     {"root", "bucket_tile", "num_shards", "mode", "group_factor", "impl",
-     "fuse", "mesh", "data_axis", "iter_axis"}
+     "fuse", "mesh", "data_axis", "iter_axis", "n_colors"}
 )
 #: opts consumed by build_distributed_plan (rest go to make_count_fn)
-_DIST_PLAN_OPTS = frozenset({"root", "bucket_tile", "num_shards"})
+_DIST_PLAN_OPTS = frozenset({"root", "bucket_tile", "num_shards", "n_colors"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +120,65 @@ class CountResult:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiCountResult:
+    """One family run: per-template estimates from shared colorings.
+
+    All array fields are indexed ``[template]`` (``samples`` is
+    ``[niter, template]``); ``result[i]`` gives template ``i``'s view as a
+    plain :class:`CountResult`.  ``unique_tables``/``chain_tables`` record
+    the cross-template reuse the compiled DAG achieved: unique subtree
+    tables computed per coloring vs. the sum of the per-template chains.
+    """
+
+    templates: tuple  # template names
+    estimates: np.ndarray  # [T] median-of-means copy estimates
+    means: np.ndarray  # [T]
+    relative_sds: np.ndarray  # [T]
+    samples: np.ndarray  # [niter, T] per-iteration copy estimates
+    niter: int
+    backend: str
+    graph: str
+    k: int  # shared color budget
+    unique_tables: int  # nodes in the deduplicated DAG
+    chain_tables: int  # sum of per-template chain nodes
+    delta: float
+    eps: Optional[float]
+    elapsed_s: float
+
+    def __len__(self) -> int:
+        return len(self.templates)
+
+    def __getitem__(self, i: int) -> CountResult:
+        return CountResult(
+            estimate=float(self.estimates[i]),
+            mean=float(self.means[i]),
+            relative_sd=float(self.relative_sds[i]),
+            niter=self.niter,
+            samples=self.samples[:, i],
+            backend=self.backend,
+            template=self.templates[i],
+            graph=self.graph,
+            delta=self.delta,
+            eps=self.eps,
+            elapsed_s=self.elapsed_s,
+        )
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    def __str__(self) -> str:
+        per = ", ".join(
+            f"{t}={e:.6g}" for t, e in zip(self.templates, self.estimates)
+        )
+        return (
+            f"MultiCountResult({per} in {self.graph or 'graph'} via "
+            f"{self.backend}, k={self.k}, {self.unique_tables}/"
+            f"{self.chain_tables} unique tables, {self.niter} colorings, "
+            f"{self.elapsed_s:.2f}s)"
+        )
+
+
 def _resolve_backend(backend: str, plan_opts: Mapping[str, Any]) -> str:
     if backend == "auto":
         # an explicit mesh is an unambiguous request for the sharded engine;
@@ -127,9 +196,12 @@ class Counter:
     Construct with :meth:`from_graph` (or :meth:`from_request`); then
 
     * :meth:`estimate` — the (eps, delta) estimator (Algorithm 1);
+    * :meth:`estimate_many` — a whole template family in one pass over the
+      deduplicated subtree DAG (shared colorings, per-template estimates);
     * :meth:`count_one` — one coloring iteration from a key;
     * :meth:`count_coloring` — exact colorful map count for a FIXED
       coloring (backend-parity / oracle testing);
+    * :meth:`count_coloring_many` — the family analogue, per-template;
     * :meth:`sample_stream` — endless stream of estimate batches for
       incremental consumption and serving;
     * :attr:`sample_fn` — the raw backend protocol, for compile warm-up
@@ -144,9 +216,12 @@ class Counter:
         self.plan_opts = plan_opts
         self._plan = None
         self._mesh = None
+        self._num_shards: Optional[int] = None
         self._fn_kw: Dict[str, Any] = {}
+        self._plan_kw: Dict[str, Any] = {}
         self._sample_fn = None
         self._coloring_fn = None  # fixed-coloring counter (parity/oracle)
+        self._families: Dict[tuple, Dict[str, Any]] = {}  # estimate_many state
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -234,39 +309,49 @@ class Counter:
             self._plan = build_counting_plan(self.graph, self.tree, **self.plan_opts)
         return self._plan
 
+    def _dist_ctx(self):
+        """Resolve the mesh, shard count, and option split ONCE — shared by
+        the single-template plan and any ``estimate_many`` family plans."""
+        if self._num_shards is not None:
+            return
+        from repro.launch.mesh import make_mesh
+
+        opts = dict(self.plan_opts)
+        mesh = self._mesh if self._mesh is not None else opts.pop("mesh", None)
+        opts.pop("mesh", None)
+        num_shards = opts.pop("num_shards", None)
+        self._plan_kw = {k: v for k, v in opts.items() if k in _DIST_PLAN_OPTS}
+        self._fn_kw = {k: v for k, v in opts.items() if k not in _DIST_PLAN_OPTS}
+        data_axis = self._fn_kw.get("data_axis", "data")
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            num_shards = num_shards or sizes[data_axis]
+            if num_shards != sizes[data_axis]:
+                raise ValueError(
+                    f"num_shards={num_shards} does not match the mesh's "
+                    f"{data_axis!r} axis size {sizes[data_axis]}"
+                )
+        else:
+            # a config may ask for more shards than this host has
+            num_shards = min(num_shards or jax.device_count(),
+                             jax.device_count())
+            mesh = make_mesh((num_shards,), (data_axis,))
+        ax = self._fn_kw.get("iter_axis")
+        if ax and ax not in mesh.axis_names:
+            raise ValueError(
+                f"iter_axis {ax!r} is not an axis of the mesh "
+                f"{mesh.axis_names} — pass an explicit mesh containing it"
+            )
+        self._mesh = mesh
+        self._num_shards = num_shards
+
     def _build_distributed(self):
         if self._plan is None:
             from repro.core.distributed import build_distributed_plan
-            from repro.launch.mesh import make_mesh
 
-            opts = dict(self.plan_opts)
-            mesh = opts.pop("mesh", None)
-            num_shards = opts.pop("num_shards", None)
-            plan_kw = {k: v for k, v in opts.items() if k in _DIST_PLAN_OPTS}
-            self._fn_kw = {k: v for k, v in opts.items() if k not in _DIST_PLAN_OPTS}
-            data_axis = self._fn_kw.get("data_axis", "data")
-            if mesh is not None:
-                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-                num_shards = num_shards or sizes[data_axis]
-                if num_shards != sizes[data_axis]:
-                    raise ValueError(
-                        f"num_shards={num_shards} does not match the mesh's "
-                        f"{data_axis!r} axis size {sizes[data_axis]}"
-                    )
-            else:
-                # a config may ask for more shards than this host has
-                num_shards = min(num_shards or jax.device_count(),
-                                 jax.device_count())
-                mesh = make_mesh((num_shards,), (data_axis,))
-            ax = self._fn_kw.get("iter_axis")
-            if ax and ax not in mesh.axis_names:
-                raise ValueError(
-                    f"iter_axis {ax!r} is not an axis of the mesh "
-                    f"{mesh.axis_names} — pass an explicit mesh containing it"
-                )
-            self._mesh = mesh
+            self._dist_ctx()
             self._plan = build_distributed_plan(
-                self.graph, self.tree, num_shards, **plan_kw
+                self.graph, self.tree, self._num_shards, **self._plan_kw
             )
         return self._plan
 
@@ -380,6 +465,141 @@ class Counter:
             (self._iter_size(), plan.num_shards, plan.n_loc_pad),
         )
         return float(np.asarray(self._coloring_fn(jnp.asarray(cols)))[0])
+
+    # ------------------------------------------------------- family counting
+    def _family(self, templates) -> Dict[str, Any]:
+        """Build (and cache) the shared-DAG state for a template family.
+
+        The family is compiled once into a deduplicated
+        :class:`~repro.core.templates.TemplateDag` (keyed by rooted
+        canonical subtree signatures) and counted in ONE table-program pass
+        per coloring on this Counter's backend — the cross-template subtree
+        reuse of DESIGN.md §14.
+        """
+        trees = tuple(
+            resolve_template(t) if isinstance(t, str) else t for t in templates
+        )
+        if not trees:
+            raise ValueError("estimate_many needs at least one template")
+        st = self._families.get(trees)
+        if st is not None:
+            return st
+        if self.backend == "single":
+            keep = {k: v for k, v in self.plan_opts.items() if k != "root"}
+            plan = build_multi_counting_plan(self.graph, trees, **keep)
+            st = {"plan": plan, "sample_fn": multi_sample_fn(plan),
+                  "coloring_fn": None}
+        else:
+            from repro.core.distributed import build_distributed_plan
+
+            self._dist_ctx()
+            plan_kw = {k: v for k, v in self._plan_kw.items() if k != "root"}
+            plan = build_distributed_plan(
+                self.graph, trees, self._num_shards, **plan_kw
+            )
+            st = {"plan": plan, "sample_fn": None, "coloring_fn": None}
+        self._families[trees] = st
+        return st
+
+    def estimate_many(
+        self,
+        templates,
+        n_iter: Optional[int] = None,
+        *,
+        eps: Optional[float] = None,
+        delta: float = 0.1,
+        key: Optional[jax.Array] = None,
+        batch: Optional[int] = None,
+        progress: bool = False,
+    ) -> MultiCountResult:
+        """(eps, delta)-estimates for a whole template family in one pass.
+
+        Every coloring iteration runs the family's deduplicated DAG once:
+        subtree tables shared across templates (canonically-identical
+        rooted subtrees) are computed a single time and every template root
+        reads its own entry — counting N related templates costs the
+        unique-table work, not N chains.  All templates share one coloring
+        of ``k = max template size`` colors (or ``n_colors``), and each
+        gets its own unbiased scale ``k^t (k-t)!/k!/|Aut|``; per-template
+        median-of-means/RSD come from the same vectorized estimator as the
+        scalar path.  With the same ``key``, a per-template ``estimate`` on
+        a Counter built with ``n_colors=k`` sees the identical colorings —
+        the two agree sample for sample (the family-parity invariant).
+        """
+        st = self._family(templates)
+        plan = st["plan"]
+        if n_iter is None:
+            if eps is None:
+                raise ValueError("pass n_iter or eps (to derive the bound)")
+            n_iter = niter_bound(plan.k, eps, delta)
+        if key is None:
+            key = jax.random.key(0)
+        b = batch or min(8, n_iter)
+        if st["sample_fn"] is None:  # distributed: keyed shard_map sampler
+            from repro.core.distributed import keyed_sample_fn
+
+            st["sample_fn"] = keyed_sample_fn(plan, self._mesh, **self._fn_kw)
+        dag = plan.dag if self.backend == "single" else plan.program
+        chain_tables = sum(
+            len(partition_tree(t).nodes) for t in plan.templates
+        )
+        t0 = time.perf_counter()
+        est = estimate_counts_many(
+            st["sample_fn"], n_iter, key, delta=delta, batch=b, progress=progress
+        )
+        elapsed = time.perf_counter() - t0
+        names = tuple(
+            t.name or f"tree{i}" for i, t in enumerate(plan.templates)
+        )
+        return MultiCountResult(
+            templates=names,
+            estimates=est.estimates,
+            means=est.means,
+            relative_sds=est.relative_sds,
+            samples=est.samples,
+            niter=est.niter,
+            backend=self.backend,
+            graph=self.graph.name,
+            k=plan.k,
+            unique_tables=len(dag.nodes),
+            chain_tables=chain_tables,
+            delta=delta,
+            eps=eps,
+            elapsed_s=elapsed,
+        )
+
+    def count_coloring_many(self, templates, coloring: np.ndarray) -> np.ndarray:
+        """Exact per-template colorful map counts for a FIXED coloring.
+
+        The family analogue of :meth:`count_coloring` (the deterministic
+        backend-parity quantity): one shared-DAG pass, float64
+        ``[num_templates]``; multiply by the family plan's ``scales`` for
+        copy estimates.  The coloring must use the family's shared color
+        budget ``k``.
+        """
+        st = self._family(templates)
+        plan = st["plan"]
+        coloring = np.asarray(coloring, np.int32).reshape(-1)
+        if coloring.shape[0] != self.graph.n:
+            raise ValueError(f"coloring has {coloring.shape[0]} entries, "
+                             f"graph has {self.graph.n} vertices")
+        if self.backend == "single":
+            col = np.zeros(plan.n_pad, np.int32)
+            col[: self.graph.n] = coloring
+            return np.asarray(
+                colorful_map_count_many(plan, jnp.asarray(col)), np.float64
+            )
+        from repro.core.distributed import make_count_fn, shard_coloring
+
+        if st["coloring_fn"] is None:
+            st["coloring_fn"] = make_count_fn(plan, self._mesh, **self._fn_kw)
+        cols = np.broadcast_to(
+            shard_coloring(plan, coloring)[None],
+            (self._iter_size(), plan.num_shards, plan.n_loc_pad),
+        )
+        return np.asarray(
+            st["coloring_fn"](jnp.asarray(cols)), np.float64
+        )[0]
 
     def sample_stream(
         self, key: Optional[jax.Array] = None, *, batch: int = 8

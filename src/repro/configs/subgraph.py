@@ -24,6 +24,11 @@ class CountingConfig:
     group_factor: int = 1
     bucket_tile: int = 128  # §3.3 task size of the tiled bucket layout
     skew: int = 3  # RMAT skew when synthesized
+    #: multi-template family (template names): when non-empty, the row is a
+    #: one-pass family-counting workload over the shared subtree DAG
+    #: (``Counter.estimate_many`` / the multi-template dry-run cell);
+    #: ``template`` stays the row's representative single template.
+    templates: tuple = ()
     #: 'grid' — graph over data(16), colorings over model(16) with the
     #: unrolled grouped exchange; 'flat' — graph over all chips with the
     #: O(1)-HLO relay ring (the beyond-paper mode for big-V datasets)
@@ -107,9 +112,18 @@ COUNTING_CONFIGS = {
     "friendster-u12-1": CountingConfig(
         "friendster-u12-1", *PAPER_DATASETS["friendster"][:2],
         template="u12-1", num_shards=256, mode="ring", mesh_kind="flat"),
+    # multi-template family rows: one shared-DAG pass per coloring
+    # (nested spiders: u3-1 ⊂ u5-2 ⊂ u7-2, maximal subtree reuse)
+    "rmat500-family": CountingConfig(
+        "rmat500-family", *PAPER_DATASETS["rmat-500m"][:2],
+        template="u10-2", num_shards=16, mode="pipeline",
+        templates=("u5-2", "u7-2", "u10-2")),
     # benchmark rows (CPU-scale, same shape family)
     "bench-small": CountingConfig("bench-small", 20_000, 200_000, template="u5-2",
                                   num_shards=8),
     "bench-medium": CountingConfig("bench-medium", 50_000, 1_000_000,
                                    template="u10-2", num_shards=8),
+    "bench-family": CountingConfig("bench-family", 20_000, 200_000,
+                                   template="u7-2", num_shards=8,
+                                   templates=("u3-1", "u5-2", "u7-2")),
 }

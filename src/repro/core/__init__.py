@@ -17,8 +17,10 @@ facade, which wraps all of this behind one backend-agnostic interface):
 
 from .templates import (  # noqa: F401
     TEMPLATES,
+    TemplateDag,
     Tree,
     automorphism_count,
+    compile_templates,
     partition_complexity,
     partition_tree,
     path_tree,
@@ -45,14 +47,21 @@ from .table_program import (  # noqa: F401
 )
 from .count_engine import (  # noqa: F401
     CountingPlan,
+    MultiCountingPlan,
     build_counting_plan,
+    build_multi_counting_plan,
     colorful_map_count,
+    colorful_map_count_many,
     count_fn,
+    count_fn_many,
+    multi_sample_fn,
     plan_sample_fn,
 )
 from .estimator import (  # noqa: F401
     CountEstimate,
+    MultiCountEstimate,
     estimate_counts,
+    estimate_counts_many,
     niter_bound,
     num_groups_for,
 )

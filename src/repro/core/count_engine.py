@@ -4,7 +4,7 @@ Pipeline per coloring iteration (Algorithm 1 of the paper):
 
 1. sample a random coloring ``col(v) in {0..k-1}``;
 2. leaf tables = one-hot of the coloring, ``[n_pad, k_pad]``;
-3. for each internal partition node (postorder):
+3. for each internal partition node (topological order):
    ``M = spmm(A, C_right)`` (neighbor sum) then
    ``C_node = color_combine(C_left, M)`` (split-table contraction),
    with pad rows/cols re-masked — or, with ``fuse=True``, one
@@ -12,8 +12,8 @@ Pipeline per coloring iteration (Algorithm 1 of the paper):
    ``M`` as soon as it is produced and never materializes the full
    ``[n_pad, B]`` neighbor sum (the paper's fine-grained pipeline, §3.2,
    at kernel granularity; see DESIGN.md §11);
-4. colorful map count = ``sum_v C_root[v, 0]`` (the full color set has rank
-   0 in its singleton table).
+4. colorful map count = ``sum_{v, S} C_root[v, S]`` (one column per color
+   set of the template's size; the single full-set column when t == k).
 
 Column padding is impl-dependent (``lane``): the Pallas kernels need
 128-lane-aligned tables, while the XLA paths run at true table widths —
@@ -25,6 +25,13 @@ so ``count_fn(plan, batch=B)`` evaluates B independent colorings per jit
 call (vmap over the DP), amortizing dispatch and plan overheads across the
 batch — the single-device mirror of the paper's multi-node outer loop.
 
+Multi-template counting: :func:`build_multi_counting_plan` compiles a whole
+template family into one deduplicated :class:`TemplateDag` (DESIGN.md §14)
+and :func:`colorful_map_count_many` runs it as ONE table program per
+coloring — every canonically-unique subtree table is computed once and
+every template root reads its own entry, so counting N related templates
+costs the unique-table work, not N independent chains.
+
 The DP uses ``d = 1`` in the recurrence and divides the final count by
 ``|Aut(T)|`` once — equivalent to the paper's per-step over-counting factor
 (see DESIGN.md §1) and exactly testable against the brute-force oracle.
@@ -34,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,15 +56,37 @@ from .table_program import (
     root_count,
     run_table_program,
 )
-from .templates import PartitionChain, Tree, automorphism_count, partition_tree
+from .templates import (
+    PartitionChain,
+    TemplateDag,
+    Tree,
+    automorphism_count,
+    compile_templates,
+    partition_tree,
+)
 
 __all__ = [
     "CountingPlan",
+    "MultiCountingPlan",
     "build_counting_plan",
+    "build_multi_counting_plan",
     "colorful_map_count",
+    "colorful_map_count_many",
     "count_fn",
+    "count_fn_many",
     "plan_sample_fn",
+    "multi_sample_fn",
+    "copy_scale",
 ]
+
+
+def copy_scale(k: int, t: int, aut: int) -> float:
+    """Per-iteration estimator scale for a size-``t`` template counted with
+    ``k`` colors: ``k^t (k-t)! / k! / |Aut|`` — the inverse probability that
+    the t image vertices of a copy draw pairwise-distinct colors, divided by
+    the rooted-map over-count.  Reduces to the paper's ``k^k / k! / |Aut|``
+    when ``t == k``."""
+    return (k ** t) * math.factorial(k - t) / math.factorial(k) / aut
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +95,7 @@ class CountingPlan:
 
     tree: Tree
     chain: PartitionChain
-    k: int
+    k: int  # color budget (== tree.n unless n_colors widened it)
     n: int
     n_pad: int
     aut: int
@@ -81,9 +110,52 @@ class CountingPlan:
 
     @property
     def scale(self) -> float:
-        """k^k / k! / |Aut| — maps colorful map count to copy estimate."""
-        k = self.k
-        return (k ** k) / math.factorial(k) / self.aut
+        """Maps the colorful map count to the copy estimate."""
+        return copy_scale(self.k, self.tree.n, self.aut)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiCountingPlan:
+    """Static data for one-pass family counting: shared graph plan + the
+    deduplicated template DAG's combine tables."""
+
+    templates: Tuple[Tree, ...]
+    dag: TemplateDag
+    k: int  # shared color budget (max template size unless widened)
+    n: int
+    n_pad: int
+    auts: Tuple[int, ...]
+    spmm_plan: ops.SpmmPlan
+    combine: Dict[int, ops.CombineTables]
+    widths: Dict[int, int]
+    impl: str = "auto"
+    fuse: bool = False
+    lane: int = 128
+
+    @property
+    def num_templates(self) -> int:
+        return len(self.templates)
+
+    @property
+    def scales(self) -> Tuple[float, ...]:
+        """Per-template copy-estimate scales (all against the shared k)."""
+        return tuple(
+            copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts)
+        )
+
+
+def _build_spmm(g, spmm_kind, tile_size, block_size):
+    rows, cols = edge_list(g)
+    return ops.build_spmm_plan(
+        rows, cols, g.n, kind=spmm_kind, tile_size=tile_size, block_size=block_size
+    )
+
+
+def _resolve_lane(lane, impl):
+    if lane is None:
+        # Pallas kernels need 128-lane tables; XLA runs at true widths.
+        lane = 128 if ops.resolve_impl(impl) == "pallas" else 1
+    return lane
 
 
 def build_counting_plan(
@@ -97,16 +169,16 @@ def build_counting_plan(
     tile_size: int = 128,
     block_size: int = 128,
     lane: Optional[int] = None,
+    n_colors: Optional[int] = None,
 ) -> CountingPlan:
+    """``n_colors`` widens the color budget past the template size (used to
+    compare single-template runs against a family counted with shared k)."""
     chain = partition_tree(tree, root=root)
-    k = tree.n
-    rows, cols = edge_list(g)
-    plan = ops.build_spmm_plan(
-        rows, cols, g.n, kind=spmm_kind, tile_size=tile_size, block_size=block_size
-    )
-    if lane is None:
-        # Pallas kernels need 128-lane tables; XLA runs at true widths.
-        lane = 128 if ops.resolve_impl(impl) == "pallas" else 1
+    k = n_colors if n_colors is not None else tree.n
+    if k < tree.n:
+        raise ValueError(f"n_colors={k} is smaller than the template ({tree.n})")
+    plan = _build_spmm(g, spmm_kind, tile_size, block_size)
+    lane = _resolve_lane(lane, impl)
     combine, widths = build_node_tables(chain, k, lane=lane)
     return CountingPlan(
         tree=tree,
@@ -124,6 +196,52 @@ def build_counting_plan(
     )
 
 
+def build_multi_counting_plan(
+    g: Graph,
+    templates: Sequence,
+    *,
+    roots: Optional[Sequence[int]] = None,
+    spmm_kind: str = "edges",
+    impl: str = "auto",
+    fuse: bool = False,
+    tile_size: int = 128,
+    block_size: int = 128,
+    lane: Optional[int] = None,
+    n_colors: Optional[int] = None,
+) -> MultiCountingPlan:
+    """One plan for a whole template family: compile the set into a shared
+    :class:`TemplateDag` and build each unique node's combine tables once."""
+    dag = compile_templates(templates, n_colors=n_colors, roots=roots)
+    plan = _build_spmm(g, spmm_kind, tile_size, block_size)
+    lane = _resolve_lane(lane, impl)
+    combine, widths = build_node_tables(dag, dag.k, lane=lane)
+    return MultiCountingPlan(
+        templates=dag.templates,
+        dag=dag,
+        k=dag.k,
+        n=g.n,
+        n_pad=plan.n_pad,
+        auts=tuple(automorphism_count(t) for t in dag.templates),
+        spmm_plan=plan,
+        combine=combine,
+        widths=widths,
+        impl=impl,
+        fuse=fuse,
+        lane=lane,
+    )
+
+
+def _program_counts(plan, program, coloring: jax.Array) -> tuple:
+    """Run ``program`` on one coloring; per-root colorful map counts."""
+    n_pad = plan.n_pad
+    row_mask = (jnp.arange(n_pad) < plan.n).astype(jnp.float32)[:, None]
+    leaf = leaf_table(coloring, ops.pad_to(plan.k, plan.lane), row_mask)
+    node_fn = local_node_fn(plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse)
+    return run_table_program(
+        program, plan.combine, leaf, row_mask, node_fn, root_fn=root_count
+    )
+
+
 def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
     """Number of colorful rooted embedding maps for one coloring.
 
@@ -134,12 +252,18 @@ def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
     (:mod:`repro.core.table_program`) with the ``local`` (whole-graph SpMM)
     neighbor-sum strategy.
     """
-    n_pad = plan.n_pad
-    row_mask = (jnp.arange(n_pad) < plan.n).astype(jnp.float32)[:, None]
-    leaf = leaf_table(coloring, ops.pad_to(plan.k, plan.lane), row_mask)
-    node_fn = local_node_fn(plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse)
-    root = run_table_program(plan.chain, plan.combine, leaf, row_mask, node_fn)
-    return root_count(root)
+    return _program_counts(plan, plan.chain, coloring)[0]
+
+
+def colorful_map_count_many(
+    plan: MultiCountingPlan, coloring: jax.Array
+) -> jax.Array:
+    """Per-template colorful map counts ``[num_templates]`` for ONE coloring.
+
+    One pass over the deduplicated DAG: shared subtree tables are computed
+    once; each template root reduces to its own count.
+    """
+    return jnp.stack(_program_counts(plan, plan.dag, coloring))
 
 
 def count_fn(plan: CountingPlan, batch: Optional[int] = None):
@@ -173,6 +297,47 @@ def count_fn(plan: CountingPlan, batch: Optional[int] = None):
     return jax.jit(fb)
 
 
+def count_fn_many(plan: MultiCountingPlan, batch: Optional[int] = None):
+    """Jitted family counter: ``f(key) -> (maps, estimates)`` with shapes
+    ``[R]`` (``batch=None``) or ``[B, R]`` — the same key-derived colorings
+    as :func:`count_fn` with ``n_colors=plan.k``, so a family run and a
+    per-template run from the same key see identical colorings."""
+    scales = jnp.asarray(plan.scales)
+
+    if batch is None:
+
+        def f(key: jax.Array):
+            coloring = jax.random.randint(
+                key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
+            )
+            maps = colorful_map_count_many(plan, coloring)
+            return maps, maps * scales
+
+        return jax.jit(f)
+
+    def fb(key: jax.Array):
+        colorings = jax.random.randint(
+            key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
+        )
+        maps = jax.vmap(lambda c: colorful_map_count_many(plan, c))(colorings)
+        return maps, maps * scales[None, :]
+
+    return jax.jit(fb)
+
+
+def _cached_sampler(make_fn):
+    cache: Dict[int, object] = {}
+
+    def sample(key: jax.Array, batch: int) -> np.ndarray:
+        f = cache.get(batch)
+        if f is None:
+            f = cache[batch] = make_fn(batch)
+        _, est = f(key)
+        return np.asarray(est, np.float64)
+
+    return sample
+
+
 def plan_sample_fn(plan: CountingPlan):
     """Adapt a single-device plan to the backend ``sample_fn`` protocol.
 
@@ -182,13 +347,21 @@ def plan_sample_fn(plan: CountingPlan):
     independent colorings derived from ``key``.  Compiled ``count_fn``
     closures are cached per batch size so repeated calls reuse the jit cache.
     """
-    cache: Dict[int, object] = {}
+    sample = _cached_sampler(lambda b: count_fn(plan, batch=b))
 
-    def sample(key: jax.Array, batch: int) -> np.ndarray:
-        f = cache.get(batch)
-        if f is None:
-            f = cache[batch] = count_fn(plan, batch=batch)
-        _, est = f(key)
-        return np.asarray(est, np.float64).reshape(-1)
+    def sample1(key: jax.Array, batch: int) -> np.ndarray:
+        return sample(key, batch).reshape(-1)
 
-    return sample
+    return sample1
+
+
+def multi_sample_fn(plan: MultiCountingPlan):
+    """The family variant of the protocol: ``sample_fn(key, batch) ->
+    float64 [batch, num_templates]`` per-coloring copy estimates, consumed
+    by :func:`repro.core.estimator.estimate_counts_many`."""
+    sample = _cached_sampler(lambda b: count_fn_many(plan, batch=b))
+
+    def sample_many(key: jax.Array, batch: int) -> np.ndarray:
+        return sample(key, batch).reshape(batch, plan.num_templates)
+
+    return sample_many

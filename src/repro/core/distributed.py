@@ -51,6 +51,13 @@ Iteration parallelism: the outer color-coding loop is embarrassingly
 parallel, so independent colorings shard over a second mesh axis
 (``iter_axis``), mirroring the paper's multi-node outer loop.
 
+Family counting: :func:`build_distributed_plan` accepts a sequence of
+templates and compiles them into one shared
+:class:`~repro.core.templates.TemplateDag` (DESIGN.md §14) — the count
+function then returns per-template count vectors from ONE table-program
+pass per coloring, with cross-template subtree tables exchanged and
+computed once.
+
 Coloring sampling runs **on-device** when the key-based contract is used
 (``make_count_fn(..., keyed=True)`` / :func:`keyed_sample_fn`): each shard
 folds its data-axis index into the iteration key and draws only its own
@@ -62,7 +69,6 @@ single-device engine (see DESIGN.md §12).  Host-side colorings via
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -79,6 +85,7 @@ from repro.comm import (
 )
 from repro.compat import pvary_like, shard_map
 from repro.kernels import ops
+from .count_engine import copy_scale
 from .graphs import Graph
 from .table_program import (
     build_node_tables,
@@ -86,7 +93,13 @@ from .table_program import (
     root_count,
     run_table_program,
 )
-from .templates import PartitionChain, Tree, automorphism_count, partition_tree
+from .templates import (
+    TemplateDag,
+    Tree,
+    automorphism_count,
+    compile_templates,
+    partition_tree,
+)
 
 __all__ = [
     "DistributedPlan",
@@ -99,8 +112,11 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class DistributedPlan:
-    tree: Tree
-    chain: PartitionChain
+    #: the template family (a 1-tuple for single-template plans)
+    templates: Tuple[Tree, ...]
+    #: the table program: a PartitionChain (single template, the original
+    #: contract) or a TemplateDag (family counting, DESIGN.md §14)
+    program: object
     k: int
     n: int
     num_shards: int
@@ -110,7 +126,7 @@ class DistributedPlan:
     bucket_tile: int  # §3.3 task size: edges per bucket tile
     num_tiles: int  # T: per-shard tile-array height (uniform across shards)
     slabs_per_block: int  # alltoall slab layout (uniform across shards)
-    aut: int
+    auts: Tuple[int, ...]  # per-template |Aut|
     combine: Dict[int, ops.CombineTables]
     widths: Dict[int, int]
     # host-global arrays; sharded over dim 0 by the data axis.  The bucket
@@ -126,9 +142,32 @@ class DistributedPlan:
     bucket_counts: np.ndarray  # [P, P] true bucket sizes (diagnostics)
 
     @property
+    def tree(self) -> Tree:
+        return self.templates[0]
+
+    @property
+    def aut(self) -> int:
+        return self.auts[0]
+
+    @property
+    def num_templates(self) -> int:
+        return len(self.templates)
+
+    @property
+    def is_multi(self) -> bool:
+        """Family plans return per-template count vectors; single-template
+        plans keep the original scalar-per-iteration contract."""
+        return isinstance(self.program, TemplateDag)
+
+    @property
     def scale(self) -> float:
-        k = self.k
-        return (k ** k) / math.factorial(k) / self.aut
+        return copy_scale(self.k, self.templates[0].n, self.auts[0])
+
+    @property
+    def scales(self) -> Tuple[float, ...]:
+        return tuple(
+            copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts)
+        )
 
     @property
     def device_arrays(self) -> Tuple[jax.Array, ...]:
@@ -144,19 +183,39 @@ class DistributedPlan:
         )
 
 
+def _resolve_program(tree, root: int, n_colors: Optional[int]):
+    """One template -> its PartitionChain; a family -> the shared DAG.
+
+    Returns ``(program, templates, k)``; ``n_colors`` widens the color
+    budget past the (largest) template size.
+    """
+    if isinstance(tree, Tree):
+        k = n_colors if n_colors is not None else tree.n
+        if k < tree.n:
+            raise ValueError(
+                f"n_colors={k} is smaller than the template ({tree.n})"
+            )
+        return partition_tree(tree, root=root), (tree,), k
+    dag = compile_templates(tree, n_colors=n_colors)
+    return dag, dag.templates, dag.k
+
+
 def build_distributed_plan(
     g: Graph,
-    tree: Tree,
+    tree,
     num_shards: int,
     *,
     root: int = 0,
     bucket_tile: int = 128,
+    n_colors: Optional[int] = None,
 ) -> DistributedPlan:
+    """``tree`` is a single :class:`Tree` (original contract) or a sequence
+    of trees / template names — a family compiled into one shared
+    :class:`TemplateDag` counted in a single pass per coloring."""
     from .graphs import edge_list
 
     Pn = num_shards
-    chain = partition_tree(tree, root=root)
-    k = tree.n
+    program, templates, k = _resolve_program(tree, root, n_colors)
     shard_size = (g.n + Pn - 1) // Pn
     n_loc_pad = ops.pad_to(shard_size + 1, 128)
     sentinel = shard_size
@@ -240,11 +299,11 @@ def build_distributed_plan(
         )
         a2a_slab_dst[pp], a2a_slab_cols[pp] = sd, sc
 
-    combine, widths = build_node_tables(chain, k, lane=128)
+    combine, widths = build_node_tables(program, k, lane=128)
 
     return DistributedPlan(
-        tree=tree,
-        chain=chain,
+        templates=templates,
+        program=program,
         k=k,
         n=g.n,
         num_shards=Pn,
@@ -254,7 +313,7 @@ def build_distributed_plan(
         bucket_tile=bucket_tile,
         num_tiles=num_tiles,
         slabs_per_block=spb,
-        aut=automorphism_count(tree),
+        auts=tuple(automorphism_count(t) for t in templates),
         combine=combine,
         widths=widths,
         tile_dst=jnp.asarray(tile_dst),
@@ -271,13 +330,14 @@ def build_distributed_plan(
 def abstract_plan(
     num_vertices: int,
     num_edges: int,
-    tree: Tree,
+    tree,
     num_shards: int,
     *,
     root: int = 0,
     skew_headroom: float = 3.0,
     compact: bool = True,  # False (ring mode): compact-exchange arrays minimal
     bucket_tile: int = 128,
+    n_colors: Optional[int] = None,
 ) -> DistributedPlan:
     """Shape-only plan for dry-run lowering at paper-scale graph sizes.
 
@@ -286,11 +346,12 @@ def abstract_plan(
     buckets the headroom costs O(E) extra tile slots, not O(P^2 * max_e).
     Array fields are ShapeDtypeStructs — nothing is allocated.  Arrays the
     requested mode never touches are kept minimal so the dry-run memory
-    analysis reflects what the program actually ships.
+    analysis reflects what the program actually ships.  ``tree`` may be a
+    family (sequence of trees/names) — the lowered program is then the
+    shared-DAG multi-template counter.
     """
     Pn = num_shards
-    chain = partition_tree(tree, root=root)
-    k = tree.n
+    program, templates, k = _resolve_program(tree, root, n_colors)
     shard_size = (num_vertices + Pn - 1) // Pn
     n_loc_pad = ops.pad_to(shard_size + 1, 128)
     e_dev = 2.0 * num_edges / Pn
@@ -302,7 +363,7 @@ def abstract_plan(
     nrb_loc = n_loc_pad // 128
     spb = int(e_dev * skew_headroom / (nrb_loc * bucket_tile)) + 1
 
-    combine, widths = build_node_tables(chain, k, lane=128)
+    combine, widths = build_node_tables(program, k, lane=128)
 
     s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
     if compact:
@@ -318,8 +379,8 @@ def abstract_plan(
         spb = 1
         sd = sc = s(Pn, 1, bucket_tile)
     return DistributedPlan(
-        tree=tree,
-        chain=chain,
+        templates=templates,
+        program=program,
         k=k,
         n=num_vertices,
         num_shards=Pn,
@@ -329,7 +390,7 @@ def abstract_plan(
         bucket_tile=bucket_tile,
         num_tiles=num_tiles,
         slabs_per_block=spb,
-        aut=automorphism_count(tree),
+        auts=tuple(automorphism_count(t) for t in templates),
         combine=combine,
         widths=widths,
         tile_dst=s(Pn, num_tiles, bucket_tile),
@@ -371,7 +432,7 @@ def _node_mode(
 ) -> str:
     if mode != "adaptive":
         return mode
-    nd = plan.chain.nodes[node_index]
+    nd = plan.program.nodes[node_index]
     tbl = plan.combine[node_index]
     b_width = plan.widths[nd.right]
     Pn = plan.num_shards
@@ -407,6 +468,10 @@ def make_count_fn(
     ``[I, P, n_loc_pad]`` (I = number of parallel coloring iterations,
     sharded over ``iter_axis`` when given) and ``counts`` is float32 [I]
     (colorful map counts; multiply by ``plan.scale`` for copy estimates).
+    Family plans (``plan.is_multi``, built from a template sequence) return
+    ``[I, R]`` per-template counts instead — ONE table-program pass per
+    coloring, shared subtree tables computed once; multiply by
+    ``plan.scales`` for per-template copy estimates.
 
     ``impl``/``fuse`` carry the same semantics as the in-core engine:
     ``impl`` routes the SpMM/combine kernels (``"pallas"`` engages the
@@ -439,7 +504,7 @@ def make_count_fn(
 
     node_modes = {
         i: _node_mode(plan, i, mode, hockney, group_factor)
-        for i, nd in enumerate(plan.chain.nodes)
+        for i, nd in enumerate(plan.program.nodes)
         if not nd.is_leaf
     }
 
@@ -554,15 +619,18 @@ def make_count_fn(
                 return out
             return ops.color_combine(c_left, out * row_mask, tbl, impl=impl)
 
-        root = run_table_program(plan.chain, plan.combine, leaf, row_mask, node_fn)
-        return root_count(root)
+        roots = run_table_program(
+            plan.program, plan.combine, leaf, row_mask, node_fn,
+            root_fn=root_count,
+        )
+        return jnp.stack(roots)  # [R]; R == 1 for single-template chains
 
     def sharded_fn(colorings, *arrs):
         # local shapes: colorings [I_loc, 1, n_loc_pad]; plan arrays [1, ...]
         colorings = colorings[:, 0]
         local = tuple(a[0] for a in arrs)
         partials = jax.vmap(lambda col: local_count(col, *local))(colorings)
-        return jax.lax.psum(partials, data_axis)
+        return jax.lax.psum(partials, data_axis)  # [I_loc, R]
 
     def sharded_fn_keyed(key_data, *arrs):
         # local shapes: key_data [I_loc, 2] uint32; plan arrays [1, ...]
@@ -574,7 +642,7 @@ def make_count_fn(
             col = jax.random.randint(k, (n_loc_pad,), 0, plan.k, dtype=jnp.int32)
             return local_count(col, *local)
 
-        partials = jax.vmap(one)(key_data)  # [I_loc]
+        partials = jax.vmap(one)(key_data)  # [I_loc, R]
         return jax.lax.psum(partials, data_axis)
 
     iter_spec = P(iter_axis) if iter_axis else P()
@@ -608,7 +676,8 @@ def make_count_fn(
 
     @jax.jit
     def f(colorings):
-        return mapped(colorings, *plan.device_arrays)
+        out = mapped(colorings, *plan.device_arrays)  # [I, R]
+        return out if plan.is_multi else out[:, 0]
 
     if not keyed:
         return f
@@ -629,22 +698,27 @@ def keyed_sample_fn(plan: DistributedPlan, mesh: jax.sharding.Mesh, **kw):
     the same contract :func:`repro.core.count_engine.plan_sample_fn` gives
     the single-device engine, so :func:`repro.core.estimator.estimate_counts`
     (and anything else speaking the protocol) runs unmodified on top of the
-    shard_map backend.  ``kw`` is forwarded to :func:`make_count_fn`
-    (mode/group_factor/impl/fuse/axes/...).  Each call evaluates ``batch``
-    coloring iterations in one jitted dispatch; jit caches per distinct
-    batch size.  When colorings shard over ``iter_axis`` the key count is
-    rounded up to a multiple of the axis size (shard_map divisibility) and
-    the surplus estimates are discarded.
+    shard_map backend.  A family plan returns ``[batch, R]`` per-template
+    estimates instead (the :func:`~repro.core.count_engine.multi_sample_fn`
+    contract, consumed by ``estimate_counts_many``).  ``kw`` is forwarded to
+    :func:`make_count_fn` (mode/group_factor/impl/fuse/axes/...).  Each call
+    evaluates ``batch`` coloring iterations in one jitted dispatch; jit
+    caches per distinct batch size.  When colorings shard over ``iter_axis``
+    the key count is rounded up to a multiple of the axis size (shard_map
+    divisibility) and the surplus estimates are discarded.
     """
     f = make_count_fn(plan, mesh, keyed=True, **kw)
     iter_axis = kw.get("iter_axis")
     isz = 1
     if iter_axis:
         isz = dict(zip(mesh.axis_names, mesh.devices.shape))[iter_axis]
+    scales = np.asarray(plan.scales, np.float64)
 
     def sample(key: jax.Array, batch: int) -> np.ndarray:
         b = -(-batch // isz) * isz
-        counts = f(jax.random.split(key, b))
-        return np.asarray(counts, np.float64).reshape(-1)[:batch] * plan.scale
+        counts = np.asarray(f(jax.random.split(key, b)), np.float64)
+        if plan.is_multi:
+            return counts[:batch] * scales[None, :]
+        return counts.reshape(-1)[:batch] * plan.scale
 
     return sample

@@ -1,9 +1,11 @@
 """(epsilon, delta)-estimation over any counting backend.
 
 Each coloring iteration yields an unbiased estimate
-``X_j = maps_j * k^k/k! / |Aut(T)|`` of the copy count.  Following the
-paper (Algorithm 1 line 14), ``Niter`` estimates are split into
-``t = O(log 1/delta)`` groups; the output is the median of the group means.
+``X_j = maps_j * scale`` of the copy count (``scale = k^t (k-t)!/k!/|Aut|``,
+the paper's ``k^k/k!/|Aut|`` when the template uses the full color budget).
+Following the paper (Algorithm 1 line 14), ``Niter`` estimates are split
+into ``t = O(log 1/delta)`` groups; the output is the median of the group
+means.
 
 Backends plug in through one protocol: ``sample_fn(key, batch)`` returns
 ``batch`` independent per-coloring copy estimates (float64 ``[batch]``)
@@ -13,6 +15,13 @@ single-device :class:`~repro.core.count_engine.CountingPlan` (adapted via
 signature — e.g. :func:`repro.core.distributed.keyed_sample_fn` for the
 shard_map backend — so median-of-means, the RSD, and progress reporting are
 computed in exactly one place no matter where the counting ran.
+
+Family counting vectorizes the same aggregation: a multi-template backend
+returns ``[batch, T]`` per-template estimates from one shared coloring
+(:func:`~repro.core.count_engine.multi_sample_fn` /
+``distributed.keyed_sample_fn`` on a family plan) and
+:func:`estimate_counts_many` applies the identical median-of-means/RSD
+math column-wise — one code path, scalar or vector.
 
 The worst-case bound ``Niter = O(e^k log(1/delta) / eps^2)`` is reported by
 :func:`niter_bound` but — exactly as in the paper's experiments — practical
@@ -36,11 +45,14 @@ __all__ = [
     "num_groups_for",
     "median_of_means",
     "CountEstimate",
+    "MultiCountEstimate",
     "estimate_counts",
+    "estimate_counts_many",
 ]
 
 #: The backend protocol: ``sample_fn(key, batch) -> float64 [batch]`` copy
-#: estimates for ``batch`` independent colorings derived from ``key``.
+#: estimates for ``batch`` independent colorings derived from ``key``
+#: (``[batch, T]`` for family backends).
 SampleFn = Callable[[jax.Array, int], np.ndarray]
 
 
@@ -54,12 +66,19 @@ def num_groups_for(delta: float, n_iter: int) -> int:
     return max(1, min(int(round(math.log(1.0 / delta))), n_iter))
 
 
-def median_of_means(samples: np.ndarray, num_groups: int) -> float:
+def median_of_means(samples: np.ndarray, num_groups: int):
+    """Median of group means along axis 0.
+
+    ``samples`` is ``[n]`` (returns a float, the original contract) or
+    ``[n, T]`` (returns a float64 ``[T]`` array, one value per template) —
+    the grouping is identical, applied column-wise.
+    """
     samples = np.asarray(samples, np.float64)
-    num_groups = max(1, min(num_groups, len(samples)))
-    usable = (len(samples) // num_groups) * num_groups
-    groups = samples[:usable].reshape(num_groups, -1)
-    return float(np.median(groups.mean(axis=1)))
+    num_groups = max(1, min(num_groups, samples.shape[0]))
+    usable = (samples.shape[0] // num_groups) * num_groups
+    groups = samples[:usable].reshape(num_groups, -1, *samples.shape[1:])
+    med = np.median(groups.mean(axis=1), axis=0)
+    return float(med) if np.ndim(med) == 0 else med
 
 
 @dataclasses.dataclass
@@ -69,6 +88,38 @@ class CountEstimate:
     relative_sd: float  # empirical RSD of the per-iteration estimates
     samples: np.ndarray  # per-iteration estimates
     niter: int
+
+
+@dataclasses.dataclass
+class MultiCountEstimate:
+    """Per-template aggregates of one family run (axis order [iter, T])."""
+
+    estimates: np.ndarray  # [T] median-of-means copy estimates
+    means: np.ndarray  # [T] plain means
+    relative_sds: np.ndarray  # [T] empirical RSDs
+    samples: np.ndarray  # [niter, T] per-iteration estimates
+    niter: int
+
+
+def _collect_samples(
+    sample: SampleFn, n_iter: int, key: jax.Array, b: int, progress: bool
+) -> np.ndarray:
+    """The shared sampling loop: ``[n_iter]`` or ``[n_iter, T]`` estimates."""
+    n_calls = -(-n_iter // b)
+    keys = jax.random.split(key, n_calls)
+    chunks = []
+    done = 0
+    for i in range(n_calls):
+        est = np.asarray(sample(keys[i], b), np.float64)
+        chunks.append(est)
+        done += est.shape[0]
+        if progress and (i + 1) % max(1, n_calls // 10) == 0:
+            cur = np.concatenate(chunks, axis=0)
+            mean = np.array2string(
+                np.atleast_1d(cur.mean(axis=0)), precision=6, separator=", "
+            )
+            print(f"  iter {min(done, n_iter)}/{n_iter}: running mean {mean}")
+    return np.concatenate(chunks, axis=0)[:n_iter]
 
 
 def estimate_counts(
@@ -91,22 +142,39 @@ def estimate_counts(
     """
     sample = source if callable(source) else plan_sample_fn(source)
     b = batch if batch is not None and batch > 1 else 1
-    n_calls = -(-n_iter // b)
-    keys = jax.random.split(key, n_calls)
-    chunks = []
-    done = 0
-    for i in range(n_calls):
-        est = np.asarray(sample(keys[i], b), np.float64).reshape(-1)
-        chunks.append(est)
-        done += len(est)
-        if progress and (i + 1) % max(1, n_calls // 10) == 0:
-            cur = np.concatenate(chunks)
-            print(
-                f"  iter {min(done, n_iter)}/{n_iter}: "
-                f"running mean {cur.mean():.6g}"
-            )
-    ests = np.concatenate(chunks)[:n_iter]
+    ests = _collect_samples(sample, n_iter, key, b, progress).reshape(-1)
     mom = median_of_means(ests, num_groups_for(delta, n_iter))
     mean = float(ests.mean())
     rsd = float(ests.std() / mean) if mean != 0 else float("inf")
     return CountEstimate(mom, mean, rsd, ests, n_iter)
+
+
+def estimate_counts_many(
+    sample_fn: SampleFn,
+    n_iter: int,
+    key: jax.Array,
+    *,
+    delta: float = 0.1,
+    batch: Optional[int] = None,
+    progress: bool = False,
+) -> MultiCountEstimate:
+    """The family variant: one shared-coloring pass, per-template aggregates.
+
+    ``sample_fn(key, batch)`` must return ``[batch, T]`` per-template copy
+    estimates (e.g. :func:`~repro.core.count_engine.multi_sample_fn`); the
+    median-of-means/RSD math is the scalar path applied column-wise, so a
+    family run and ``T`` independent runs report identical statistics on
+    identical samples.
+    """
+    b = batch if batch is not None and batch > 1 else 1
+    ests = _collect_samples(sample_fn, n_iter, key, b, progress)
+    if ests.ndim != 2:
+        raise ValueError(
+            f"family sample_fn must return [batch, T] estimates; got "
+            f"shape {ests.shape}"
+        )
+    mom = np.atleast_1d(median_of_means(ests, num_groups_for(delta, n_iter)))
+    means = ests.mean(axis=0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rsds = np.where(means != 0, ests.std(axis=0) / np.abs(means), np.inf)
+    return MultiCountEstimate(mom, means, rsds, ests, n_iter)

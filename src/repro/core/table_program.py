@@ -1,16 +1,20 @@
-"""One table program: THE partition-chain DP executor, shared by backends.
+"""One table program: THE partition-DP executor, shared by backends.
 
-The color-coding DP is one *table program*: walk the partition chain in
-postorder, keep a table ``C_node [rows, width]`` per live node, and at each
-internal node contract the left child against the neighbor sum of the right
-child.  Until this module existed that recursion was written twice — once in
-``count_engine`` (in-core) and once inside ``distributed`` (shard_map) — and
-the two copies had already drifted (fusion, true-width tables, and batched
-colorings only worked in-core).
+The color-coding DP is one *table program*: walk the partition nodes in
+topological order, keep a table ``C_node [rows, width]`` per live node, and
+at each internal node contract the left child against the neighbor sum of
+the right child.  Until this module existed that recursion was written
+twice — once in ``count_engine`` (in-core) and once inside ``distributed``
+(shard_map) — and the two copies had already drifted (fusion, true-width
+tables, and batched colorings only worked in-core).
 
-Now the recursion lives here, once, and the backends differ only in their
-**neighbor-sum strategy** — the ``node_fn`` callback that produces one
-internal node's (unmasked) output table:
+Now the recursion lives here, once, over a *program* — either a single
+template's :class:`~repro.core.templates.PartitionChain` or a whole family
+compiled into a :class:`~repro.core.templates.TemplateDag` (deduplicated by
+rooted-canonical subtree signature, so canonically-identical subtrees across
+templates are computed once and read many times).  The backends differ only
+in their **neighbor-sum strategy** — the ``node_fn`` callback that produces
+one internal node's (unmasked) output table:
 
 ``local`` (:func:`local_node_fn`)
     ``M = spmm(A, C_right)`` over the whole in-core graph, or the fused
@@ -22,22 +26,22 @@ internal node's (unmasked) output table:
     §3.3 tiled bucket layout — the same edge-tile/fused kernels, per chunk.
 
 The executor owns everything the strategies must agree on: leaf
-construction, pad-row/pad-column re-masking after every combine, child
-table lifetime (each chain node is the child of exactly one parent, so both
-children die as soon as the parent is built — the paper's sub-template
-table lifetime management), and the root reduction.  A strategy cannot
-forget to mask or leak a table; the backends cannot drift.
+construction, pad-row/pad-column re-masking after every combine, table
+lifetime (reference-counted: a table is freed the moment its last reader —
+parent node or root delivery — has consumed it, the paper's sub-template
+table lifetime management generalized to shared tables), and the root
+reduction.  A strategy cannot forget to mask or leak a table; the backends
+cannot drift.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Mapping, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from .templates import PartitionChain
 
 __all__ = [
     "build_node_tables",
@@ -53,21 +57,23 @@ NodeFn = Callable[[int, ops.CombineTables, jax.Array, jax.Array], jax.Array]
 
 
 def build_node_tables(
-    chain: PartitionChain, k: int, *, lane: int = 128
+    program, k: int, *, lane: int = 128
 ) -> Tuple[Dict[int, ops.CombineTables], Dict[int, int]]:
-    """Per-node split tables + padded widths for one partition chain.
+    """Per-node split tables + padded widths for one table program.
 
-    ``lane`` is the column-padding multiple (128 for the Pallas kernels,
-    1 for true-width XLA tables).  Shared by both plan builders.
+    ``program`` is a :class:`PartitionChain` or :class:`TemplateDag` (any
+    object with ``.nodes`` of partition nodes).  ``lane`` is the
+    column-padding multiple (128 for the Pallas kernels, 1 for true-width
+    XLA tables).  Shared by both plan builders.
     """
     combine: Dict[int, ops.CombineTables] = {}
     widths: Dict[int, int] = {}
-    for i, nd in enumerate(chain.nodes):
+    for i, nd in enumerate(program.nodes):
         if nd.is_leaf:
             widths[i] = ops.pad_to(k, lane)
         else:
-            t1 = chain.nodes[nd.left].size
-            t2 = chain.nodes[nd.right].size
+            t1 = program.nodes[nd.left].size
+            t2 = program.nodes[nd.right].size
             tables = ops.build_combine_tables(k, t1, t2, lane=lane)
             combine[i] = tables
             widths[i] = tables.s_pad
@@ -82,40 +88,73 @@ def leaf_table(
 
 
 def run_table_program(
-    chain: PartitionChain,
+    program,
     combine: Mapping[int, ops.CombineTables],
     leaf: jax.Array,
     row_mask: jax.Array,
     node_fn: NodeFn,
-) -> jax.Array:
-    """Execute the partition-chain DP; returns the (masked) root table.
+    root_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> tuple:
+    """Execute a table program; returns one value per ``program.roots`` entry.
 
-    This is the only copy of the node recursion in the codebase.  Every
-    leaf shares the single ``leaf`` table; each internal node's output from
-    ``node_fn`` is re-masked (pad rows via ``row_mask``, pad columns past
-    the node's true width) and both children are freed immediately.
+    ``program`` is a :class:`PartitionChain` (one root) or a
+    :class:`TemplateDag` (one root per compiled template).  This is the only
+    copy of the node recursion in the codebase.  Every leaf shares the
+    single ``leaf`` table; each internal node's output from ``node_fn`` is
+    re-masked (pad rows via ``row_mask``, pad columns past the node's true
+    width) before anyone reads it.
+
+    Table lifetime is reference-counted from ``program.table_reads()``:
+    each child read and each root delivery decrements the count, and the
+    table is dropped at zero — for a chain this is exactly the
+    free-both-children-at-the-parent order; for a DAG a shared subtree
+    table stays live only until its last reader (keeping XLA liveness
+    tight while still computing every unique table once).
+
+    ``root_fn`` (e.g. :func:`root_count`) reduces each root table to its
+    delivered value as soon as the root node is built, so wide root tables
+    of sub-``k``-sized templates never outlive their reduction; without it
+    the masked root tables themselves are returned.
     """
+    reads = list(program.table_reads())
+    want: Dict[int, int] = {}
+    for r in program.roots:
+        want[r] = want.get(r, 0) + 1
     tables: Dict[int, jax.Array] = {}
-    for i, nd in enumerate(chain.nodes):
+    delivered: Dict[int, jax.Array] = {}
+    for i, nd in enumerate(program.nodes):
         if nd.is_leaf:
-            tables[i] = leaf
-            continue
-        tbl = combine[i]
-        out = node_fn(i, tbl, tables[nd.left], tables[nd.right])
-        col_mask = (jnp.arange(out.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
-        tables[i] = out * row_mask * col_mask
-        # free children (keeps XLA liveness tight); every chain node is the
-        # child of exactly one parent, so both entries are dead here.
-        del tables[nd.right]
-        del tables[nd.left]
-    return tables[chain.root_index]
+            out = leaf
+        else:
+            tbl = combine[i]
+            raw = node_fn(i, tbl, tables[nd.left], tables[nd.right])
+            col_mask = (jnp.arange(raw.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
+            out = raw * row_mask * col_mask
+            # the children just had one read each consumed; free at zero
+            # (left may equal right for symmetric splits — counted twice)
+            for c in (nd.right, nd.left):
+                reads[c] -= 1
+                if reads[c] == 0:
+                    tables.pop(c, None)
+        if i in want:
+            delivered[i] = root_fn(out) if root_fn is not None else out
+            reads[i] -= want[i]
+        if reads[i] > 0:
+            tables[i] = out
+    return tuple(delivered[r] for r in program.roots)
 
 
 def root_count(root: jax.Array) -> jax.Array:
-    """Colorful map count: ``sum_v C_root[v, 0]`` (the full color set has
-    rank 0 in its singleton table)."""
+    """Colorful map count from a root table: ``sum_{v, S} C_root[v, S]``.
+
+    For a full-``k`` template the root table has the single full-color-set
+    column; for a sub-``k`` template (family counting) every color set of
+    the template's size contributes one column, and each colorful embedding
+    lands in exactly one of them.  Pad rows/columns are already masked to
+    zero by the executor, so the plain sum is exact either way.
+    """
     acc_dtype = jnp.float64 if root.dtype == jnp.float64 else jnp.float32
-    return jnp.sum(root[:, 0], dtype=acc_dtype)
+    return jnp.sum(root, dtype=acc_dtype)
 
 
 def local_node_fn(

@@ -24,12 +24,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "Tree",
     "PartitionNode",
     "PartitionChain",
+    "TemplateDag",
+    "compile_templates",
     "partition_tree",
     "partition_complexity",
     "automorphism_count",
@@ -150,8 +152,14 @@ def random_tree(n: int, seed: int = 0) -> Tree:
 # ---------------------------------------------------------------------------
 
 
-def _rooted_canon(adj: List[List[int]], v: int, parent: int) -> tuple:
-    subs = sorted(_rooted_canon(adj, u, v) for u in adj[v] if u != parent)
+def _rooted_canon(
+    adj: List[List[int]], v: int, parent: int, banned: frozenset = frozenset()
+) -> tuple:
+    subs = sorted(
+        _rooted_canon(adj, u, v, banned)
+        for u in adj[v]
+        if u != parent and u not in banned
+    )
     return tuple(subs)
 
 
@@ -263,6 +271,18 @@ class PartitionChain:
     def root_index(self) -> int:
         return len(self.nodes) - 1
 
+    @property
+    def roots(self) -> Tuple[int, ...]:
+        """Program protocol (shared with :class:`TemplateDag`): root nodes
+        whose tables the executor must deliver — here, just the chain root."""
+        return (self.root_index,)
+
+    def table_reads(self) -> List[int]:
+        """Program protocol: how many times each node's table is read (by
+        parents, plus one read per root delivery).  In a chain every node is
+        the child of exactly one parent, so every count is 1."""
+        return _table_reads(self.nodes, self.roots)
+
     def postorder(self) -> Tuple[PartitionNode, ...]:
         return self.nodes
 
@@ -342,6 +362,136 @@ def partition_complexity(chain: PartitionChain, paper_convention: bool = True):
         mem += math.comb(k, t)
         comp += math.comb(k, t) * math.comb(t, t1)
     return mem, comp
+
+
+# ---------------------------------------------------------------------------
+# Template-set compilation: one deduplicated DAG of partition nodes
+# ---------------------------------------------------------------------------
+
+
+def _table_reads(nodes: Sequence[PartitionNode], roots: Sequence[int]) -> List[int]:
+    reads = [0] * len(nodes)
+    for nd in nodes:
+        if not nd.is_leaf:
+            reads[nd.left] += 1
+            reads[nd.right] += 1
+    for r in roots:
+        reads[r] += 1
+    return reads
+
+
+@dataclass(frozen=True)
+class TemplateDag:
+    """A set of partition chains compiled into one deduplicated DAG.
+
+    Each node is a rooted sub-template keyed by its AHU canonical form
+    (:func:`_rooted_canon`); canonically-identical subtrees across (and
+    within) the compiled templates collapse to a single node, so the DP
+    computes every unique subtree table exactly once and each template's
+    root simply reads its own entry.  ``nodes`` is topologically ordered
+    (children strictly precede parents); ``roots[i]`` is template ``i``'s
+    root node; ``sigs[i]`` is node ``i``'s canonical signature.
+
+    All tables are built against the shared color budget ``k`` (>= the
+    largest template), which is what makes cross-template reuse sound: a
+    node's table ``C[v, S]`` depends only on the rooted sub-template's
+    isomorphism class and on ``k``, never on which template asked for it.
+    """
+
+    nodes: Tuple[PartitionNode, ...]
+    sigs: Tuple[tuple, ...]
+    k: int
+    roots: Tuple[int, ...]
+    templates: Tuple[Tree, ...]
+
+    @property
+    def num_templates(self) -> int:
+        return len(self.roots)
+
+    def table_reads(self) -> List[int]:
+        """Program protocol: reference count per node table (parent reads
+        plus root deliveries) — the executor frees a table at count zero."""
+        return _table_reads(self.nodes, self.roots)
+
+    def internal_nodes(self) -> List[Tuple[int, PartitionNode]]:
+        return [(i, nd) for i, nd in enumerate(self.nodes) if not nd.is_leaf]
+
+
+def compile_templates(
+    templates: Sequence,
+    *,
+    n_colors: Optional[int] = None,
+    roots: Optional[Sequence[int]] = None,
+) -> TemplateDag:
+    """Compile a family of tree templates into one shared :class:`TemplateDag`.
+
+    ``templates`` are :class:`Tree` objects or registered template names.
+    Every template is partitioned with the same first-child cut policy as
+    :func:`partition_tree` (rooted at ``roots[i]``, default 0), but nodes are
+    interned by rooted canonical signature: when a sub-template's signature
+    was already produced — by an earlier template, by an earlier branch of
+    the same template, or by a symmetric sibling — the existing node is
+    reused instead of re-partitioning it.  A singleton family therefore
+    yields a DAG whose root table equals the template's chain root table,
+    with intra-template sharing (symmetric branches) already collapsed.
+
+    ``n_colors`` fixes the shared color budget ``k`` (default: the largest
+    template size); all compiled tables are indexed by color sets drawn
+    from these ``k`` colors.
+    """
+    trees = tuple(
+        template(t) if isinstance(t, str) else t for t in templates
+    )
+    if not trees:
+        raise ValueError("compile_templates needs at least one template")
+    k_min = max(t.n for t in trees)
+    k = n_colors if n_colors is not None else k_min
+    if k < k_min:
+        raise ValueError(
+            f"n_colors={k} is smaller than the largest template ({k_min})"
+        )
+    root_of = tuple(roots) if roots is not None else (0,) * len(trees)
+    if len(root_of) != len(trees):
+        raise ValueError("roots must match templates in length")
+
+    sig2idx: Dict[tuple, int] = {}
+    nodes: List[PartitionNode] = []
+    sigs: List[tuple] = []
+
+    def intern(sig: tuple, node: PartitionNode) -> int:
+        nodes.append(node)
+        sigs.append(sig)
+        sig2idx[sig] = len(nodes) - 1
+        return len(nodes) - 1
+
+    def rec(adj, v: int, parent: int, banned: frozenset) -> int:
+        sig = _rooted_canon(adj, v, parent, banned)
+        idx = sig2idx.get(sig)
+        if idx is not None:
+            return idx  # canonically-identical subtree: reuse its table
+        children = [u for u in adj[v] if u != parent and u not in banned]
+        if not children:
+            return intern(sig, PartitionNode(1))
+        cut = children[0]
+        right = rec(adj, cut, v, banned)
+        cut_sub = _collect_subtree(adj, cut, v, banned)
+        left = rec(adj, v, parent, banned | cut_sub)
+        size = nodes[left].size + nodes[right].size
+        return intern(sig, PartitionNode(size, left, right))
+
+    root_ids = []
+    for tree, r in zip(trees, root_of):
+        adj = tree.adjacency()
+        idx = rec(adj, r, -1, frozenset())
+        assert nodes[idx].size == tree.n
+        root_ids.append(idx)
+    return TemplateDag(
+        nodes=tuple(nodes),
+        sigs=tuple(sigs),
+        k=k,
+        roots=tuple(root_ids),
+        templates=trees,
+    )
 
 
 # ---------------------------------------------------------------------------

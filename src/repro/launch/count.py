@@ -10,6 +10,10 @@ on-device coloring sampling, and (eps, delta) estimator on BOTH backends.
 ``--mode single`` (or the default on a single-device host) drives the
 in-core batched/fused engine (``--batch``/``--fuse``/``--spmm-kind``);
 any other mode drives the shard_map engine with that exchange schedule.
+``--templates u3-1,u5-2,u7-2`` (or a config row with a ``templates``
+family) counts the whole family in ONE pass per coloring over the shared
+subtree DAG (``Counter.estimate_many``) and reports per-template
+estimates plus the unique-table reuse the compiled DAG achieved.
 Either way the report comes from one place — the shared estimator — so the
 median-of-means (over ``log(1/delta)`` groups), mean, and RSD are computed
 identically no matter where the counting ran.  Compilation is warmed
@@ -49,6 +53,11 @@ def main():
     ap.add_argument("--mode", default=None,
                     choices=[None, "alltoall", "pipeline", "adaptive", "ring",
                              "single"])
+    ap.add_argument("--templates", default=None, metavar="A,B,C",
+                    help="comma-separated template family: count them all in "
+                         "ONE pass over the shared subtree DAG "
+                         "(Counter.estimate_many); default: the config's "
+                         "family, else its single template")
     ap.add_argument("--iters", type=int, default=16)
     ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--group-factor", type=int, default=1)
@@ -99,6 +108,40 @@ def main():
             bucket_tile=args.bucket_tile, **impl_opt,
         )
     counter = Counter.from_request(request)
+    key = jax.random.key(args.seed)
+    family = args.templates.split(",") if args.templates else list(ccfg.templates)
+    ran = -(-args.iters // args.batch) * args.batch
+    if family:
+        # family mode never builds the single-template plan (the label comes
+        # from the request, not from counter.plan): one shared-DAG pass per
+        # coloring does all the counting
+        if single:
+            shards = 1
+            label = f"single(batch={args.batch},fuse={args.fuse})"
+        else:
+            shards = min(request.plan_opts["num_shards"], jax.device_count())
+            label = (f"{request.plan_opts['mode']}(fuse={args.fuse},"
+                     f"impl={args.impl or 'xla'})")
+        # warm the jit at the REAL batch size (both backends cache compiled
+        # programs per batch), so compile stays outside the timer
+        b = request.batch or min(8, request.n_iter)
+        counter.estimate_many(family, n_iter=b, key=key, batch=b)
+        t0 = time.perf_counter()
+        res = counter.estimate_many(
+            family, n_iter=request.n_iter, delta=request.delta, key=key,
+            batch=request.batch,
+        )
+        dt = time.perf_counter() - t0
+        print(f"mode={label} shards={shards}: family of {len(res)} templates, "
+              f"k={res.k}, {res.unique_tables} unique tables "
+              f"(vs {res.chain_tables} chain nodes), {ran} colorings in "
+              f"{dt:.2f}s ({dt / max(ran, 1) * 1e3:.1f} ms/coloring)")
+        groups = num_groups_for(res.delta, res.niter)
+        for one in res:
+            print(f"  {one.template:>10}: median-of-means {one.estimate:.6g} "
+                  f"({groups} groups)  mean {one.mean:.6g} "
+                  f"RSD {one.relative_sd:.2f}")
+        return
     if single:
         shards = 1
         # fusion needs the edge-slab layout; report whether it engaged
@@ -110,15 +153,12 @@ def main():
         label = (f"{request.plan_opts['mode']}(fuse={args.fuse},"
                  f"impl={args.impl or 'xla'},"
                  f"tile={counter.plan.bucket_tile}x{counter.plan.num_tiles})")
-
-    key = jax.random.key(args.seed)
     counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
     res = counter.estimate(
         n_iter=request.n_iter, delta=request.delta, key=key, batch=request.batch
     )
     dt = time.perf_counter() - t0
-    ran = -(-args.iters // args.batch) * args.batch
     _report(label, shards, res, dt, ran)
 
 

@@ -26,7 +26,6 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, COUNTING_CONFIGS, get_arch  # noqa: E402
@@ -207,10 +206,19 @@ def lower_cell(
     return lowered, mesh, meta
 
 
+def _cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a per-device list on some JAX
+    releases and a plain dict on others; normalize to one dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _measure(lowered) -> dict:
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return {
         "memory": {
@@ -314,12 +322,18 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
     mesh_tag = ("flat" if ccfg.mesh_kind == "flat" else "") + (
         "2x16x16" if multi_pod else "16x16"
     )
+    # a family row lowers the multi-template shared-DAG counter
+    tmpl = (
+        [template(t) for t in ccfg.templates]
+        if ccfg.templates
+        else template(ccfg.template)
+    )
     t0 = time.time()
     try:
         plan = abstract_plan(
             ccfg.num_vertices,
             ccfg.num_edges,
-            template(ccfg.template),
+            tmpl,
             num_shards,
             compact=mode != "ring",
         )
@@ -334,12 +348,15 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
             lowered = fn.lower(*structs)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         coll = parse_collectives(compiled.as_text())
         rec = {
-            "arch": f"counting:{name}", "shape": ccfg.template, "mesh": mesh_tag,
+            "arch": f"counting:{name}",
+            "shape": "+".join(ccfg.templates) if ccfg.templates else ccfg.template,
+            "mesh": mesh_tag,
             "mode": mode, "status": "ok",
             "chips": chips,
+            "num_templates": max(len(ccfg.templates), 1),
             "compile_s": round(time.time() - t0, 1),
             "memory": {
                 "argument_bytes": mem.argument_size_in_bytes,

@@ -307,6 +307,54 @@ def test_unified_api():
           f"mean {res.mean:.1f} truth {truth:.1f}")
 
 
+def test_multi_template():
+    """Family counting over 8 real shards: one shared-DAG pass per coloring.
+
+    Fixed-coloring parity against the brute-force oracle per template for
+    all four exchange modes x fuse, plus keyed estimate_many parity: with
+    the same key, per-template keyed runs (n_colors = k) must reproduce the
+    family run's sample columns exactly.
+    """
+    from repro.api import Counter
+    from repro.core import erdos_renyi
+    from repro.core.brute_force import count_colorful_maps
+    from repro.core.templates import path_tree, spider_tree, star_tree
+
+    g = erdos_renyi(97, 5.0, seed=7)  # ragged shard sizes on purpose
+    family = [path_tree(3), star_tree(4), spider_tree([2, 1])]
+    k = max(t.n for t in family)
+    rng = np.random.default_rng(13)
+    coloring = rng.integers(0, k, g.n).astype(np.int32)
+    want = [count_colorful_maps(g, t, coloring) for t in family]
+
+    for mode in ("alltoall", "pipeline", "adaptive", "ring"):
+        for fuse in (False, True):
+            c = Counter.from_graph(
+                g, family[-1], backend="distributed", num_shards=8,
+                mode=mode, fuse=fuse,
+            )
+            got = c.count_coloring_many(family, coloring)
+            ok = np.allclose(got, want, rtol=1e-6)
+            check(f"multi_{mode}_fuse{int(fuse)}_P8", ok, f"got {got} want {want}")
+
+    # keyed estimate_many == per-template keyed estimates, sample for sample
+    cd = Counter.from_graph(
+        g, family[-1], backend="distributed", num_shards=8, mode="pipeline"
+    )
+    res = cd.estimate_many(family, n_iter=12, key=jax.random.key(3), batch=6)
+    ok_shape = res.samples.shape == (12, 3)
+    parity = True
+    for i, t in enumerate(family):
+        ci = Counter.from_graph(
+            g, t, backend="distributed", num_shards=8, mode="pipeline",
+            n_colors=res.k,
+        )
+        ri = ci.estimate(n_iter=12, key=jax.random.key(3), batch=6)
+        parity = parity and np.allclose(ri.samples, res.samples[:, i], rtol=1e-6)
+    check("multi_keyed_estimate_parity_P8", ok_shape and parity,
+          f"shape {res.samples.shape}")
+
+
 def test_moe_manual_vs_dense():
     """moe_block_manual (EP token-sharded / TP / pipelined) == dense oracle."""
     import dataclasses
@@ -405,6 +453,7 @@ def main():
     test_distributed_counting()
     test_tiled_skew_parity()
     test_unified_api()
+    test_multi_template()
     test_moe_manual_vs_dense()
     test_elastic_restore()
     if FAILURES:

@@ -1,0 +1,192 @@
+"""Multi-template counting: the template-set compiler + shared-DAG executor.
+
+Four invariants of the family-counting layer (DESIGN.md §14):
+
+* **dedup** — compiling a family whose templates share canonically-identical
+  rooted subtrees (u3-path ⊂ u5-2 ⊂ the u7-2 two-leg spider) produces
+  strictly fewer DAG nodes than the sum of the per-template chains, and a
+  symmetric template's identical branches collapse to one node (a parent
+  whose left and right children are the SAME node);
+* **singleton ≡ chain** — a one-template family counts exactly what the
+  original partition-chain engine counts (and the node recursion itself
+  still exists exactly once in src/, guarded by test_table_program);
+* **fixed-coloring parity** — ``count_coloring_many`` equals the
+  brute-force oracle per template on BOTH backends;
+* **estimate ≡ estimate_many** — with the same key, the family run and
+  per-template runs on ``n_colors = k`` Counters see identical colorings
+  and produce identical per-iteration samples.
+
+The 8-shard distributed case (all exchange modes x fuse) runs in
+``tests/_dist_worker.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import Counter
+from repro.core import erdos_renyi
+from repro.core.brute_force import count_colorful_maps, count_copies
+from repro.core.count_engine import copy_scale
+from repro.core.templates import (
+    compile_templates,
+    partition_tree,
+    path_tree,
+    spider_tree,
+    star_tree,
+    template,
+)
+
+SPIDERS = ("u3-1", "u5-2", "u7-2")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(120, 5.0, seed=2)
+
+
+class TestCompiler:
+    def test_nested_spiders_dedup(self):
+        """u3-1 ⊂ u5-2 ⊂ u7-2: every subtree of the smaller templates is
+        canonically present in the larger, so the DAG carries exactly the
+        largest template's unique subtrees."""
+        dag = compile_templates(SPIDERS)
+        chains = [partition_tree(template(n)) for n in SPIDERS]
+        chain_nodes = sum(len(c.nodes) for c in chains)
+        assert len(dag.nodes) < chain_nodes
+        # the family shares one leaf + the path-2/3/4 spine: 6 unique nodes
+        assert len(dag.nodes) == 6
+        assert dag.k == 7
+        # every template root reads its own node; sizes match the templates
+        assert [dag.nodes[r].size for r in dag.roots] == [3, 5, 7]
+
+    def test_chain_is_a_prefix_of_sharing(self):
+        """Each chain's internal-node signature multiset is covered by the
+        DAG (no table the chains need is missing)."""
+        dag = compile_templates(SPIDERS)
+        sizes = {nd.size for nd in dag.nodes}
+        for n in SPIDERS:
+            for _, nd in partition_tree(template(n)).internal_nodes():
+                assert nd.size in sizes
+
+    def test_symmetric_template_collapses(self):
+        """spider(2,2): the two identical legs collapse — some internal
+        node has left == right, and the DAG is smaller than the chain."""
+        tree = spider_tree([2, 2])
+        dag = compile_templates([tree])
+        chain = partition_tree(tree)
+        assert len(dag.nodes) < len(chain.nodes)
+        assert any(
+            nd.left == nd.right for nd in dag.nodes if not nd.is_leaf
+        )
+
+    def test_star_collapses_leaves(self):
+        """All of a star's leaf children share one leaf node."""
+        dag = compile_templates([star_tree(5)])
+        assert sum(nd.is_leaf for nd in dag.nodes) == 1
+        assert len(dag.nodes) < len(partition_tree(star_tree(5)).nodes)
+
+    def test_table_reads_refcounts(self):
+        """reads = parent reads + root deliveries, for every node."""
+        dag = compile_templates(SPIDERS)
+        reads = dag.table_reads()
+        want = [0] * len(dag.nodes)
+        for nd in dag.nodes:
+            if not nd.is_leaf:
+                want[nd.left] += 1
+                want[nd.right] += 1
+        for r in dag.roots:
+            want[r] += 1
+        assert reads == want
+        assert all(r > 0 for r in reads)
+
+    def test_n_colors_validation(self):
+        with pytest.raises(ValueError, match="n_colors"):
+            compile_templates(SPIDERS, n_colors=5)
+        assert compile_templates(SPIDERS, n_colors=9).k == 9
+
+
+class TestSingletonEqualsChain:
+    def test_count_matches_chain_engine(self, graph):
+        tree = spider_tree([2, 1])
+        rng = np.random.default_rng(0)
+        coloring = rng.integers(0, tree.n, graph.n).astype(np.int32)
+        single = Counter.from_graph(graph, tree, backend="single")
+        chain_count = single.count_coloring(coloring)
+        (dag_count,) = single.count_coloring_many([tree], coloring)
+        assert dag_count == pytest.approx(chain_count, rel=1e-6)
+
+
+class TestFixedColoringParity:
+    """count_coloring_many == brute force per template, both backends."""
+
+    @pytest.mark.parametrize("backend", ["single", "distributed"])
+    def test_family_matches_oracle(self, graph, backend):
+        family = [path_tree(3), star_tree(4), spider_tree([2, 1])]
+        kw = {"num_shards": 1, "mode": "adaptive"} if backend == "distributed" else {}
+        c = Counter.from_graph(graph, family[-1], backend=backend, **kw)
+        k = max(t.n for t in family)
+        rng = np.random.default_rng(1)
+        coloring = rng.integers(0, k, graph.n).astype(np.int32)
+        got = c.count_coloring_many(family, coloring)
+        want = [count_colorful_maps(graph, t, coloring) for t in family]
+        assert np.allclose(got, want, rtol=1e-6), (got, want)
+
+    def test_fuse_parity(self, graph):
+        family = [path_tree(3), spider_tree([2, 1])]
+        rng = np.random.default_rng(3)
+        coloring = rng.integers(0, 4, graph.n).astype(np.int32)
+        want = [count_colorful_maps(graph, t, coloring) for t in family]
+        for backend, kw in (
+            ("single", {"fuse": True, "spmm_kind": "edges"}),
+            ("distributed", {"fuse": True, "num_shards": 1, "mode": "pipeline"}),
+        ):
+            c = Counter.from_graph(graph, family[-1], backend=backend, **kw)
+            got = c.count_coloring_many(family, coloring)
+            assert np.allclose(got, want, rtol=1e-6), (backend, got, want)
+
+
+class TestEstimateMany:
+    def test_matches_per_template_estimate_exactly(self, graph):
+        """Same key => identical colorings => per-template samples match
+        the family run sample for sample (single backend; the 8-shard
+        distributed version runs in _dist_worker)."""
+        family = [path_tree(3), star_tree(4), spider_tree([2, 1])]
+        c = Counter.from_graph(graph, family[-1], backend="single")
+        res = c.estimate_many(family, n_iter=24, key=jax.random.key(7), batch=8)
+        assert res.samples.shape == (24, 3)
+        for i, t in enumerate(family):
+            ci = Counter.from_graph(graph, t, backend="single", n_colors=res.k)
+            ri = ci.estimate(n_iter=24, key=jax.random.key(7), batch=8)
+            assert np.allclose(ri.samples, res.samples[:, i], rtol=1e-6)
+            assert ri.estimate == pytest.approx(res[i].estimate, rel=1e-6)
+
+    def test_estimator_is_unbiased_per_template(self, graph):
+        """Family means approach the exact copy counts (shared coloring,
+        per-template scales)."""
+        family = [path_tree(3), star_tree(4)]
+        c = Counter.from_graph(graph, family[-1], backend="single")
+        res = c.estimate_many(family, n_iter=400, key=jax.random.key(0), batch=50)
+        for i, t in enumerate(family):
+            truth = count_copies(graph, t)
+            assert abs(res.means[i] - truth) / truth < 0.25, (t.name, res.means[i], truth)
+
+    def test_scales_reduce_to_paper_formula(self):
+        """k == t reduces to k^k/k!/|Aut|; widening k rescales correctly."""
+        import math
+
+        assert copy_scale(4, 4, 2) == pytest.approx(4 ** 4 / math.factorial(4) / 2)
+        # t=2, k=4: inverse P[2 vertices distinctly colored] = 16/12
+        assert copy_scale(4, 2, 1) == pytest.approx(16 / 12)
+
+    def test_result_views(self, graph):
+        family = ["u3-1", path_tree(4)]
+        c = Counter.from_graph(graph, "u3-1", backend="single")
+        res = c.estimate_many(family, n_iter=8, key=jax.random.key(1), batch=4)
+        assert len(res) == 2
+        assert [one.template for one in res] == ["u3-1", "path-4"]
+        assert res.unique_tables < res.chain_tables
+        one = res[1]
+        assert one.samples.shape == (8,)
+        assert "path-4" in str(res)

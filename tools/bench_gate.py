@@ -1,0 +1,197 @@
+"""Benchmark regression gate: hold the line on the tracked BENCH_*.json.
+
+Compares freshly-emitted benchmark JSONs (CI runs the benches in --smoke
+mode) against the baselines tracked at the repo root, metric by metric,
+and fails the build when a metric regresses beyond its class tolerance:
+
+  * **structural** metrics (padding-waste fractions, bucket-slot waste,
+    unique-table / reuse ratios, node and tile counts) are machine- and
+    load-independent — they must match the baseline near-exactly, and an
+    increase means a PR gave back layout or dedup ground that PR 1-3 /
+    §14 earned;
+  * **timing** metrics (``*_us``/``iter_us``) and timing-derived speedups
+    vary with the host, so they only gate at a loose multiplicative
+    factor (default 4x) — catching order-of-magnitude cliffs, not noise;
+  * a baseline/fresh pair whose ``smoke``/``backend`` flags differ is not
+    comparable at all (graph sizes, template sets, and most "structural"
+    values change with the mode), so the file fails with ONE actionable
+    row: regenerate the tracked baseline with ``--smoke`` — never loosen
+    the per-metric tolerances to paper over a mode mismatch.
+
+Usage (what the CI step runs after saving the tracked baselines aside):
+
+    cp BENCH_*.json /tmp/bench-baseline/
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke  # etc.
+    python tools/bench_gate.py --baseline /tmp/bench-baseline --fresh .
+
+Exit code 1 iff any metric FAILs; the diff table always prints.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# metric classification by leaf key (substring match, checked in order)
+TIMING_KEYS = ("_us", "iter_us", "_s")
+HIGHER_BETTER_KEYS = ("speedup",)
+STRUCTURAL_KEYS = (
+    "pad_frac",
+    "waste",
+    "ratio",
+    "imbalance",
+    "slots",
+    "num_tiles",
+    "max_bucket",
+    "mean_bucket",
+    "bytes",
+    "nodes",
+    "internal",
+    "max_deg",
+    "directed_edges",
+    "chain_",
+    "dag_",
+)
+# context keys that must match for a file's metrics to be comparable at all
+META_KEYS = ("smoke", "backend")
+
+
+def classify(key: str):
+    if any(s in key for s in HIGHER_BETTER_KEYS):
+        return "speedup"
+    if key.endswith(TIMING_KEYS) or key == "us":
+        return "timing"
+    if any(s in key for s in STRUCTURAL_KEYS):
+        return "structural"
+    return None  # metadata / unclassified: not gated
+
+
+def leaves(obj, prefix=""):
+    """Flatten nested dicts to {dotted.path: numeric leaf}."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(leaves(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def compare_file(name, base, fresh, *, struct_rtol: float, timing_factor: float):
+    """Yields (path, class, baseline, fresh, status, note) rows."""
+    mismatch = [k for k in META_KEYS if base.get(k) != fresh.get(k)]
+    if mismatch:
+        # nothing in the two files is comparable; fail once, actionably
+        for k in mismatch:
+            yield (
+                k,
+                "-",
+                base.get(k),
+                fresh.get(k),
+                "FAIL",
+                "baseline/fresh emitted under different modes — regenerate "
+                "the tracked baseline with --smoke and commit it",
+            )
+        return
+    b_leaves = leaves(base)
+    f_leaves = leaves(fresh)
+    for path in sorted(b_leaves):
+        if path not in f_leaves:
+            yield (
+                path,
+                "-",
+                b_leaves[path],
+                None,
+                "MISSING",
+                "metric dropped from fresh emit",
+            )
+            continue
+        cls = classify(path.rsplit(".", 1)[-1])
+        bv, fv = b_leaves[path], f_leaves[path]
+        if cls is None:
+            continue
+        if cls == "timing":
+            ok = fv <= bv * timing_factor
+            note = f"<= {timing_factor:.1f}x baseline"
+        elif cls == "speedup":
+            ok = fv >= bv / timing_factor
+            note = f">= baseline / {timing_factor:.1f}"
+        else:  # structural: near-exact, lower-or-equal is always fine
+            ok = fv <= bv * (1.0 + struct_rtol) + 1e-9
+            note = f"<= baseline * {1.0 + struct_rtol:.2f}"
+        yield (path, cls, bv, fv, "ok" if ok else "FAIL", note)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline", required=True, help="directory holding the tracked BENCH_*.json"
+    )
+    ap.add_argument(
+        "--fresh", default=".", help="directory holding the freshly-emitted BENCH_*.json"
+    )
+    ap.add_argument(
+        "--struct-rtol",
+        type=float,
+        default=0.05,
+        help="allowed relative worsening of structural metrics",
+    )
+    ap.add_argument(
+        "--timing-factor",
+        type=float,
+        default=4.0,
+        help="allowed multiplicative timing regression",
+    )
+    args = ap.parse_args(argv)
+
+    names = sorted(
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(args.baseline, "BENCH_*.json"))
+    )
+    if not names:
+        print(f"bench-gate: no BENCH_*.json baselines in {args.baseline}")
+        return 1
+    failures = 0
+    compared = 0
+    for name in names:
+        fresh_path = os.path.join(args.fresh, name)
+        if not os.path.exists(fresh_path):
+            print(f"bench-gate: {name}: fresh emit missing — FAIL")
+            failures += 1
+            continue
+        with open(os.path.join(args.baseline, name)) as fh:
+            base = json.load(fh)
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        rows = list(
+            compare_file(
+                name,
+                base,
+                fresh,
+                struct_rtol=args.struct_rtol,
+                timing_factor=args.timing_factor,
+            )
+        )
+        n_fail = sum(r[4] in ("FAIL", "MISSING") for r in rows)
+        n_ok = sum(r[4] == "ok" for r in rows)
+        failures += n_fail
+        compared += n_ok + n_fail
+        print(f"\n{name}: {n_ok} ok, {n_fail} regressed")
+        if n_fail == 0:
+            continue  # keep green output to the summary line
+        header = f"  {'metric':<58} {'class':<10} {'baseline':>12} {'fresh':>12}  status"
+        print(header)
+        print("  " + "-" * (len(header) - 2))
+        fmt = lambda v: f"{v:>12.6g}" if isinstance(v, float) else f"{str(v):>12}"
+        for path, cls, bv, fv, status, note in rows:
+            mark = "" if status == "ok" else f"  ({note})"
+            print(f"  {path:<58} {cls:<10} {fmt(bv)} {fmt(fv)}  {status}{mark}")
+    print(f"\nbench-gate: {compared} metrics gated, {failures} regressions")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

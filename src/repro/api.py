@@ -47,7 +47,9 @@ from repro.core.count_engine import (
     build_counting_plan,
     build_multi_counting_plan,
     colorful_map_count,
+    colorful_map_count_checked,
     colorful_map_count_many,
+    colorful_map_count_many_checked,
     multi_sample_fn,
     plan_sample_fn,
 )
@@ -59,20 +61,26 @@ __all__ = ["CountRequest", "CountResult", "MultiCountResult", "Counter", "run"]
 
 #: plan_opts understood by the single-device backend (``n_colors`` widens
 #: the color budget past the template size — the shared-k contract of
-#: family counting, see ``estimate_many``)
+#: family counting, see ``estimate_many``; ``compact``/``density_threshold``/
+#: ``capacity_factor``/``probes`` drive active-frontier compaction, §15)
 _SINGLE_OPTS = frozenset(
     {"root", "spmm_kind", "impl", "fuse", "tile_size", "block_size", "lane",
-     "n_colors"}
+     "n_colors", "compact", "density_threshold", "capacity_factor", "probes"}
 )
 #: plan_opts understood by the distributed backend (``impl``/``fuse`` carry
 #: the same kernel-routing semantics as the single-device engine;
-#: ``bucket_tile`` is the §3.3 task size of the tiled bucket layout)
+#: ``bucket_tile`` is the §3.3 task size of the tiled bucket layout; the
+#: compaction knobs compact the exchange slabs too)
 _DIST_OPTS = frozenset(
     {"root", "bucket_tile", "num_shards", "mode", "group_factor", "impl",
-     "fuse", "mesh", "data_axis", "iter_axis", "n_colors"}
+     "fuse", "mesh", "data_axis", "iter_axis", "n_colors",
+     "compact", "density_threshold", "capacity_factor", "probes"}
 )
 #: opts consumed by build_distributed_plan (rest go to make_count_fn)
-_DIST_PLAN_OPTS = frozenset({"root", "bucket_tile", "num_shards", "n_colors"})
+_DIST_PLAN_OPTS = frozenset(
+    {"root", "bucket_tile", "num_shards", "n_colors",
+     "compact", "density_threshold", "capacity_factor", "probes"}
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -453,6 +461,11 @@ class Counter:
             plan = self._build_single()
             col = np.zeros(plan.n_pad, np.int32)
             col[: self.graph.n] = coloring
+            if plan.compaction is not None and plan.compaction.enabled:
+                maps, ok = colorful_map_count_checked(plan, jnp.asarray(col))
+                if bool(ok):
+                    return float(maps)
+                # capacity overflow: recompute on the dense program
             return float(colorful_map_count(plan, jnp.asarray(col)))
         from repro.core.distributed import make_count_fn, shard_coloring
 
@@ -586,6 +599,12 @@ class Counter:
         if self.backend == "single":
             col = np.zeros(plan.n_pad, np.int32)
             col[: self.graph.n] = coloring
+            if plan.compaction is not None and plan.compaction.enabled:
+                maps, ok = colorful_map_count_many_checked(
+                    plan, jnp.asarray(col)
+                )
+                if bool(ok):
+                    return np.asarray(maps, np.float64)
             return np.asarray(
                 colorful_map_count_many(plan, jnp.asarray(col)), np.float64
             )

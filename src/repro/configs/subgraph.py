@@ -24,6 +24,12 @@ class CountingConfig:
     group_factor: int = 1
     bucket_tile: int = 128  # §3.3 task size of the tiled bucket layout
     skew: int = 3  # RMAT skew when synthesized
+    #: active-frontier compaction (DESIGN.md §15): probe per-node table
+    #: densities at plan build and compact tables/exchange below the
+    #: threshold, with capacity_factor headroom before the dense fallback
+    compact: bool = False
+    density_threshold: float = 0.25
+    capacity_factor: float = 1.5
     #: multi-template family (template names): when non-empty, the row is a
     #: one-pass family-counting workload over the shared subtree DAG
     #: (``Counter.estimate_many`` / the multi-template dry-run cell);
@@ -76,6 +82,9 @@ class CountingConfig:
                 "mode": self.mode,
                 "group_factor": self.group_factor,
                 "bucket_tile": self.bucket_tile,
+                "compact": self.compact,
+                "density_threshold": self.density_threshold,
+                "capacity_factor": self.capacity_factor,
                 **plan_opts,
             },
         )
@@ -112,12 +121,24 @@ COUNTING_CONFIGS = {
     "friendster-u12-1": CountingConfig(
         "friendster-u12-1", *PAPER_DATASETS["friendster"][:2],
         template="u12-1", num_shards=256, mode="ring", mesh_kind="flat"),
+    # sparse what-if row for the compacted-exchange dry-run cell (§15):
+    # at avg degree 1 the analytic density model goes sparse for the
+    # deep sub-templates, so the lowered cell ships compacted slabs
+    "rmat-sparse-u10-2": CountingConfig(
+        "rmat-sparse-u10-2", 50_000_000, 25_000_000, template="u10-2",
+        num_shards=16, mode="pipeline", compact=True),
     # multi-template family rows: one shared-DAG pass per coloring
     # (nested spiders: u3-1 ⊂ u5-2 ⊂ u7-2, maximal subtree reuse)
     "rmat500-family": CountingConfig(
         "rmat500-family", *PAPER_DATASETS["rmat-500m"][:2],
         template="u10-2", num_shards=16, mode="pipeline",
         templates=("u5-2", "u7-2", "u10-2")),
+    # sparse skewed row: deep wide-table template on a low-degree RMAT —
+    # the regime where active-frontier compaction engages (§15; same graph
+    # family as benchmarks/bench_sparsity.py)
+    "bench-sparse": CountingConfig("bench-sparse", 4_096, 6_000,
+                                   template="u10-2", num_shards=8, skew=8,
+                                   compact=True, density_threshold=0.5),
     # benchmark rows (CPU-scale, same shape family)
     "bench-small": CountingConfig("bench-small", 20_000, 200_000, template="u5-2",
                                   num_shards=8),

@@ -48,6 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from .frontier import (
+    DEFAULT_CAPACITY_FACTOR,
+    DEFAULT_DENSITY_THRESHOLD,
+    CompactionSpec,
+    make_frontier_fn,
+    single_device_compaction,
+)
 from .graphs import Graph, edge_list
 from .table_program import (
     leaf_table,
@@ -71,7 +78,9 @@ __all__ = [
     "build_counting_plan",
     "build_multi_counting_plan",
     "colorful_map_count",
+    "colorful_map_count_checked",
     "colorful_map_count_many",
+    "colorful_map_count_many_checked",
     "count_fn",
     "count_fn_many",
     "plan_sample_fn",
@@ -107,6 +116,8 @@ class CountingPlan:
     fuse: bool = False
     #: column padding multiple the tables were built with (128 = pallas)
     lane: int = 128
+    #: active-frontier compaction spec (None = dense; DESIGN.md §15)
+    compaction: Optional[CompactionSpec] = None
 
     @property
     def scale(self) -> float:
@@ -131,6 +142,7 @@ class MultiCountingPlan:
     impl: str = "auto"
     fuse: bool = False
     lane: int = 128
+    compaction: Optional[CompactionSpec] = None
 
     @property
     def num_templates(self) -> int:
@@ -158,6 +170,23 @@ def _resolve_lane(lane, impl):
     return lane
 
 
+def _maybe_compaction(
+    g, program, combine, k, spmm_plan, compact, density_threshold,
+    capacity_factor, probes,
+):
+    if not compact:
+        return None
+    return single_device_compaction(
+        g, program, combine, k,
+        n_pad=spmm_plan.n_pad,
+        threshold=density_threshold,
+        capacity_factor=capacity_factor,
+        probes=probes,
+        # the SpMM indirection needs edge slabs; a blocks plan has none
+        has_edge_slabs=spmm_plan.slab_dst is not None,
+    )
+
+
 def build_counting_plan(
     g: Graph,
     tree: Tree,
@@ -170,9 +199,20 @@ def build_counting_plan(
     block_size: int = 128,
     lane: Optional[int] = None,
     n_colors: Optional[int] = None,
+    compact: bool = False,
+    density_threshold: float = DEFAULT_DENSITY_THRESHOLD,
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
+    probes: int = 2,
 ) -> CountingPlan:
     """``n_colors`` widens the color budget past the template size (used to
-    compare single-template runs against a family counted with shared k)."""
+    compare single-template runs against a family counted with shared k).
+
+    ``compact=True`` probes per-node table densities at build time and
+    compacts every node below ``density_threshold`` (DESIGN.md §15):
+    combines contract only active rows, the SpMM/fused kernels read sparse
+    right tables through the compact row-index indirection, and the
+    capacity headroom is ``capacity_factor`` (overflow falls back to the
+    dense program, bit-exactly)."""
     chain = partition_tree(tree, root=root)
     k = n_colors if n_colors is not None else tree.n
     if k < tree.n:
@@ -180,6 +220,10 @@ def build_counting_plan(
     plan = _build_spmm(g, spmm_kind, tile_size, block_size)
     lane = _resolve_lane(lane, impl)
     combine, widths = build_node_tables(chain, k, lane=lane)
+    compaction = _maybe_compaction(
+        g, chain, combine, k, plan, compact, density_threshold,
+        capacity_factor, probes,
+    )
     return CountingPlan(
         tree=tree,
         chain=chain,
@@ -193,6 +237,7 @@ def build_counting_plan(
         impl=impl,
         fuse=fuse,
         lane=lane,
+        compaction=compaction,
     )
 
 
@@ -208,6 +253,10 @@ def build_multi_counting_plan(
     block_size: int = 128,
     lane: Optional[int] = None,
     n_colors: Optional[int] = None,
+    compact: bool = False,
+    density_threshold: float = DEFAULT_DENSITY_THRESHOLD,
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
+    probes: int = 2,
 ) -> MultiCountingPlan:
     """One plan for a whole template family: compile the set into a shared
     :class:`TemplateDag` and build each unique node's combine tables once."""
@@ -215,6 +264,10 @@ def build_multi_counting_plan(
     plan = _build_spmm(g, spmm_kind, tile_size, block_size)
     lane = _resolve_lane(lane, impl)
     combine, widths = build_node_tables(dag, dag.k, lane=lane)
+    compaction = _maybe_compaction(
+        g, dag, combine, dag.k, plan, compact, density_threshold,
+        capacity_factor, probes,
+    )
     return MultiCountingPlan(
         templates=dag.templates,
         dag=dag,
@@ -228,18 +281,42 @@ def build_multi_counting_plan(
         impl=impl,
         fuse=fuse,
         lane=lane,
+        compaction=compaction,
     )
 
 
-def _program_counts(plan, program, coloring: jax.Array) -> tuple:
-    """Run ``program`` on one coloring; per-root colorful map counts."""
+def _program_counts(plan, program, coloring: jax.Array, *, checked=False):
+    """Run ``program`` on one coloring; per-root colorful map counts.
+
+    ``checked=True`` engages the plan's compaction spec and additionally
+    returns the AND of every no-overflow flag — ``False`` means at least
+    one static capacity overflowed and the counts must be recomputed on the
+    dense program (the caller's responsibility; see :func:`count_fn`).
+    """
     n_pad = plan.n_pad
     row_mask = (jnp.arange(n_pad) < plan.n).astype(jnp.float32)[:, None]
     leaf = leaf_table(coloring, ops.pad_to(plan.k, plan.lane), row_mask)
+    spec = plan.compaction if checked else None
+    if spec is not None and spec.enabled:
+        flags: list = []
+        frontier_fn = make_frontier_fn(spec.table_caps, plan.n, flags)
+        node_fn = local_node_fn(
+            plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse,
+            compaction=spec, sentinel_row=plan.n, flags=flags,
+        )
+        roots = run_table_program(
+            program, plan.combine, leaf, row_mask, node_fn,
+            root_fn=root_count, frontier_fn=frontier_fn,
+        )
+        ok = jnp.bool_(True)
+        for f in flags:
+            ok = jnp.logical_and(ok, f)
+        return roots, ok
     node_fn = local_node_fn(plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse)
-    return run_table_program(
+    roots = run_table_program(
         program, plan.combine, leaf, row_mask, node_fn, root_fn=root_count
     )
+    return (roots, jnp.bool_(True)) if checked else roots
 
 
 def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
@@ -250,9 +327,24 @@ def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
     ``jax.jit(functools.partial(colorful_map_count, plan))`` or use
     :func:`count_fn`.  The DP itself is the shared table program
     (:mod:`repro.core.table_program`) with the ``local`` (whole-graph SpMM)
-    neighbor-sum strategy.
+    neighbor-sum strategy.  Always executes the dense program — the
+    compact path (which needs its overflow flag consumed) is
+    :func:`colorful_map_count_checked`.
     """
     return _program_counts(plan, plan.chain, coloring)[0]
+
+
+def colorful_map_count_checked(
+    plan: CountingPlan, coloring: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Compact-path count plus its no-overflow flag ``(maps, ok)``.
+
+    When ``ok`` is False some static capacity overflowed and ``maps`` is
+    not trustworthy — recompute with :func:`colorful_map_count` (dense);
+    when True the value is bit-identical to the dense program's.
+    """
+    roots, ok = _program_counts(plan, plan.chain, coloring, checked=True)
+    return roots[0], ok
 
 
 def colorful_map_count_many(
@@ -261,9 +353,42 @@ def colorful_map_count_many(
     """Per-template colorful map counts ``[num_templates]`` for ONE coloring.
 
     One pass over the deduplicated DAG: shared subtree tables are computed
-    once; each template root reduces to its own count.
+    once; each template root reduces to its own count.  Dense program (see
+    :func:`colorful_map_count`); the compact path is
+    :func:`colorful_map_count_many_checked`.
     """
     return jnp.stack(_program_counts(plan, plan.dag, coloring))
+
+
+def colorful_map_count_many_checked(
+    plan: MultiCountingPlan, coloring: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Family analogue of :func:`colorful_map_count_checked`."""
+    roots, ok = _program_counts(plan, plan.dag, coloring, checked=True)
+    return jnp.stack(roots), ok
+
+
+def _checked_fallback(compact_fn, make_dense):
+    """Host-side overflow fallback around a jitted compact counter.
+
+    The compact program is speculative: it returns its no-overflow flag
+    alongside the counts, and on the rare batch where a static capacity
+    overflowed the whole batch is re-dispatched on the lazily-built dense
+    twin — bit-identical results either way, since the compact path equals
+    the dense path exactly whenever its flag holds.
+    """
+    state: Dict[str, object] = {}
+
+    def f(key: jax.Array):
+        maps, est, ok = compact_fn(key)
+        if bool(np.all(np.asarray(ok))):
+            return maps, est
+        fd = state.get("dense")
+        if fd is None:
+            fd = state["dense"] = make_dense()
+        return fd(key)
+
+    return f
 
 
 def count_fn(plan: CountingPlan, batch: Optional[int] = None):
@@ -275,34 +400,55 @@ def count_fn(plan: CountingPlan, batch: Optional[int] = None):
     in one jit call — the colorings are embarrassingly parallel, so vmapping
     the DP amortizes dispatch and SpMM-plan constant overheads across the
     batch.
+
+    A compacted plan (``plan.compaction``) runs the active-frontier program
+    and transparently re-dispatches the dense twin on capacity overflow
+    (DESIGN.md §15) — the returned callable keeps the exact same contract.
     """
+    compact = plan.compaction is not None and plan.compaction.enabled
+    count1 = colorful_map_count_checked if compact else (
+        lambda p, c: (colorful_map_count(p, c), None)
+    )
+
     if batch is None:
 
         def f(key: jax.Array):
             coloring = jax.random.randint(
                 key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
             )
-            maps = colorful_map_count(plan, coloring)
-            return maps, maps * plan.scale
+            maps, ok = count1(plan, coloring)
+            return (maps, maps * plan.scale) if ok is None else (
+                maps, maps * plan.scale, ok
+            )
 
+    else:
+
+        def f(key: jax.Array):
+            colorings = jax.random.randint(
+                key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
+            )
+            maps, ok = jax.vmap(lambda c: count1(plan, c))(colorings)
+            return (maps, maps * plan.scale) if not compact else (
+                maps, maps * plan.scale, ok
+            )
+
+    if not compact:
         return jax.jit(f)
-
-    def fb(key: jax.Array):
-        colorings = jax.random.randint(
-            key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
-        )
-        maps = jax.vmap(lambda c: colorful_map_count(plan, c))(colorings)
-        return maps, maps * plan.scale
-
-    return jax.jit(fb)
+    dense_plan = dataclasses.replace(plan, compaction=None)
+    return _checked_fallback(jax.jit(f), lambda: count_fn(dense_plan, batch))
 
 
 def count_fn_many(plan: MultiCountingPlan, batch: Optional[int] = None):
     """Jitted family counter: ``f(key) -> (maps, estimates)`` with shapes
     ``[R]`` (``batch=None``) or ``[B, R]`` — the same key-derived colorings
     as :func:`count_fn` with ``n_colors=plan.k``, so a family run and a
-    per-template run from the same key see identical colorings."""
+    per-template run from the same key see identical colorings.  Compacted
+    plans fall back to the dense twin on overflow, like :func:`count_fn`."""
     scales = jnp.asarray(plan.scales)
+    compact = plan.compaction is not None and plan.compaction.enabled
+    count1 = colorful_map_count_many_checked if compact else (
+        lambda p, c: (colorful_map_count_many(p, c), None)
+    )
 
     if batch is None:
 
@@ -310,19 +456,28 @@ def count_fn_many(plan: MultiCountingPlan, batch: Optional[int] = None):
             coloring = jax.random.randint(
                 key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
             )
-            maps = colorful_map_count_many(plan, coloring)
-            return maps, maps * scales
+            maps, ok = count1(plan, coloring)
+            return (maps, maps * scales) if ok is None else (
+                maps, maps * scales, ok
+            )
 
+    else:
+
+        def f(key: jax.Array):
+            colorings = jax.random.randint(
+                key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
+            )
+            maps, ok = jax.vmap(lambda c: count1(plan, c))(colorings)
+            return (maps, maps * scales[None, :]) if not compact else (
+                maps, maps * scales[None, :], ok
+            )
+
+    if not compact:
         return jax.jit(f)
-
-    def fb(key: jax.Array):
-        colorings = jax.random.randint(
-            key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
-        )
-        maps = jax.vmap(lambda c: colorful_map_count_many(plan, c))(colorings)
-        return maps, maps * scales[None, :]
-
-    return jax.jit(fb)
+    dense_plan = dataclasses.replace(plan, compaction=None)
+    return _checked_fallback(
+        jax.jit(f), lambda: count_fn_many(dense_plan, batch)
+    )
 
 
 def _cached_sampler(make_fn):

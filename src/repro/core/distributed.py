@@ -47,6 +47,16 @@ in ``M`` to accumulate each tile's contribution **directly into the output
 table** — the full ``[n_loc_pad, B]`` neighbor sum never exists, the
 paper's fine-grained pipeline (§3.2) stretched across exchange chunks.
 
+**Compacted exchange (§15).**  With ``compact=True`` the plan probes each
+node table's active-row density at build time (``core.frontier``) and,
+for sufficiently sparse exchanged tables, ships only active rows:
+capacity-padded ``[rc, B+1]`` per-peer slabs (rows + a bitcast slot
+column) on alltoall/pipeline and ``[cap, B+1]`` compacted whole-shard
+relays on ring.  The receiver scatters into the zero-initialized dense
+buffer, so the tiled consume below is byte-for-byte the dense code, and a
+psum'd overflow flag re-dispatches the dense twin when a static capacity
+is exceeded — bit-exact either way.
+
 Iteration parallelism: the outer color-coding loop is embarrassingly
 parallel, so independent colorings shard over a second mesh axis
 (``iter_axis``), mirroring the paper's multi-node outer loop.
@@ -86,6 +96,19 @@ from repro.comm import (
 from repro.compat import pvary_like, shard_map
 from repro.kernels import ops
 from .count_engine import copy_scale
+from .frontier import (
+    DEFAULT_CAPACITY_FACTOR,
+    DEFAULT_DENSITY_THRESHOLD,
+    CompactionSpec,
+    abstract_compaction,
+    chunk_slots,
+    compact_combine,
+    decode_slots,
+    distributed_compaction,
+    encode_slots,
+    make_frontier_fn,
+    node_exchange_bytes,
+)
 from .graphs import Graph
 from .table_program import (
     build_node_tables,
@@ -140,6 +163,8 @@ class DistributedPlan:
     a2a_slab_dst: jax.Array  # [P, NRB*spb, tile] int32 block-local dst (-1 pad)
     a2a_slab_cols: jax.Array  # [P, NRB*spb, tile] int32 col into [P*r_pad]
     bucket_counts: np.ndarray  # [P, P] true bucket sizes (diagnostics)
+    #: active-frontier compaction spec (None = dense; DESIGN.md §15)
+    compaction: Optional[CompactionSpec] = None
 
     @property
     def tree(self) -> Tree:
@@ -208,10 +233,22 @@ def build_distributed_plan(
     root: int = 0,
     bucket_tile: int = 128,
     n_colors: Optional[int] = None,
+    compact: bool = False,
+    density_threshold: float = DEFAULT_DENSITY_THRESHOLD,
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
+    probes: int = 2,
 ) -> DistributedPlan:
     """``tree`` is a single :class:`Tree` (original contract) or a sequence
     of trees / template names — a family compiled into one shared
-    :class:`TemplateDag` counted in a single pass per coloring."""
+    :class:`TemplateDag` counted in a single pass per coloring.
+
+    ``compact=True`` probes per-node table densities at build time
+    (DESIGN.md §15) and, for every exchanged table below
+    ``density_threshold``, ships only its active rows: capacity-padded
+    per-peer slabs plus an index column on alltoall/pipeline, compacted
+    whole-shard relays on ring — shrinking the wire volume of all four
+    modes by the measured sparsity, with a bit-exact dense fallback on
+    capacity overflow."""
     from .graphs import edge_list
 
     Pn = num_shards
@@ -301,6 +338,20 @@ def build_distributed_plan(
 
     combine, widths = build_node_tables(program, k, lane=128)
 
+    compaction = None
+    if compact:
+        compaction = distributed_compaction(
+            g, program, combine, k,
+            num_shards=Pn,
+            shard_size=shard_size,
+            n_loc_pad=n_loc_pad,
+            r_pad=r_pad,
+            send_idx=send_idx,
+            threshold=density_threshold,
+            capacity_factor=capacity_factor,
+            probes=probes,
+        )
+
     return DistributedPlan(
         templates=templates,
         program=program,
@@ -324,6 +375,7 @@ def build_distributed_plan(
         a2a_slab_dst=jnp.asarray(a2a_slab_dst),
         a2a_slab_cols=jnp.asarray(a2a_slab_cols),
         bucket_counts=counts,
+        compaction=compaction,
     )
 
 
@@ -335,9 +387,12 @@ def abstract_plan(
     *,
     root: int = 0,
     skew_headroom: float = 3.0,
-    compact: bool = True,  # False (ring mode): compact-exchange arrays minimal
+    compact_requests: bool = True,  # False (ring): request arrays minimal
     bucket_tile: int = 128,
     n_colors: Optional[int] = None,
+    compact: bool = False,
+    density_threshold: float = DEFAULT_DENSITY_THRESHOLD,
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
 ) -> DistributedPlan:
     """Shape-only plan for dry-run lowering at paper-scale graph sizes.
 
@@ -349,6 +404,11 @@ def abstract_plan(
     analysis reflects what the program actually ships.  ``tree`` may be a
     family (sequence of trees/names) — the lowered program is then the
     shared-DAG multi-template counter.
+
+    ``compact=True`` sizes frontier-compaction capacities from the
+    analytic density model (:func:`repro.core.frontier.model_density` —
+    nothing exists to probe), so dry-run cells lower and report the
+    compacted exchange at paper scale.
     """
     Pn = num_shards
     program, templates, k = _resolve_program(tree, root, n_colors)
@@ -364,9 +424,21 @@ def abstract_plan(
     spb = int(e_dev * skew_headroom / (nrb_loc * bucket_tile)) + 1
 
     combine, widths = build_node_tables(program, k, lane=128)
+    compaction = None
+    if compact:
+        compaction = abstract_compaction(
+            num_vertices,
+            2.0 * num_edges / max(num_vertices, 1),
+            program,
+            k,
+            r_pad=r_pad,
+            n_loc_pad=n_loc_pad,
+            threshold=density_threshold,
+            capacity_factor=capacity_factor,
+        )
 
     s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
-    if compact:
+    if compact_requests:
         tsl = s(Pn, 1, bucket_tile)  # ring-only array
         tsc = s(Pn, num_tiles, bucket_tile)
         sidx = s(Pn, Pn, r_pad)
@@ -401,6 +473,7 @@ def abstract_plan(
         a2a_slab_dst=sd,
         a2a_slab_cols=sc,
         bucket_counts=np.zeros((Pn, Pn), np.int64),
+        compaction=compaction,
     )
 
 
@@ -436,7 +509,8 @@ def _node_mode(
     tbl = plan.combine[node_index]
     b_width = plan.widths[nd.right]
     Pn = plan.num_shards
-    total_bytes = (Pn - 1) * plan.r_pad * b_width * 4
+    # compacted exchange ships [rc, B+1] slabs instead of [r_pad, B]
+    _, total_bytes = node_exchange_bytes(plan, node_index, "alltoall")
     edges_dev = float(plan.bucket_counts.sum()) / Pn
     if edges_dev <= 0:  # abstract plan: estimate from the tile capacity
         edges_dev = float(plan.num_tiles * plan.bucket_tile)
@@ -494,6 +568,17 @@ def make_count_fn(
     where the fn takes all plan arrays as explicit arguments so the plan may
     hold ShapeDtypeStructs (see :func:`abstract_plan`); ``iter_axis`` may be
     a tuple of mesh axes.
+
+    A compacted plan (``plan.compaction``, DESIGN.md §15) ships every
+    sufficiently sparse exchanged table as active rows only — per-peer
+    ``[rc, B+1]`` slabs (rows + a bitcast slot column) on alltoall and
+    pipeline, ``[cap, B+1]`` whole-shard relays on ring — and restricts the
+    final combine to active rows.  The compact program is speculative: it
+    also returns per-iteration overflow counts, and the returned callable
+    transparently re-dispatches a dense twin when any static capacity
+    overflowed (bit-exact either way).  With ``return_raw=True`` the raw
+    ``(counts, overflow)`` function is returned instead (dry-run measures
+    the compact program itself).
     """
     assert not (keyed and return_raw), "keyed and return_raw are exclusive"
     Pn = plan.num_shards
@@ -508,6 +593,31 @@ def make_count_fn(
         if not nd.is_leaf
     }
 
+    spec = plan.compaction
+    compact_on = spec is not None and spec.enabled
+    # Which tables carry a frontier, and in which form, follows each
+    # parent's resolved exchange mode: ring relays need the index form
+    # (whole-shard compaction), alltoall/pipeline and the compact combine
+    # only the activity mask.  Leaves are dense by construction.
+    fr_caps: Dict[int, int] = {}
+    mask_only = set()
+    if compact_on:
+        for i, nd in enumerate(plan.program.nodes):
+            if nd.is_leaf:
+                continue
+            if node_modes[i] == "ring":
+                if nd.right in spec.shard_caps:
+                    fr_caps[nd.right] = spec.shard_caps[nd.right]
+            elif nd.right in spec.exchange_caps:
+                mask_only.add(nd.right)
+            if i in spec.combine_caps and not fuse:
+                mask_only.add(nd.left)
+        keep = lambda j: not plan.program.nodes[j].is_leaf
+        fr_caps = {j: c for j, c in fr_caps.items() if keep(j)}
+        mask_only = frozenset(
+            j for j in mask_only if keep(j) and j not in fr_caps
+        )
+
     def local_count(
         coloring, tile_dst, tile_src_loc, tile_src_cmp, tile_off, s_idx,
         slab_dst, slab_cols,
@@ -519,6 +629,11 @@ def make_count_fn(
         """
         row_mask = (jnp.arange(n_loc_pad) < plan.shard_size).astype(jnp.float32)[:, None]
         leaf = leaf_table(coloring, ops.pad_to(plan.k, 128), row_mask)
+        flags: list = []
+        frontier_fn = (
+            make_frontier_fn(fr_caps, plan.shard_size, flags, mask_only=mask_only)
+            if compact_on else None
+        )
 
         def consume_into_m(tile_src):
             """Accumulate a chunk's bucket into the neighbor sum M.
@@ -570,19 +685,71 @@ def make_count_fn(
 
             return consume
 
-        def node_fn(i, tbl, c_left, c_right):
+        def node_fn(i, tbl, c_left, c_right, f_left, f_right):
             nm = node_modes[i]
             bw = c_right.shape[1]
+            nd_i = plan.program.nodes[i]
+            rc = spec.exchange_caps.get(nd_i.right) if compact_on else None
+            ring_cap = spec.shard_caps.get(nd_i.right) if compact_on else None
+            ccap = (
+                spec.combine_caps.get(i) if compact_on and not fuse else None
+            )
+
+            def final_combine(m):
+                if ccap is not None:
+                    return compact_combine(
+                        c_left, m, tbl, ccap, plan.shard_size, impl, flags,
+                        left_mask=f_left.mask if f_left is not None else None,
+                    )
+                return ops.color_combine(c_left, m * row_mask, tbl, impl=impl)
+
+            def compact_chunks():
+                """Compacted per-peer slabs [P, rc, B+1]: the active rows of
+                each request chunk plus a bitcast slot column — the only
+                bytes the wire carries in place of [P, r_pad, B]."""
+                act_chunks = jnp.take(f_right.mask, s_idx)  # [P, r_pad]
+                counts = jnp.sum(act_chunks.astype(jnp.int32), axis=1)
+                flags.append(jnp.max(counts) <= rc - 1)
+                slots = chunk_slots(act_chunks, rc, r_pad - 1)  # [P, rc]
+                rows = jnp.take(
+                    c_right,
+                    jnp.take_along_axis(s_idx, slots, axis=1).reshape(-1),
+                    axis=0,
+                ).reshape(Pn, rc, bw)
+                return jnp.concatenate(
+                    [rows, encode_slots(slots)[..., None]], axis=-1
+                )
+
             if nm == "alltoall":
                 # Naive mode: the whole exchange buffer is materialized
                 # anyway, so consume it with the in-core engine's kernels
                 # over the [P * r_pad, B] concatenation (slab columns were
                 # built against exactly this layout).
-                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
-                received = jax.lax.all_to_all(
-                    chunks, data_axis, split_axis=0, concat_axis=0
-                )
-                remote = received.reshape(Pn * r_pad, bw)
+                if rc is not None and f_right is not None:
+                    # compacted alltoall: ship [P, rc, B+1], scatter the
+                    # received rows back into the (zero-initialized) dense
+                    # buffer — inactive slots stay exactly zero, which is
+                    # what the dense exchange would have delivered there
+                    payload = compact_chunks()
+                    received = jax.lax.all_to_all(
+                        payload, data_axis, split_axis=0, concat_axis=0
+                    )
+                    r_rows = received[..., :bw].reshape(Pn * rc, bw)
+                    r_slots = decode_slots(received[..., bw])  # [P, rc]
+                    flat = r_slots + (
+                        jnp.arange(Pn, dtype=jnp.int32) * r_pad
+                    )[:, None]
+                    remote = (
+                        jnp.zeros((Pn * r_pad, bw), c_right.dtype)
+                        .at[flat.reshape(-1)]
+                        .add(r_rows)
+                    )
+                else:
+                    chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
+                    received = jax.lax.all_to_all(
+                        chunks, data_axis, split_axis=0, concat_axis=0
+                    )
+                    remote = received.reshape(Pn * r_pad, bw)
                 if fuse:
                     return ops.fused_count_slabs(
                         slab_dst, slab_cols, c_left, remote, tbl,
@@ -592,7 +759,7 @@ def make_count_fn(
                     slab_dst, slab_cols, remote, out_rows=n_loc_pad,
                     slabs_per_block=plan.slabs_per_block, impl=impl,
                 )
-                return ops.color_combine(c_left, m * row_mask, tbl, impl=impl)
+                return final_combine(m)
             # incremental modes: per-chunk tiled-bucket consume
             if fuse:
                 init = jnp.zeros((n_loc_pad, tbl.s_pad), jnp.float32)
@@ -604,33 +771,87 @@ def make_count_fn(
                     consume_into_out(src_arr, c_left, tbl) if fuse
                     else consume_into_m(src_arr)
                 )
-                out = ring_allgather_overlap(c_right, data_axis, consume, init)
+                if ring_cap is not None and f_right is not None:
+                    # compacted relay: the ring carries [cap, B+1] active
+                    # rows + local row ids; each hop reconstructs the dense
+                    # shard before the (unchanged) tiled consume
+                    rows = jnp.take(c_right, f_right.idx, axis=0)
+                    payload = jnp.concatenate(
+                        [rows, encode_slots(f_right.idx)[:, None]], axis=1
+                    )
+
+                    def consume_compact(acc, chunk, src):
+                        dense = (
+                            jnp.zeros((n_loc_pad, bw), c_right.dtype)
+                            .at[decode_slots(chunk[:, bw])]
+                            .add(chunk[:, :bw])
+                        )
+                        return consume(acc, dense, src)
+
+                    out = ring_allgather_overlap(
+                        payload, data_axis, consume_compact, init
+                    )
+                else:
+                    out = ring_allgather_overlap(
+                        c_right, data_axis, consume, init
+                    )
             else:  # pipeline
                 src_arr = tile_src_cmp  # chunks are compact request lists
                 consume = (
                     consume_into_out(src_arr, c_left, tbl) if fuse
                     else consume_into_m(src_arr)
                 )
-                chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
-                out = grouped_exchange(
-                    chunks, data_axis, consume, init, group_factor=group_factor
-                )
+                if rc is not None and f_right is not None:
+                    payload = compact_chunks()
+
+                    def consume_compact(acc, chunk, src):
+                        dense = (
+                            jnp.zeros((r_pad, bw), c_right.dtype)
+                            .at[decode_slots(chunk[:, bw])]
+                            .add(chunk[:, :bw])
+                        )
+                        return consume(acc, dense, src)
+
+                    out = grouped_exchange(
+                        payload, data_axis, consume_compact, init,
+                        group_factor=group_factor,
+                    )
+                else:
+                    chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
+                    out = grouped_exchange(
+                        chunks, data_axis, consume, init,
+                        group_factor=group_factor,
+                    )
             if fuse:
                 return out
-            return ops.color_combine(c_left, out * row_mask, tbl, impl=impl)
+            return final_combine(out)
 
         roots = run_table_program(
             plan.program, plan.combine, leaf, row_mask, node_fn,
-            root_fn=root_count,
+            root_fn=root_count, frontier_fn=frontier_fn,
         )
-        return jnp.stack(roots)  # [R]; R == 1 for single-template chains
+        ok = jnp.bool_(True)
+        for fl in flags:
+            ok = jnp.logical_and(ok, fl)
+        # [R] per-template counts plus this coloring's no-overflow flag
+        return jnp.stack(roots), ok
+
+    def _reduce(partials, oks):
+        counts = jax.lax.psum(partials, data_axis)  # [I_loc, R]
+        if not compact_on:
+            return counts
+        # per-iteration overflow counts, replicated across shards
+        bad = jax.lax.psum(
+            jnp.logical_not(oks).astype(jnp.int32), data_axis
+        )
+        return counts, bad
 
     def sharded_fn(colorings, *arrs):
         # local shapes: colorings [I_loc, 1, n_loc_pad]; plan arrays [1, ...]
         colorings = colorings[:, 0]
         local = tuple(a[0] for a in arrs)
-        partials = jax.vmap(lambda col: local_count(col, *local))(colorings)
-        return jax.lax.psum(partials, data_axis)  # [I_loc, R]
+        partials, oks = jax.vmap(lambda col: local_count(col, *local))(colorings)
+        return _reduce(partials, oks)
 
     def sharded_fn_keyed(key_data, *arrs):
         # local shapes: key_data [I_loc, 2] uint32; plan arrays [1, ...]
@@ -642,10 +863,11 @@ def make_count_fn(
             col = jax.random.randint(k, (n_loc_pad,), 0, plan.k, dtype=jnp.int32)
             return local_count(col, *local)
 
-        partials = jax.vmap(one)(key_data)  # [I_loc, R]
-        return jax.lax.psum(partials, data_axis)
+        partials, oks = jax.vmap(one)(key_data)  # [I_loc, R]
+        return _reduce(partials, oks)
 
     iter_spec = P(iter_axis) if iter_axis else P()
+    out_spec = (iter_spec, iter_spec) if compact_on else iter_spec
     lead_spec = (
         P(iter_axis) if keyed
         else (P(iter_axis, data_axis) if iter_axis else P(None, data_axis))
@@ -656,7 +878,7 @@ def make_count_fn(
     # type; outputs are psum-reduced, hence replicated by construction.
     mapped = shard_map(
         sharded_fn_keyed if keyed else sharded_fn,
-        mesh=mesh, in_specs=in_specs, out_specs=iter_spec, check_vma=False,
+        mesh=mesh, in_specs=in_specs, out_specs=out_spec, check_vma=False,
     )
 
     if return_raw:
@@ -675,18 +897,44 @@ def make_count_fn(
         return fn, structs, in_shard
 
     @jax.jit
-    def f(colorings):
-        out = mapped(colorings, *plan.device_arrays)  # [I, R]
+    def fj(data):
+        out = mapped(data, *plan.device_arrays)
+        if compact_on:
+            counts, bad = out
+            return (counts if plan.is_multi else counts[:, 0]), bad
         return out if plan.is_multi else out[:, 0]
 
+    if compact_on:
+        # speculative dispatch: the compact program reports per-iteration
+        # overflow counts; any overflow re-runs the batch on the lazily
+        # built dense twin (bit-exact — compact == dense when flags hold)
+        dense_state: Dict[str, object] = {}
+
+        def run(data):
+            res, bad = fj(data)
+            if int(np.asarray(bad).sum()) == 0:
+                return res
+            fd = dense_state.get("fn")
+            if fd is None:
+                fd = dense_state["fn"] = make_count_fn(
+                    dataclasses.replace(plan, compaction=None), mesh,
+                    mode=mode, data_axis=data_axis, iter_axis=iter_axis,
+                    group_factor=group_factor, impl=impl, fuse=fuse,
+                    hockney=hockney, keyed=keyed,
+                )
+            return fd(data)
+
+    else:
+        run = fj
+
     if not keyed:
-        return f
+        return run
 
     def f_keyed(keys):
         keys = jnp.asarray(keys)
         if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
             keys = jax.random.key_data(keys)
-        return f(keys.astype(jnp.uint32))
+        return run(keys.astype(jnp.uint32))
 
     return f_keyed
 

@@ -1,0 +1,573 @@
+"""Active-frontier compaction: sparsity-aware DP tables and exchange.
+
+For deep sub-templates most rows of the per-node count table ``C_i [n, B]``
+are exactly zero — a vertex is active only if a colorful embedding of
+``T_i`` roots at it, which for a random coloring of a skewed graph is a
+rare event once ``|T_i|`` grows.  The dense engines of PRs 1-4 pay full
+cost regardless: every combine contracts all ``n`` rows and every exchange
+ships all requested rows.  This module makes table sparsity a first-class
+plan property, GraphBLAS-style (density-adaptive format choice, cf. the
+existing ``spmm_kind="auto"`` and ``mode="adaptive"`` machinery):
+
+* :func:`probe_activity` — an exact host-side boolean DP (counts are
+  nonnegative, so zero/nonzero propagates without cancellation) measuring
+  per-node active-row masks on a few probe colorings at plan-build time;
+* :func:`CompactionSpec` — the static capacities derived from the probe:
+  ``cap = pad(ceil(max_active * capacity_factor)) (+1 reserved zero slot)``
+  for every node whose measured density falls below ``density_threshold``.
+  Capacities are **static shapes**: jitted code gathers active rows into
+  capacity-padded compact form and a runtime flag records overflow, on
+  which the caller re-dispatches the dense program (bit-exact fallback);
+* runtime helpers — :class:`Frontier` (the per-table active-row record the
+  executor threads through the table program), :func:`compact_combine`
+  (combine over active rows only, scattered back), slot encode/decode for
+  the compacted exchange payloads.
+
+Everything here is exact: compaction never changes a single bit of the
+counts — inactive rows contribute exactly zero in the dense program, and
+the compact program simply never multiplies or ships them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, List, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DEFAULT_DENSITY_THRESHOLD",
+    "DEFAULT_CAPACITY_FACTOR",
+    "Frontier",
+    "CompactionSpec",
+    "probe_activity",
+    "single_device_compaction",
+    "distributed_compaction",
+    "model_density",
+    "capacity_for",
+    "node_exchange_bytes",
+    "make_frontier_fn",
+    "inverse_map",
+    "compact_combine",
+    "chunk_slots",
+    "encode_slots",
+    "decode_slots",
+]
+
+
+#: compact a node once its measured active-row fraction is at or below this
+#: (the GraphBLAS-style density switch; override per plan)
+DEFAULT_DENSITY_THRESHOLD = 0.25
+#: headroom over the probed maximum before the static capacity overflows
+#: into the dense fallback
+DEFAULT_CAPACITY_FACTOR = 1.5
+#: density alone does not decide profitability: skipping a row saves its
+#: combine work (``S * J`` fused multiply-adds) but costs a slot of the
+#: activity/gather/scatter plumbing, so narrow-table nodes (u7-2's widest
+#: combine is 35 x 3) lose even when sparse.  Combine compaction engages
+#: only when the per-row combine work clears this floor.
+MIN_COMBINE_ELEMENTS = 256
+#: same idea for the compact-source SpMM indirection: the gather/inverse
+#: map overhead only pays once the right table is reasonably wide
+MIN_TABLE_WIDTH = 64
+
+
+# ---------------------------------------------------------------------------
+# Runtime structures
+# ---------------------------------------------------------------------------
+
+
+class Frontier(NamedTuple):
+    """Active-row record of one node table, computed once at production.
+
+    ``idx`` holds the active row indices in capacity-padded form (pad slots
+    carry the zero-sentinel row); slot ``cap - 1`` is reserved as a pad slot
+    whenever ``ok`` holds, so an inverse map's default slot always names a
+    zero row of the gathered compact table.  ``ok`` is the runtime
+    no-overflow flag (``count <= cap - 1``); mask-only frontiers (used
+    where just the activity mask is needed) carry ``None`` in the other
+    fields.
+    """
+
+    mask: jax.Array  # [rows] bool — active rows (pad rows False)
+    idx: Optional[jax.Array]  # [cap] int32 active rows, sentinel-padded
+    count: Optional[jax.Array]  # [] int32 true active count
+    cap: Optional[int]  # static capacity
+    ok: Optional[jax.Array]  # [] bool: compact form valid
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionSpec:
+    """Static compaction plan for one table program (both backends).
+
+    All capacities are trace-time constants sized from probe measurements;
+    a node absent from a ``*_caps`` mapping runs dense.  ``density`` /
+    ``gather_density`` keep the probe measurements for reporting (dry-run
+    cells, benchmarks) — the same signal the thresholds gated on.
+    """
+
+    threshold: float
+    capacity_factor: float
+    #: node -> measured table density (max over probes; internal nodes)
+    density: Mapping[int, float]
+    #: node -> measured combine-gather density (active left AND active M)
+    gather_density: Mapping[int, float]
+    #: node -> frontier capacity (active rows of its table; +1 zero slot)
+    table_caps: Mapping[int, int]
+    #: node -> combine-gather capacity (rows the combine contracts)
+    combine_caps: Mapping[int, int]
+    #: node -> per-peer compacted-chunk capacity (distributed a2a/pipeline)
+    exchange_caps: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    #: node -> compacted relay capacity of a whole shard (distributed ring)
+    shard_caps: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    probes: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return bool(
+            self.table_caps or self.combine_caps
+            or self.exchange_caps or self.shard_caps
+        )
+
+
+def capacity_for(
+    max_active: int, capacity_factor: float, limit: int, multiple: int = 128
+) -> Optional[int]:
+    """Static capacity for a measured active count: ``ceil(max * factor)``
+    plus one reserved zero slot, padded to ``multiple``.  ``None`` when the
+    padded capacity reaches ``limit`` (compaction would not shrink it)."""
+    want = int(math.ceil(max_active * capacity_factor)) + 1
+    want = max(want, 2)
+    cap = ((want + multiple - 1) // multiple) * multiple
+    return cap if cap < limit else None
+
+
+def model_density(t: int, k: int, avg_degree: float) -> float:
+    """Analytic stand-in for the probe at shape-only (dry-run) scale.
+
+    Markov bound on the active-row fraction of a size-``t`` sub-template
+    table: ``P(C_i[v] != 0) <= E[row sum] ~= d^(t-1) * falling(k, t)/k^t``
+    (rooted tree maps times the probability the ``t`` vertices draw
+    pairwise-distinct colors).  Exact enough to size dry-run capacities;
+    real plans measure instead (:func:`probe_activity`).
+    """
+    if t <= 1:
+        return 1.0
+    emb = float(avg_degree) ** (t - 1)
+    p = 1.0
+    for i in range(t):
+        p *= (k - i) / k
+    return float(min(1.0, emb * p))
+
+
+# ---------------------------------------------------------------------------
+# Host-side probe: exact boolean activity DP
+# ---------------------------------------------------------------------------
+
+#: bound on the [n, S_chunk, J] boolean gather intermediate of the probe
+_PROBE_BUDGET = 1 << 24
+
+
+class NodeActivity(NamedTuple):
+    table: np.ndarray  # [n] bool — active rows of the node's table
+    gather: Optional[np.ndarray]  # [n] bool — active(left) & active(M)
+
+
+def probe_activity(
+    graph, program, combine, k: int, *, probes: int = 2, seed: int = 0
+) -> Iterator[Dict[int, NodeActivity]]:
+    """Yield per-probe-coloring activity masks for every internal node.
+
+    Runs the partition DP over **booleans** on the host: counts are sums of
+    products of nonnegative terms, so ``C_i[v, S] != 0`` iff the boolean
+    recurrence holds — the probe is exact for its coloring, not a bound.
+    ``combine`` supplies each internal node's true-width split tables
+    (``CombineTables.idx1/idx2``), exactly as the real DP consumes them.
+    """
+    from .graphs import edge_list
+
+    rows, cols = edge_list(graph)
+    n = graph.n
+    rng = np.random.default_rng(seed)
+    for _ in range(probes):
+        coloring = rng.integers(0, k, n)
+        reads = list(program.table_reads())
+        # boolean activity tables, keyed by node (NOT the DP recursion —
+        # that lives exactly once, in core/table_program.py)
+        acts: Dict[int, np.ndarray] = {}
+        out: Dict[int, NodeActivity] = {}
+        for i, nd in enumerate(program.nodes):
+            if nd.is_leaf:
+                t = np.zeros((n, k), bool)
+                t[np.arange(n), coloring] = True
+            else:
+                right = acts[nd.right]
+                left = acts[nd.left]
+                m = np.zeros((n, right.shape[1]), bool)
+                np.logical_or.at(m, rows, right[cols])
+                idx1 = np.asarray(combine[i].idx1)  # [S, J] true widths
+                idx2 = np.asarray(combine[i].idx2)
+                s, j = idx1.shape
+                chunk = max(1, min(s, _PROBE_BUDGET // max(n * j, 1)))
+                t = np.empty((n, s), bool)
+                for s0 in range(0, s, chunk):
+                    i1 = idx1[s0 : s0 + chunk]
+                    i2 = idx2[s0 : s0 + chunk]
+                    t[:, s0 : s0 + chunk] = np.any(
+                        left[:, i1] & m[:, i2], axis=2
+                    )
+                out[i] = NodeActivity(
+                    table=t.any(axis=1),
+                    gather=left.any(axis=1) & m.any(axis=1),
+                )
+                for c in (nd.right, nd.left):
+                    reads[c] -= 1
+                    if reads[c] == 0:
+                        acts.pop(c, None)
+            if i in getattr(program, "roots", ()):
+                reads[i] -= list(program.roots).count(i)
+            if reads[i] > 0:
+                acts[i] = t
+        yield out
+
+
+def _child_roles(program) -> Tuple[set, set]:
+    """(right-child node ids, left-child node ids) over internal parents."""
+    rights, lefts = set(), set()
+    for nd in program.nodes:
+        if not nd.is_leaf:
+            rights.add(nd.right)
+            lefts.add(nd.left)
+    return rights, lefts
+
+
+def single_device_compaction(
+    graph,
+    program,
+    combine,
+    k: int,
+    *,
+    n_pad: int,
+    threshold: float,
+    capacity_factor: float,
+    probes: int = 2,
+    seed: int = 0,
+    has_edge_slabs: bool = True,
+) -> CompactionSpec:
+    """Probe densities and size the in-core capacities.
+
+    ``table_caps`` engage for internal nodes consumed as a *right* child
+    (their compact form feeds the SpMM/fused kernels through the row-index
+    indirection — which needs the edge-slab layout, so a block-dense plan
+    passes ``has_edge_slabs=False`` and skips them entirely rather than
+    paying frontier upkeep nothing consumes); ``combine_caps`` engage per
+    internal node when the measured combine-gather density (active left
+    rows that also have an active neighbor sum) is below the threshold.
+    """
+    n = graph.n
+    rights, _ = _child_roles(program)
+    if not has_edge_slabs:
+        rights = set()
+    max_act: Dict[int, int] = {}
+    max_gath: Dict[int, int] = {}
+    for masks in probe_activity(
+        graph, program, combine, k, probes=probes, seed=seed
+    ):
+        for i, a in masks.items():
+            max_act[i] = max(max_act.get(i, 0), int(a.table.sum()))
+            max_gath[i] = max(max_gath.get(i, 0), int(a.gather.sum()))
+    density = {i: c / max(n, 1) for i, c in max_act.items()}
+    gather_density = {i: c / max(n, 1) for i, c in max_gath.items()}
+    table_caps = {}
+    combine_caps = {}
+    for i in max_act:
+        if (
+            i in rights
+            and density[i] <= threshold
+            and combine[i].s >= MIN_TABLE_WIDTH
+        ):
+            cap = capacity_for(max_act[i], capacity_factor, n_pad)
+            if cap is not None:
+                table_caps[i] = cap
+        if (
+            gather_density[i] <= threshold
+            and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS
+        ):
+            cap = capacity_for(max_gath[i], capacity_factor, n_pad)
+            if cap is not None:
+                combine_caps[i] = cap
+    return CompactionSpec(
+        threshold=threshold,
+        capacity_factor=capacity_factor,
+        density=density,
+        gather_density=gather_density,
+        table_caps=table_caps,
+        combine_caps=combine_caps,
+        probes=probes,
+    )
+
+
+def distributed_compaction(
+    graph,
+    program,
+    combine,
+    k: int,
+    *,
+    num_shards: int,
+    shard_size: int,
+    n_loc_pad: int,
+    r_pad: int,
+    send_idx: np.ndarray,
+    threshold: float,
+    capacity_factor: float,
+    probes: int = 2,
+    seed: int = 0,
+) -> CompactionSpec:
+    """Probe densities and size the distributed capacities.
+
+    ``exchange_caps`` bound the *per-peer* compacted chunk (active rows
+    among the ``send_idx`` request lists — measured per (src, dst) pair, so
+    hub-heavy request lists are sized by their own activity, not the global
+    average); ``shard_caps`` bound the compacted whole-shard relay of the
+    ring mode; ``combine_caps`` bound the per-shard combine gather.
+    """
+    n = graph.n
+    Pn, ss = num_shards, shard_size
+    rights, _ = _child_roles(program)
+    max_act: Dict[int, int] = {}
+    max_chunk: Dict[int, int] = {}
+    max_shard: Dict[int, int] = {}
+    max_gath_shard: Dict[int, int] = {}
+    for masks in probe_activity(
+        graph, program, combine, k, probes=probes, seed=seed
+    ):
+        for i, a in masks.items():
+            max_act[i] = max(max_act.get(i, 0), int(a.table.sum()))
+            pad = np.zeros(Pn * ss + 1, bool)
+            pad[:n] = a.table
+            gpad = np.zeros(Pn * ss, bool)
+            gpad[:n] = a.gather
+            shard_counts = pad[: Pn * ss].reshape(Pn, ss).sum(axis=1)
+            max_shard[i] = max(max_shard.get(i, 0), int(shard_counts.max()))
+            max_gath_shard[i] = max(
+                max_gath_shard.get(i, 0),
+                int(gpad.reshape(Pn, ss).sum(axis=1).max()),
+            )
+            if i in rights:
+                # per-(src q, dst p) chunk activity through q's send lists
+                glob = send_idx + (np.arange(Pn) * ss)[:, None, None]
+                valid = send_idx != ss
+                counts = (pad[np.minimum(glob, Pn * ss)] & valid).sum(axis=2)
+                max_chunk[i] = max(max_chunk.get(i, 0), int(counts.max()))
+    density = {i: c / max(n, 1) for i, c in max_act.items()}
+    gather_density = {
+        i: c / max(ss, 1) for i, c in max_gath_shard.items()
+    }
+    exchange_caps = {}
+    shard_caps = {}
+    combine_caps = {}
+    for i in max_act:
+        # wire savings are pure win at any width: gate only by density
+        if i in rights and density[i] <= threshold:
+            cap = capacity_for(max_chunk[i], capacity_factor, r_pad, multiple=8)
+            if cap is not None:
+                exchange_caps[i] = cap
+            cap = capacity_for(
+                max_shard[i], capacity_factor, n_loc_pad, multiple=8
+            )
+            if cap is not None:
+                shard_caps[i] = cap
+        if (
+            gather_density[i] <= threshold
+            and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS
+        ):
+            cap = capacity_for(max_gath_shard[i], capacity_factor, n_loc_pad)
+            if cap is not None:
+                combine_caps[i] = cap
+    return CompactionSpec(
+        threshold=threshold,
+        capacity_factor=capacity_factor,
+        density=density,
+        gather_density=gather_density,
+        table_caps={},
+        combine_caps=combine_caps,
+        exchange_caps=exchange_caps,
+        shard_caps=shard_caps,
+        probes=probes,
+    )
+
+
+def abstract_compaction(
+    num_vertices: int,
+    avg_degree: float,
+    program,
+    k: int,
+    *,
+    r_pad: int,
+    n_loc_pad: int,
+    threshold: float,
+    capacity_factor: float,
+) -> CompactionSpec:
+    """Shape-only spec for dry-run lowering: densities from the analytic
+    :func:`model_density` instead of a probe (nothing is materialized)."""
+    rights, _ = _child_roles(program)
+    density = {
+        i: model_density(nd.size, k, avg_degree)
+        for i, nd in enumerate(program.nodes)
+        if not nd.is_leaf
+    }
+    exchange_caps = {}
+    shard_caps = {}
+    combine_caps = {}
+    for i, rho in density.items():
+        if rho > threshold:
+            continue
+        cap = capacity_for(
+            int(rho * r_pad), capacity_factor, r_pad, multiple=8
+        )
+        if i in rights and cap is not None:
+            exchange_caps[i] = cap
+        cap = capacity_for(
+            int(rho * n_loc_pad), capacity_factor, n_loc_pad, multiple=8
+        )
+        if i in rights and cap is not None:
+            shard_caps[i] = cap
+        cap = capacity_for(int(rho * n_loc_pad), capacity_factor, n_loc_pad)
+        if cap is not None:
+            combine_caps[i] = cap
+    return CompactionSpec(
+        threshold=threshold,
+        capacity_factor=capacity_factor,
+        density=density,
+        gather_density=dict(density),
+        table_caps={},
+        combine_caps=combine_caps,
+        exchange_caps=exchange_caps,
+        shard_caps=shard_caps,
+    )
+
+
+def node_exchange_bytes(plan, i: int, mode: str) -> Tuple[int, int]:
+    """``(dense, compact)`` per-device wire bytes node ``i``'s exchange
+    moves each iteration under ``mode`` — THE formula for the compacted
+    slab layout (``[cap, B+1]`` active rows + slot column vs the dense
+    ``[rows, B]``), shared by the dry-run report, the sparsity bench, and
+    the adaptive mode's Hockney bytes so the three can never disagree.
+    ``plan`` is a DistributedPlan (duck-typed to avoid a module cycle)."""
+    nd = plan.program.nodes[i]
+    b = plan.widths[nd.right]
+    spec = plan.compaction
+    if mode == "ring":
+        rows = plan.n_loc_pad
+        cap = spec.shard_caps.get(nd.right) if spec is not None else None
+    else:
+        rows = plan.r_pad
+        cap = spec.exchange_caps.get(nd.right) if spec is not None else None
+    dense = (plan.num_shards - 1) * rows * b * 4
+    compact = (plan.num_shards - 1) * cap * (b + 1) * 4 if cap else dense
+    return dense, compact
+
+
+# ---------------------------------------------------------------------------
+# Traced helpers (used inside the jitted count programs)
+# ---------------------------------------------------------------------------
+
+
+def make_frontier_fn(
+    table_caps: Mapping[int, int],
+    sentinel_row: int,
+    flags: List[jax.Array],
+    mask_only: frozenset = frozenset(),
+):
+    """Frontier hook for :func:`repro.core.table_program.run_table_program`.
+
+    Nodes in ``table_caps`` get the full capacity-padded index frontier
+    (appending their no-overflow flag to ``flags``); nodes in ``mask_only``
+    get just the activity mask (exchange/combine consumers that never need
+    the index form); everything else returns ``None`` (dense).
+    """
+
+    def frontier_fn(i: int, table: jax.Array) -> Optional[Frontier]:
+        cap = table_caps.get(i)
+        if cap is None and i not in mask_only:
+            return None
+        mask = jnp.any(table != 0, axis=1)
+        if cap is None:
+            return Frontier(mask, None, None, None, None)
+        idx = jnp.nonzero(mask, size=cap, fill_value=sentinel_row)[0].astype(
+            jnp.int32
+        )
+        count = jnp.sum(mask.astype(jnp.int32))
+        ok = count <= cap - 1
+        flags.append(ok)
+        return Frontier(mask, idx, count, cap, ok)
+
+    return frontier_fn
+
+
+def inverse_map(idx: jax.Array, n_rows: int, zero_slot: int) -> jax.Array:
+    """Row index -> compact slot; unlisted rows map to ``zero_slot`` (which
+    must name an all-zero row of the compact table — slot ``cap - 1`` is
+    reserved for exactly this whenever the frontier's ``ok`` flag holds)."""
+    return (
+        jnp.full((n_rows,), zero_slot, jnp.int32)
+        .at[idx]
+        .set(jnp.arange(idx.shape[0], dtype=jnp.int32))
+    )
+
+
+def compact_combine(
+    c_left: jax.Array,  # [rows, A]
+    m: jax.Array,  # [rows, B] neighbor sum (pad rows may be garbage)
+    tables,  # ops.CombineTables
+    cap: int,
+    sentinel_row: int,
+    impl: str,
+    flags: List[jax.Array],
+    left_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Combine over active rows only, scattered back to the dense layout.
+
+    The output row ``v`` of a combine is zero whenever ``left[v]`` is all
+    zero or ``M[v]`` is all zero, so contracting just the rows where both
+    are active — gathered into ``[cap, ...]`` compact form — computes the
+    bit-identical table at ``cap/rows`` of the FLOPs.  Rows outside the
+    gather stay exactly zero, which is what the dense combine would have
+    produced there.  Appends the no-overflow flag to ``flags``.
+    """
+    from repro.kernels import ops
+
+    act = left_mask if left_mask is not None else jnp.any(c_left != 0, axis=1)
+    act = act & jnp.any(m != 0, axis=1)
+    idx = jnp.nonzero(act, size=cap, fill_value=sentinel_row)[0].astype(
+        jnp.int32
+    )
+    flags.append(jnp.sum(act.astype(jnp.int32)) <= cap - 1)
+    lc = jnp.take(c_left, idx, axis=0)
+    mc = jnp.take(m, idx, axis=0)
+    outc = ops.color_combine(lc, mc, tables, impl=impl)
+    out = jnp.zeros((c_left.shape[0], outc.shape[1]), outc.dtype)
+    return out.at[idx].set(outc)
+
+
+def chunk_slots(act_chunks: jax.Array, cap: int, fill: int) -> jax.Array:
+    """Per-chunk active-slot indices ``[P, cap]`` (vmapped capacity-padded
+    nonzero; pad slots carry ``fill``, which must name a zero row)."""
+    return jax.vmap(
+        lambda a: jnp.nonzero(a, size=cap, fill_value=fill)[0].astype(
+            jnp.int32
+        )
+    )(act_chunks)
+
+
+def encode_slots(slots: jax.Array) -> jax.Array:
+    """int32 slot vector -> float32 carrier column (bitcast, lossless) so a
+    compacted payload travels as ONE array through any exchange primitive."""
+    return jax.lax.bitcast_convert_type(slots.astype(jnp.int32), jnp.float32)
+
+
+def decode_slots(col: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(col, jnp.int32)

@@ -36,12 +36,18 @@ cannot drift.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from .frontier import (
+    CompactionSpec,
+    Frontier,
+    compact_combine,
+    inverse_map,
+)
 
 __all__ = [
     "build_node_tables",
@@ -51,9 +57,25 @@ __all__ = [
     "local_node_fn",
 ]
 
-#: strategy signature: (node_index, combine_tables, c_left, c_right) ->
-#: unmasked output table [rows, >= s_pad] for that internal node
-NodeFn = Callable[[int, ops.CombineTables, jax.Array, jax.Array], jax.Array]
+#: strategy signature: (node_index, combine_tables, c_left, c_right,
+#: f_left, f_right) -> unmasked output table [rows, >= s_pad] for that
+#: internal node.  ``f_left``/``f_right`` are the children's
+#: :class:`~repro.core.frontier.Frontier` records (None when dense).
+NodeFn = Callable[
+    [
+        int,
+        ops.CombineTables,
+        jax.Array,
+        jax.Array,
+        Optional[Frontier],
+        Optional[Frontier],
+    ],
+    jax.Array,
+]
+
+#: frontier hook: (node_index, masked table) -> Frontier or None; computed
+#: once per produced table, shared by every consumer (see core.frontier)
+FrontierFn = Callable[[int, jax.Array], Optional[Frontier]]
 
 
 def build_node_tables(
@@ -94,6 +116,7 @@ def run_table_program(
     row_mask: jax.Array,
     node_fn: NodeFn,
     root_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    frontier_fn: Optional[FrontierFn] = None,
 ) -> tuple:
     """Execute a table program; returns one value per ``program.roots`` entry.
 
@@ -115,19 +138,29 @@ def run_table_program(
     delivered value as soon as the root node is built, so wide root tables
     of sub-``k``-sized templates never outlive their reduction; without it
     the masked root tables themselves are returned.
+
+    ``frontier_fn`` threads active-row frontiers through the program
+    (DESIGN.md §15): each produced table's frontier is computed once, lives
+    exactly as long as the table, and reaches every consumer via the
+    ``f_left``/``f_right`` arguments of ``node_fn`` — a DAG table read by
+    several parents never recomputes its activity.
     """
     reads = list(program.table_reads())
     want: Dict[int, int] = {}
     for r in program.roots:
         want[r] = want.get(r, 0) + 1
     tables: Dict[int, jax.Array] = {}
+    frontiers: Dict[int, Frontier] = {}
     delivered: Dict[int, jax.Array] = {}
     for i, nd in enumerate(program.nodes):
         if nd.is_leaf:
-            out = leaf
+            out = leaf  # leaves are dense: every vertex has a color
         else:
             tbl = combine[i]
-            raw = node_fn(i, tbl, tables[nd.left], tables[nd.right])
+            raw = node_fn(
+                i, tbl, tables[nd.left], tables[nd.right],
+                frontiers.get(nd.left), frontiers.get(nd.right),
+            )
             col_mask = (jnp.arange(raw.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
             out = raw * row_mask * col_mask
             # the children just had one read each consumed; free at zero
@@ -136,11 +169,16 @@ def run_table_program(
                 reads[c] -= 1
                 if reads[c] == 0:
                     tables.pop(c, None)
+                    frontiers.pop(c, None)
         if i in want:
             delivered[i] = root_fn(out) if root_fn is not None else out
             reads[i] -= want[i]
         if reads[i] > 0:
             tables[i] = out
+            if frontier_fn is not None and not nd.is_leaf:
+                fr = frontier_fn(i, out)
+                if fr is not None:
+                    frontiers[i] = fr
     return tuple(delivered[r] for r in program.roots)
 
 
@@ -163,6 +201,9 @@ def local_node_fn(
     *,
     impl: str = "auto",
     fuse: bool = False,
+    compaction: Optional[CompactionSpec] = None,
+    sentinel_row: Optional[int] = None,
+    flags: Optional[List[jax.Array]] = None,
 ) -> NodeFn:
     """The in-core neighbor-sum strategy: SpMM over the whole graph.
 
@@ -170,12 +211,48 @@ def local_node_fn(
     contracts every ``row_tile``-row block of ``M`` as soon as it is
     produced and never materializes the full ``[n_pad, B]`` neighbor sum
     (the paper's fine-grained pipeline, §3.2, at kernel granularity).
+
+    With ``compaction`` (DESIGN.md §15): a right child carrying a frontier
+    feeds the SpMM/fused kernels in compact ``[cap, B]`` form through the
+    row-index indirection (``ops.spmm_compact`` / ``fused_count_compact``),
+    and nodes with a ``combine_caps`` entry contract only the rows where
+    both the left table and the neighbor sum are active
+    (:func:`~repro.core.frontier.compact_combine`), appending their
+    no-overflow flags to ``flags``.  A compacted node takes the two-step
+    path even under ``fuse`` — skipping inactive rows beats skipping the
+    ``M`` materialization once the table is sparse.
     """
 
-    def node_fn(i, tbl, c_left, c_right):
+    def compact_right(c_right, f_right):
+        """(compact table, inverse map) when the indirection applies."""
+        if f_right is None or f_right.idx is None or spmm_plan.slab_dst is None:
+            return None, None
+        table_c = jnp.take(c_right, f_right.idx, axis=0)
+        inv = inverse_map(f_right.idx, c_right.shape[0], f_right.cap - 1)
+        return table_c, inv
+
+    def neighbor_sum(c_right, f_right):
+        right_c, inv = compact_right(c_right, f_right)
+        if right_c is not None:
+            return ops.spmm_compact(spmm_plan, right_c, inv, impl=impl)
+        return ops.spmm(spmm_plan, c_right, impl=impl)
+
+    def node_fn(i, tbl, c_left, c_right, f_left, f_right):
+        cap = compaction.combine_caps.get(i) if compaction is not None else None
+        if cap is not None:
+            m = neighbor_sum(c_right, f_right)
+            return compact_combine(
+                c_left, m, tbl, cap, sentinel_row, impl, flags,
+                left_mask=f_left.mask if f_left is not None else None,
+            )
         if fuse:
+            right_c, inv = compact_right(c_right, f_right)
+            if right_c is not None:
+                return ops.fused_count_compact(
+                    spmm_plan, c_left, right_c, inv, tbl, impl=impl
+                )
             return ops.fused_count(spmm_plan, c_left, c_right, tbl, impl=impl)
-        m = ops.spmm(spmm_plan, c_right, impl=impl)
+        m = neighbor_sum(c_right, f_right)
         # mask pad rows of the neighbor sum before the combine
         m = m * row_mask
         return ops.color_combine(c_left, m, tbl, impl=impl)

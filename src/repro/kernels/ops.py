@@ -45,12 +45,15 @@ __all__ = [
     "build_spmm_plan",
     "build_slab_layout",
     "build_bucket_tiles",
+    "expected_patch_density",
     "spmm",
+    "spmm_compact",
     "spmm_slabs",
     "CombineTables",
     "build_combine_tables",
     "color_combine",
     "fused_count",
+    "fused_count_compact",
     "fused_count_slabs",
     "flash_attention",
 ]
@@ -326,6 +329,20 @@ def build_spmm_plan(
     raise ValueError(f"unknown spmm plan kind {kind!r}")
 
 
+def expected_patch_density(n: int, e_directed: int, block: int = 128) -> float:
+    """Model of the ``kind="auto"`` patch-density signal for shape-only
+    plans (dry-run cells, where no edges exist to measure): expected edges
+    per occupied ``block x block`` adjacency patch under uniform placement,
+    ``E[occupied] = patches * (1 - exp(-e / patches))``.  Real plans carry
+    the measured value in :attr:`SpmmPlan.patch_density` instead."""
+    import math
+
+    nb = max(1, pad_to(n + 1, block) // block)
+    patches = float(nb) * float(nb)
+    occupied = patches * (1.0 - math.exp(-float(e_directed) / patches))
+    return float(e_directed) / max(occupied, 1.0)
+
+
 def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
     """Neighbor sum ``M[v] = sum_{(v,u) in E} table[u]``.
 
@@ -370,6 +387,41 @@ def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
         interpret=not on_tpu(),
     )[: plan.n_pad]
     return jnp.where(plan.written_mask[:, None], out, 0)
+
+
+def spmm_compact(
+    plan: SpmmPlan,
+    table_c: jax.Array,  # [cap, B] compact source (active rows gathered)
+    inv: jax.Array,  # [n_pad] int32 row -> compact slot (inactive -> zero slot)
+    impl: str = "auto",
+) -> jax.Array:
+    """Neighbor sum driven through a row-index indirection: the same edge
+    program as :func:`spmm`, but every source lookup goes ``row -> inv ->
+    compact slot``, so the gathered table is the ``[cap, B]`` active-row
+    form — inactive rows are never touched, and the Pallas kernel's
+    VMEM-resident table shrinks from ``n_pad`` to ``cap`` rows.  Exact:
+    rows outside the compact form are all-zero by construction, which is
+    precisely what the dense gather would have contributed.
+
+    Requires an edge plan (``kind == 'edges'``).  Returns ``[n_pad, B]``;
+    output rows >= plan.n are unspecified (engine masks).
+    """
+    impl = _resolve(impl)
+    assert plan.kind == "edges", "spmm_compact needs the edge-slab layout"
+    if impl == "xla":
+        gathered = jnp.take(table_c, jnp.take(inv, plan.cols), axis=0)
+        return jax.ops.segment_sum(
+            gathered, plan.rows, num_segments=plan.n_pad
+        )
+    return spmm_edge_tile_pallas(
+        plan.slab_dst,
+        jnp.take(inv, plan.slab_cols),
+        table_c,
+        slabs_per_block=plan.slabs_per_block,
+        row_tile=plan.row_tile,
+        out_rows=plan.n_pad,
+        interpret=not on_tpu(),
+    )
 
 
 def spmm_slabs(
@@ -560,6 +612,44 @@ def fused_count(
         plan.slab_cols,
         left,
         right,
+        tables.idx1_t,
+        tables.idx2_t,
+        num_splits=tables.j,
+        slabs_per_block=plan.slabs_per_block,
+        row_tile=plan.row_tile,
+        interpret=not on_tpu(),
+    )
+
+
+def fused_count_compact(
+    plan: SpmmPlan,
+    left: jax.Array,  # [n_pad, A_pad]
+    right_c: jax.Array,  # [cap, B] compact right table (active rows)
+    inv: jax.Array,  # [n_pad] int32 row -> compact slot (inactive -> zero slot)
+    tables: CombineTables,
+    impl: str = "auto",
+) -> jax.Array:
+    """:func:`fused_count` with the right operand in compact active-row
+    form, routed through the same row-index indirection as
+    :func:`spmm_compact` — the fused kernel's resident source table shrinks
+    to ``cap`` rows and ``M`` still never materializes.  Requires the
+    edge-slab layout.  Returns ``[n_pad, S_pad]`` (engine masks pads)."""
+    impl = _resolve(impl)
+    assert plan.slab_dst is not None, "fused_count_compact needs edge slabs"
+    cols_c = jnp.take(inv, plan.slab_cols)
+    if impl == "xla":
+        out = fused_count_xla(
+            plan.slab_dst, cols_c, left, right_c,
+            tables.idx1, tables.idx2, row_tile=plan.row_tile,
+        )
+        if out.shape[1] < tables.s_pad:
+            out = jnp.pad(out, ((0, 0), (0, tables.s_pad - out.shape[1])))
+        return out
+    return fused_count_pallas(
+        plan.slab_dst,
+        cols_c,
+        left,
+        right_c,
         tables.idx1_t,
         tables.idx2_t,
         num_splits=tables.j,

@@ -34,6 +34,31 @@ from repro.core import load_edge_file, load_npz
 from repro.core.estimator import num_groups_for
 
 
+def _plan_report(plan):
+    """Surface the density signals the plan's adaptive choices used: the
+    spmm auto patch density and the per-node table densities / capacities
+    of active-frontier compaction (§15)."""
+    spmm = getattr(plan, "spmm_plan", None)
+    if spmm is not None and spmm.patch_density is not None:
+        print(f"spmm auto: {spmm.patch_density:.1f} edges/patch "
+              f"-> kind={spmm.kind}")
+    spec = getattr(plan, "compaction", None)
+    if spec is None:
+        return
+    dens = " ".join(
+        f"n{i}={spec.density[i]:.3f}" for i in sorted(spec.density)
+    )
+    caps = {}
+    for tag, m in (("combine", spec.combine_caps),
+                   ("table", spec.table_caps),
+                   ("exchange", spec.exchange_caps),
+                   ("ring", spec.shard_caps)):
+        for i, c in sorted(m.items()):
+            caps[f"{tag}[{i}]"] = c
+    print(f"compaction: threshold {spec.threshold} node densities: {dens}")
+    print(f"compaction caps: {caps if caps else 'none engaged'}")
+
+
 def _report(label, shards, res, dt, ran):
     # the timer covers every coloring that actually executed (the last
     # batched dispatch may overshoot --iters); the statistics use --iters
@@ -50,8 +75,10 @@ def main():
     ap.add_argument("--graph", default=None, metavar="PATH",
                     help="real dataset (.npz from save_npz, else an edge-list "
                          "text file); default: synthesize the config's RMAT")
+    # default None means "unset": pick the backend from the device count
+    # and the exchange schedule from the config row
     ap.add_argument("--mode", default=None,
-                    choices=[None, "alltoall", "pipeline", "adaptive", "ring",
+                    choices=["alltoall", "pipeline", "adaptive", "ring",
                              "single"])
     ap.add_argument("--templates", default=None, metavar="A,B,C",
                     help="comma-separated template family: count them all in "
@@ -73,6 +100,16 @@ def main():
                     choices=["auto", "edges", "blocks"])
     ap.add_argument("--bucket-tile", type=int, default=128,
                     help="distributed §3.3 task size: edges per bucket tile")
+    ap.add_argument("--compact", action="store_true", default=None,
+                    help="active-frontier compaction (§15): probe per-node "
+                         "table densities and compact tables/exchange below "
+                         "--density-threshold (both backends)")
+    ap.add_argument("--density-threshold", type=float, default=None,
+                    help="compact a node once its active-row fraction is at "
+                         "or below this (default: config row's)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="capacity headroom over the probed active maximum "
+                         "before the dense overflow fallback")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.batch < 1:
@@ -90,6 +127,11 @@ def main():
 
     single = args.mode == "single" or (args.mode is None and jax.device_count() == 1)
     impl_opt = {"impl": args.impl} if args.impl else {}
+    for name, val in (("compact", args.compact),
+                      ("density_threshold", args.density_threshold),
+                      ("capacity_factor", args.capacity_factor)):
+        if val is not None:
+            impl_opt[name] = val
     if single:
         # a block-dense plan has no edge slabs, so fused_count would fall
         # back to the unfused path: when fusing, steer 'auto' to 'edges'
@@ -153,6 +195,7 @@ def main():
         label = (f"{request.plan_opts['mode']}(fuse={args.fuse},"
                  f"impl={args.impl or 'xla'},"
                  f"tile={counter.plan.bucket_tile}x{counter.plan.num_tiles})")
+    _plan_report(counter.plan)
     counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
     res = counter.estimate(

@@ -302,6 +302,41 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
     return rec
 
 
+def _compaction_report(plan, mode: str):
+    """Per-node density / capacity / bytes-saved cells for a counting plan
+    with active-frontier compaction (DESIGN.md §15); None when dense."""
+    spec = plan.compaction
+    if spec is None:
+        return None
+    from repro.core.frontier import node_exchange_bytes
+
+    per_node = {}
+    bytes_dense = bytes_compact = 0
+    for i, nd in enumerate(plan.program.nodes):
+        if nd.is_leaf:
+            continue
+        nb_dense, nb_compact = node_exchange_bytes(plan, i, mode)
+        caps = spec.shard_caps if mode == "ring" else spec.exchange_caps
+        bytes_dense += nb_dense
+        bytes_compact += nb_compact
+        per_node[str(i)] = {
+            "size": nd.size,
+            "density": round(spec.density.get(i, 1.0), 4),
+            "exchange_cap": caps.get(nd.right),
+            "combine_cap": spec.combine_caps.get(i),
+        }
+    return {
+        "threshold": spec.threshold,
+        "capacity_factor": spec.capacity_factor,
+        "per_node": per_node,
+        "exchange_bytes_dense": bytes_dense,
+        "exchange_bytes_compact": bytes_compact,
+        "exchange_bytes_saved_frac": round(
+            1.0 - bytes_compact / max(bytes_dense, 1), 4
+        ),
+    }
+
+
 def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
     """Dry-run the distributed counting engine at paper-scale shapes."""
     from repro.core.distributed import abstract_plan, make_count_fn
@@ -335,7 +370,10 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
             ccfg.num_edges,
             tmpl,
             num_shards,
-            compact=mode != "ring",
+            compact_requests=mode != "ring",
+            compact=ccfg.compact,
+            density_threshold=ccfg.density_threshold,
+            capacity_factor=ccfg.capacity_factor,
         )
         fn, structs, in_shard = make_count_fn(
             plan, mesh,
@@ -350,6 +388,8 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
         mem = compiled.memory_analysis()
         cost = _cost_dict(compiled)
         coll = parse_collectives(compiled.as_text())
+        from repro.kernels import ops as kops
+
         rec = {
             "arch": f"counting:{name}",
             "shape": "+".join(ccfg.templates) if ccfg.templates else ccfg.template,
@@ -357,6 +397,14 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
             "mode": mode, "status": "ok",
             "chips": chips,
             "num_templates": max(len(ccfg.templates), 1),
+            # the spmm_kind="auto" signal at this cell's shape (a real plan
+            # measures it; shape-only cells carry the placement model)
+            "spmm_auto_density_model": round(
+                kops.expected_patch_density(
+                    ccfg.num_vertices, 2 * ccfg.num_edges
+                ), 2,
+            ),
+            "compaction": _compaction_report(plan, mode),
             "compile_s": round(time.time() - t0, 1),
             "memory": {
                 "argument_bytes": mem.argument_size_in_bytes,

@@ -355,6 +355,108 @@ def test_multi_template():
           f"shape {res.samples.shape}")
 
 
+def test_compaction():
+    """Active-frontier compaction over 8 real shards (DESIGN.md §15).
+
+    The compacted exchange (per-peer [rc, B+1] slabs on alltoall/pipeline,
+    compacted whole-shard relays on ring) and the compact combine must be
+    bit-identical to the dense program on every mode x fuse, the keyed
+    estimator must produce identical samples from the same key, and an
+    absurdly small capacity_factor must fall back to the dense program
+    without changing a single count.
+    """
+    from repro.core import frontier
+
+    # drop the profitability floors (restored in the finally below): this
+    # checks exactness of all three capacity kinds (exchange, ring relay,
+    # combine) on a template small enough to afford at 8 shards, not
+    # whether compaction wins
+    saved_floors = (frontier.MIN_COMBINE_ELEMENTS, frontier.MIN_TABLE_WIDTH)
+    frontier.MIN_COMBINE_ELEMENTS = 1
+    frontier.MIN_TABLE_WIDTH = 1
+    try:
+        _run_compaction_checks()
+    finally:
+        frontier.MIN_COMBINE_ELEMENTS, frontier.MIN_TABLE_WIDTH = saved_floors
+
+
+def _run_compaction_checks():
+    from repro.core import relabel_random, rmat
+    from repro.core.distributed import (
+        build_distributed_plan,
+        keyed_sample_fn,
+        make_count_fn,
+        shard_coloring,
+    )
+    from repro.core.templates import template
+
+    # sparse skewed R-MAT under the paper's random partition: u7-2's deep
+    # tables measure 0.10-0.43 active, so every capacity kind engages
+    g = relabel_random(rmat(4096, 6000, skew=8, seed=0), seed=1)
+    tree = template("u7-2")  # root's cut child is internal: exchange caps
+    rng = np.random.default_rng(21)
+    coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+    mesh = make_mesh((8,), ("data",))
+    dense_plan = build_distributed_plan(g, tree, 8)
+    plan = build_distributed_plan(
+        g, tree, 8, compact=True, density_threshold=0.5,
+        capacity_factor=1.25,
+    )
+    spec = plan.compaction
+    check(
+        "compact_caps_engaged",
+        bool(spec.exchange_caps) and bool(spec.shard_caps)
+        and bool(spec.combine_caps),
+        f"exchange={spec.exchange_caps} ring={spec.shard_caps} "
+        f"combine={spec.combine_caps}",
+    )
+    check(
+        "compact_caps_shrink",
+        all(c < plan.r_pad for c in spec.exchange_caps.values())
+        and all(c < plan.n_loc_pad for c in spec.shard_caps.values()),
+        f"r_pad={plan.r_pad} n_loc_pad={plan.n_loc_pad}",
+    )
+    cols = jnp.asarray(shard_coloring(plan, coloring)[None])
+
+    # compact == dense bit-for-bit (dense-vs-oracle parity is covered by
+    # the other worker tests; u7-2 is beyond the exponential oracle)
+    cases = [
+        ("alltoall", False, "xla"), ("alltoall", True, "pallas"),
+        ("pipeline", False, "pallas"), ("pipeline", True, "xla"),
+        ("adaptive", False, "xla"), ("ring", False, "xla"),
+        ("ring", True, "xla"),
+    ]
+    for mode, fuse, impl in cases:
+        fd = make_count_fn(dense_plan, mesh, mode=mode, fuse=fuse, impl=impl)
+        fc = make_count_fn(plan, mesh, mode=mode, fuse=fuse, impl=impl)
+        d = np.asarray(fd(cols))
+        c = np.asarray(fc(cols))
+        ok = np.array_equal(d, c)
+        check(
+            f"compact_{mode}_fuse{int(fuse)}_{impl}_P8", ok,
+            f"dense {d[0]} compact {c[0]}",
+        )
+
+    # keyed estimator: same key => identical samples, compact vs dense
+    sd = keyed_sample_fn(dense_plan, mesh, mode="pipeline")
+    sc = keyed_sample_fn(plan, mesh, mode="pipeline")
+    a = sd(jax.random.key(4), 6)
+    b = sc(jax.random.key(4), 6)
+    check("compact_keyed_samples_P8", np.array_equal(a, b), f"{a[:2]} {b[:2]}")
+
+    # overflow: tiny capacities must trip the flag and re-dispatch dense
+    tiny = build_distributed_plan(
+        g, tree, 8, compact=True, density_threshold=1.0, capacity_factor=1e-6
+    )
+    ft = make_count_fn(tiny, mesh, mode="pipeline")
+    fd = make_count_fn(dense_plan, mesh, mode="pipeline")
+    check(
+        "compact_overflow_fallback_P8",
+        np.array_equal(np.asarray(ft(cols)), np.asarray(fd(cols))),
+        "",
+    )
+
+
 def test_moe_manual_vs_dense():
     """moe_block_manual (EP token-sharded / TP / pipelined) == dense oracle."""
     import dataclasses
@@ -454,6 +556,7 @@ def main():
     test_tiled_skew_parity()
     test_unified_api()
     test_multi_template()
+    test_compaction()
     test_moe_manual_vs_dense()
     test_elastic_restore()
     if FAILURES:

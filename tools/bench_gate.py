@@ -54,6 +54,9 @@ STRUCTURAL_KEYS = (
     "directed_edges",
     "chain_",
     "dag_",
+    # sparsity signals (bench_sparsity / spmm auto): measured from seeded
+    # graph structure, so they are machine-independent like the layouts
+    "density",
 )
 # context keys that must match for a file's metrics to be comparable at all
 META_KEYS = ("smoke", "backend")

@@ -15,7 +15,10 @@ deep sub-template tables go sparse):
   * **wall-clock** — single-device per-iteration time with compaction off
     vs on (same keys, bit-identical counts), and in full mode the same
     comparison on 8 host devices through the pipelined exchange
-    (``--dist-worker`` subprocess).
+    (``--dist-worker`` subprocess);
+  * **checkpoint overhead** (robustness, §16) — the cost of one atomic
+    synchronous save and one verified restore of the estimator state
+    (``ckpt_*`` keys, gated as the robustness metric class).
 
 ``run()`` emits the usual CSV lines and returns a dict; ``main()`` writes
 ``BENCH_sparsity.json`` at the repo root for the CI bench gate.
@@ -147,6 +150,54 @@ def bench_template(tname: str, g, smoke: bool) -> dict:
     return rec
 
 
+def bench_checkpoint(smoke: bool) -> dict:
+    """Robustness overhead (DESIGN.md §16): what resumability costs.
+
+    The estimator state banks one float64 per iteration, so the measured
+    quantities are the fixed price of a checkpointed run: one atomic
+    checksummed save (sync — the resume-point guarantee) and one verified
+    ``load_latest`` restore, at a realistic banked-sample size.  Keys are
+    ``ckpt_``-prefixed so the CI bench gate holds them in the robustness
+    metric class.
+    """
+    import tempfile
+
+    from repro.core.estimator import EstimatorState
+    from repro.train.checkpoint import CheckpointManager
+
+    n_iter = 1 << 10 if smoke else 1 << 14
+    rng = np.random.default_rng(0)
+    state = EstimatorState(
+        signature=f"bench|n_iter={n_iter}|batch={BATCH}|delta=0.1|key=0,0",
+        n_iter=n_iter, batch=BATCH, delta=0.1, cursor=n_iter // BATCH,
+        samples=np.abs(rng.standard_normal(n_iter)),
+    )
+    payload = state.to_arrays()
+    state_bytes = sum(np.asarray(a).nbytes for a in payload.values())
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        sec_save = time_fn(
+            lambda: mgr.save(1, {"estimator": state.to_arrays()}), iters=5
+        )
+        sec_restore = time_fn(
+            lambda: EstimatorState.from_arrays(mgr.load_latest()[1]["estimator"]),
+            iters=5,
+        )
+    rec = {
+        "banked_iters": n_iter,
+        "ckpt_state_bytes": state_bytes,
+        "ckpt_save_us": sec_save * 1e6,
+        "ckpt_restore_us": sec_restore * 1e6,
+    }
+    emit(
+        "sparsity/checkpoint",
+        sec_save * 1e6,
+        f"save={sec_save * 1e3:.2f}ms restore={sec_restore * 1e3:.2f}ms "
+        f"state={state_bytes / 1024:.0f}KiB banked={n_iter}",
+    )
+    return rec
+
+
 def _dist_worker(smoke: bool):
     """Runs under 8 host devices: pipelined-exchange wall clock, dense vs
     compacted (invoked via run_worker; prints one parsable line)."""
@@ -198,6 +249,7 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
     }
     for tname in TEMPLATES:
         results["templates"][tname] = bench_template(tname, g, smoke)
+    results["robustness"] = bench_checkpoint(smoke)
     if not smoke:
         # real 8-device pipelined exchange, dense vs compacted
         stdout = run_worker(

@@ -36,6 +36,7 @@ counting call builds and caches the backend plan and its jitted functions.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Dict, Iterator, Mapping, Optional, Union
 
@@ -53,9 +54,16 @@ from repro.core.count_engine import (
     multi_sample_fn,
     plan_sample_fn,
 )
-from repro.core.estimator import estimate_counts, estimate_counts_many, niter_bound
+from repro.core.estimator import (
+    EstimatorState,
+    estimate_counts,
+    estimate_counts_many,
+    niter_bound,
+)
 from repro.core.graphs import Graph
+from repro.core.supervisor import RetryPolicy
 from repro.core.templates import Tree, partition_tree, template as resolve_template
+from repro.train.checkpoint import CheckpointManager
 
 __all__ = ["CountRequest", "CountResult", "MultiCountResult", "Counter", "run"]
 
@@ -101,6 +109,12 @@ class CountRequest:
     delta: float = 0.1
     batch: Optional[int] = None
     plan_opts: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    #: robustness spec (DESIGN.md §16): bounded retry of transient sample
+    #: faults, checkpoint cadence (iterations; needs a checkpoint dir at run
+    #: time), and optional early stop at a target relative standard error
+    max_retries: Optional[int] = None
+    checkpoint_every: int = 0
+    target_rsd: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,13 +132,25 @@ class CountResult:
     delta: float
     eps: Optional[float]
     elapsed_s: float
+    #: batches the supervisor gave up on (QuarantinedBatch records) — their
+    #: iterations are EXCLUDED from the aggregates above, never silently
+    #: folded in; an empty tuple means every dispatched batch contributed
+    quarantined: tuple = ()
+    #: iterations restored from a checkpoint before this call ran (0 on a
+    #: fresh run) — progress and RSD already account for them
+    resumed_from: int = 0
 
     def __str__(self) -> str:
+        extra = ""
+        if self.resumed_from:
+            extra += f", resumed at {self.resumed_from}"
+        if self.quarantined:
+            extra += f", {len(self.quarantined)} batch(es) quarantined"
         return (
             f"CountResult({self.template} in {self.graph or 'graph'}: "
             f"{self.estimate:.6g} via {self.backend}, "
             f"RSD {self.relative_sd:.2f}, {self.niter} colorings, "
-            f"{self.elapsed_s:.2f}s)"
+            f"{self.elapsed_s:.2f}s{extra})"
         )
 
 
@@ -153,6 +179,8 @@ class MultiCountResult:
     delta: float
     eps: Optional[float]
     elapsed_s: float
+    quarantined: tuple = ()  # excluded batches (shared by all templates)
+    resumed_from: int = 0  # iterations restored from checkpoint
 
     def __len__(self) -> int:
         return len(self.templates)
@@ -170,6 +198,8 @@ class MultiCountResult:
             delta=self.delta,
             eps=self.eps,
             elapsed_s=self.elapsed_s,
+            quarantined=self.quarantined,
+            resumed_from=self.resumed_from,
         )
 
     def __iter__(self):
@@ -185,6 +215,47 @@ class MultiCountResult:
             f"{self.chain_tables} unique tables, {self.niter} colorings, "
             f"{self.elapsed_s:.2f}s)"
         )
+
+
+def _retry_policy(
+    retry: Optional[RetryPolicy], max_retries: Optional[int]
+) -> Optional[RetryPolicy]:
+    if retry is not None:
+        return retry
+    if max_retries is not None:
+        return RetryPolicy(max_retries=max_retries)
+    return None
+
+
+def _resolve_checkpointing(checkpoint, resume):
+    """Normalize the (checkpoint, resume) knobs into (manager, state).
+
+    ``checkpoint`` is a directory path or a ready
+    :class:`~repro.train.checkpoint.CheckpointManager`; ``resume`` is a
+    bool (use the checkpoint's latest readable state) or a directory path
+    (which doubles as the checkpoint destination — the ``--resume DIR``
+    CLI contract).  Managers built here write synchronously: estimator
+    state is tiny, and a synchronous save is what makes "killed after the
+    save at iteration N" a well-defined resume point.
+    """
+    if isinstance(resume, (str, os.PathLike)):
+        checkpoint = checkpoint if checkpoint is not None else resume
+        resume = True
+    mgr = None
+    if checkpoint is not None:
+        mgr = checkpoint if isinstance(checkpoint, CheckpointManager) \
+            else CheckpointManager(str(checkpoint), async_save=False)
+    state = None
+    if resume:
+        if mgr is None:
+            raise ValueError(
+                "resume requires a checkpoint directory (checkpoint=DIR or "
+                "resume=DIR) or a CheckpointManager"
+            )
+        latest = mgr.load_latest()
+        if latest is not None:
+            state = EstimatorState.from_arrays(latest[1]["estimator"])
+    return mgr, state
 
 
 def _resolve_backend(backend: str, plan_opts: Mapping[str, Any]) -> str:
@@ -398,6 +469,16 @@ class Counter:
         """k^k / k! / |Aut| — maps colorful map counts to copy estimates."""
         return self.plan.scale
 
+    def _signature_extra(self, *, family=None, k: Optional[int] = None) -> str:
+        """Workload identity for checkpoint/resume safety (call after the
+        plan is built, so the distributed shard count is resolved)."""
+        what = f"family={','.join(family)}|k={k}" if family else self.tree.name
+        extra = (f"{self.graph.name}|V={self.graph.n}|"
+                 f"E={self.graph.num_edges}|{what}|{self.backend}")
+        if self.backend == "distributed":
+            extra += f"|P={self._num_shards}"
+        return extra
+
     # ------------------------------------------------------------- counting
     def estimate(
         self,
@@ -408,6 +489,12 @@ class Counter:
         key: Optional[jax.Array] = None,
         batch: Optional[int] = None,
         progress: bool = False,
+        target_rsd: Optional[float] = None,
+        checkpoint=None,
+        checkpoint_every: int = 0,
+        resume: Union[bool, str] = False,
+        retry: Optional[RetryPolicy] = None,
+        max_retries: Optional[int] = None,
     ) -> CountResult:
         """(eps, delta)-estimate of the copy count — Algorithm 1, any backend.
 
@@ -415,6 +502,17 @@ class Counter:
         when ``eps`` is given (beware: exponential in k); practical runs pass
         an explicit budget and read the empirical RSD, as the paper does.
         ``batch`` colorings are evaluated per backend dispatch (default 8).
+
+        Robustness (DESIGN.md §16): ``checkpoint=DIR`` +
+        ``checkpoint_every=N`` persist the estimator state every N
+        iterations; ``resume=True`` (or ``resume=DIR``) continues a killed
+        run from the latest readable checkpoint and returns the *same*
+        result an uninterrupted run produces — progress, RSD, and the
+        ``target_rsd`` early stop all start from the restored group sums,
+        not from zero.  ``max_retries``/``retry`` supervise the backend:
+        transient sample faults retry with backoff, corrupt payloads
+        (NaN/Inf/negative) hard-fault, and persistently failing batches are
+        quarantined and reported on the result.
         """
         if n_iter is None:
             if eps is None:
@@ -423,9 +521,14 @@ class Counter:
         if key is None:
             key = jax.random.key(0)
         b = batch or min(8, n_iter)
+        sample = self.sample_fn  # builds the plan (and resolves shards)
+        mgr, state = _resolve_checkpointing(checkpoint, resume)
         t0 = time.perf_counter()
         est = estimate_counts(
-            self.sample_fn, n_iter, key, delta=delta, batch=b, progress=progress
+            sample, n_iter, key, delta=delta, batch=b, progress=progress,
+            retry=_retry_policy(retry, max_retries), checkpoint=mgr,
+            checkpoint_every=checkpoint_every, resume=state,
+            target_rsd=target_rsd, signature_extra=self._signature_extra(),
         )
         elapsed = time.perf_counter() - t0
         return CountResult(
@@ -440,6 +543,8 @@ class Counter:
             delta=delta,
             eps=eps,
             elapsed_s=elapsed,
+            quarantined=est.quarantined,
+            resumed_from=est.resumed_from,
         )
 
     def count_one(self, key: jax.Array) -> float:
@@ -524,6 +629,12 @@ class Counter:
         key: Optional[jax.Array] = None,
         batch: Optional[int] = None,
         progress: bool = False,
+        target_rsd: Optional[float] = None,
+        checkpoint=None,
+        checkpoint_every: int = 0,
+        resume: Union[bool, str] = False,
+        retry: Optional[RetryPolicy] = None,
+        max_retries: Optional[int] = None,
     ) -> MultiCountResult:
         """(eps, delta)-estimates for a whole template family in one pass.
 
@@ -538,6 +649,11 @@ class Counter:
         scalar path.  With the same ``key``, a per-template ``estimate`` on
         a Counter built with ``n_colors=k`` sees the identical colorings —
         the two agree sample for sample (the family-parity invariant).
+
+        The robustness keywords (checkpoint/resume/retry/target_rsd) behave
+        exactly as on :meth:`estimate`; the checkpointed state banks the
+        full ``[iter, T]`` sample matrix, and ``target_rsd`` gates on the
+        worst template.
         """
         st = self._family(templates)
         plan = st["plan"]
@@ -556,14 +672,19 @@ class Counter:
         chain_tables = sum(
             len(partition_tree(t).nodes) for t in plan.templates
         )
-        t0 = time.perf_counter()
-        est = estimate_counts_many(
-            st["sample_fn"], n_iter, key, delta=delta, batch=b, progress=progress
-        )
-        elapsed = time.perf_counter() - t0
         names = tuple(
             t.name or f"tree{i}" for i, t in enumerate(plan.templates)
         )
+        mgr, state = _resolve_checkpointing(checkpoint, resume)
+        t0 = time.perf_counter()
+        est = estimate_counts_many(
+            st["sample_fn"], n_iter, key, delta=delta, batch=b,
+            progress=progress, retry=_retry_policy(retry, max_retries),
+            checkpoint=mgr, checkpoint_every=checkpoint_every, resume=state,
+            target_rsd=target_rsd,
+            signature_extra=self._signature_extra(family=names, k=plan.k),
+        )
+        elapsed = time.perf_counter() - t0
         return MultiCountResult(
             templates=names,
             estimates=est.estimates,
@@ -579,6 +700,8 @@ class Counter:
             delta=delta,
             eps=eps,
             elapsed_s=elapsed,
+            quarantined=est.quarantined,
+            resumed_from=est.resumed_from,
         )
 
     def count_coloring_many(self, templates, coloring: np.ndarray) -> np.ndarray:
@@ -641,10 +764,21 @@ def run(
     *,
     key: Optional[jax.Array] = None,
     progress: bool = False,
+    checkpoint=None,
+    resume: Union[bool, str] = False,
 ) -> CountResult:
-    """One-shot: resolve a :class:`CountRequest` and run its estimate."""
+    """One-shot: resolve a :class:`CountRequest` and run its estimate.
+
+    The request's robustness spec (``max_retries``, ``checkpoint_every``,
+    ``target_rsd``) applies; ``checkpoint``/``resume`` name where the state
+    lives, since a directory is a property of the invocation, not of the
+    workload.
+    """
     counter = Counter.from_request(request)
     return counter.estimate(
         request.n_iter, eps=request.eps, delta=request.delta, key=key,
         batch=request.batch, progress=progress,
+        max_retries=request.max_retries, target_rsd=request.target_rsd,
+        checkpoint=checkpoint, checkpoint_every=request.checkpoint_every,
+        resume=resume,
     )

@@ -39,6 +39,13 @@ class CountingConfig:
     #: unrolled grouped exchange; 'flat' — graph over all chips with the
     #: O(1)-HLO relay ring (the beyond-paper mode for big-V datasets)
     mesh_kind: str = "grid"
+    #: robustness spec (DESIGN.md §16): bounded retry of transient sample
+    #: faults (None disables supervision), checkpoint cadence in colorings
+    #: (0 = only a final checkpoint when a directory is given at run time),
+    #: and optional early stop at a target relative standard error
+    max_retries: int | None = None
+    checkpoint_every: int = 0
+    target_rsd: float | None = None
 
     @property
     def avg_degree(self) -> float:
@@ -77,6 +84,9 @@ class CountingConfig:
             eps=eps,
             delta=delta,
             batch=batch,
+            max_retries=self.max_retries,
+            checkpoint_every=self.checkpoint_every,
+            target_rsd=self.target_rsd,
             plan_opts={
                 "num_shards": self.num_shards,
                 "mode": self.mode,

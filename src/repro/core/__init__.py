@@ -31,6 +31,7 @@ from .templates import (  # noqa: F401
 )
 from .graphs import (  # noqa: F401
     Graph,
+    GraphFormatError,
     erdos_renyi,
     from_edges,
     load_edge_file,
@@ -59,9 +60,17 @@ from .count_engine import (  # noqa: F401
 )
 from .estimator import (  # noqa: F401
     CountEstimate,
+    EstimationAborted,
+    EstimatorState,
     MultiCountEstimate,
+    ResumeMismatchError,
     estimate_counts,
     estimate_counts_many,
     niter_bound,
     num_groups_for,
+)
+from .supervisor import (  # noqa: F401
+    QuarantinedBatch,
+    RetryPolicy,
+    Supervisor,
 )

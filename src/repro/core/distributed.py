@@ -95,6 +95,7 @@ from repro.comm import (
 )
 from repro.compat import pvary_like, shard_map
 from repro.kernels import ops
+from repro.testing import faults
 from .count_engine import copy_scale
 from .frontier import (
     DEFAULT_CAPACITY_FACTOR,
@@ -912,7 +913,9 @@ def make_count_fn(
 
         def run(data):
             res, bad = fj(data)
-            if int(np.asarray(bad).sum()) == 0:
+            # fault site: force the overflow storm onto the dense twin
+            forced = faults.fire("compaction.overflow") is not None
+            if not forced and int(np.asarray(bad).sum()) == 0:
                 return res
             fd = dense_state.get("fn")
             if fd is None:

@@ -26,6 +26,7 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "GraphFormatError",
     "from_edges",
     "erdos_renyi",
     "rmat",
@@ -39,6 +40,18 @@ __all__ = [
     "load_npz",
     "RMAT_SKEW",
 ]
+
+
+class GraphFormatError(ValueError):
+    """Malformed graph input, caught at ingestion with a precise message.
+
+    Raised by :func:`load_edge_file` / :func:`load_npz` for non-integer or
+    truncated lines (with the line number), out-of-range vertex ids, and
+    missing/corrupt npz contents — so bad input fails at the door instead
+    of crashing deep inside plan build.  Subclasses ``ValueError``, so
+    pre-existing handlers keep working; pass ``validate=False`` to restore
+    the old lenient behavior (skip unparseable lines, trust the arrays).
+    """
 
 
 @dataclass(frozen=True)
@@ -108,6 +121,7 @@ def load_edge_file(
     comments: Tuple[str, ...] = ("#", "%"),
     zero_indexed: bool = True,
     name: str = "",
+    validate: bool = True,
 ) -> Graph:
     """Load an undirected graph from a whitespace-separated edge-list file.
 
@@ -117,28 +131,69 @@ def load_edge_file(
     skipped, extra columns (weights, timestamps) ignored.  ``n`` defaults to
     ``max vertex id + 1``; ``zero_indexed=False`` shifts 1-based ids down.
     Self loops and duplicate edges are removed by :func:`from_edges`.
+
+    With ``validate=True`` (default) malformed input raises
+    :class:`GraphFormatError` naming the offending line: non-integer
+    tokens, a single-column line (the signature of a truncated download),
+    negative or out-of-range vertex ids.  ``validate=False`` is the escape
+    hatch for dirty-but-known files: bad lines are skipped silently, as the
+    pre-hardening loader did.
     """
     src, dst = [], []
+    lo_bound = 0 if zero_indexed else 1
     with open(path) as fh:
-        for line in fh:
+        for lineno, line in enumerate(fh, 1):
             line = line.strip()
             if not line or line.startswith(comments):
                 continue
             parts = line.split()
             if len(parts) < 2:
+                if validate:
+                    raise GraphFormatError(
+                        f"{path}:{lineno}: expected 'u v', got {line!r} "
+                        f"(truncated file?)"
+                    )
                 continue
-            src.append(int(parts[0]))
-            dst.append(int(parts[1]))
+            try:
+                u, v = int(parts[0]), int(parts[1])
+            except ValueError:
+                if validate:
+                    raise GraphFormatError(
+                        f"{path}:{lineno}: non-integer vertex id in {line!r}"
+                    ) from None
+                continue
+            if validate:
+                if u < lo_bound or v < lo_bound:
+                    raise GraphFormatError(
+                        f"{path}:{lineno}: vertex id {min(u, v)} below "
+                        f"{lo_bound} (zero_indexed={zero_indexed} wrong?)"
+                    )
+                if n is not None and max(u, v) - (0 if zero_indexed else 1) >= n:
+                    raise GraphFormatError(
+                        f"{path}:{lineno}: vertex id {max(u, v)} out of "
+                        f"range for n={n}"
+                    )
+            src.append(u)
+            dst.append(v)
     edges = np.array([src, dst], np.int64).T.reshape(-1, 2)
     if not zero_indexed and edges.size:
         edges -= 1
+    if validate and edges.size == 0:
+        raise GraphFormatError(
+            f"{path}: no edges found (empty, truncated, or fully-commented "
+            f"file) — pass validate=False if an empty graph is intended"
+        )
     if edges.size and edges.min() < 0:
-        raise ValueError(f"negative vertex id in {path} (zero_indexed wrong?)")
+        raise GraphFormatError(
+            f"negative vertex id in {path} (zero_indexed wrong?)"
+        )
     n_found = int(edges.max(initial=-1)) + 1
     if n is None:
         n = n_found
     elif n < n_found:
-        raise ValueError(f"n={n} smaller than max vertex id + 1 = {n_found}")
+        raise GraphFormatError(
+            f"n={n} smaller than max vertex id + 1 = {n_found}"
+        )
     return from_edges(n, edges, name or os.path.basename(path))
 
 
@@ -155,15 +210,60 @@ def save_npz(g: Graph, path: str) -> None:
     )
 
 
-def load_npz(path: str) -> Graph:
-    """Load a graph previously written by :func:`save_npz`."""
-    with np.load(path, allow_pickle=False) as z:
-        return Graph(
-            n=int(z["n"]),
-            indptr=z["indptr"].astype(np.int64),
-            indices=z["indices"].astype(np.int32),
-            name=str(z["name"]) if "name" in z else "",
-        )
+def load_npz(path: str, *, validate: bool = True) -> Graph:
+    """Load a graph previously written by :func:`save_npz`.
+
+    With ``validate=True`` (default) a file that is not a ``save_npz``
+    graph fails with :class:`GraphFormatError` naming what's wrong — a
+    missing key, a truncated/corrupt archive, an ``indptr`` that doesn't
+    match ``indices``, or out-of-range vertex ids — instead of crashing
+    deep in plan build.  ``validate=False`` trusts the arrays.
+    """
+    try:
+        z = np.load(path, allow_pickle=False)
+    except Exception as e:  # zipfile.BadZipFile, OSError, ...
+        raise GraphFormatError(
+            f"{path}: not a readable npz archive (truncated or corrupt? "
+            f"{type(e).__name__}: {e})"
+        ) from e
+    with z:
+        for k in ("n", "indptr", "indices"):
+            if k not in z:
+                raise GraphFormatError(
+                    f"{path}: missing npz key {k!r} — not a save_npz graph?"
+                )
+        try:
+            n = int(z["n"])
+            indptr = z["indptr"].astype(np.int64)
+            indices = z["indices"].astype(np.int32)
+            graph_name = str(z["name"]) if "name" in z else ""
+        except Exception as e:
+            raise GraphFormatError(
+                f"{path}: unreadable npz member (truncated archive? "
+                f"{type(e).__name__}: {e})"
+            ) from e
+    if validate:
+        if n < 0:
+            raise GraphFormatError(f"{path}: negative vertex count n={n}")
+        if indptr.shape != (n + 1,):
+            raise GraphFormatError(
+                f"{path}: indptr has shape {indptr.shape}, expected "
+                f"({n + 1},) for n={n}"
+            )
+        if indptr.size and (indptr[0] != 0 or indptr[-1] != indices.shape[0]):
+            raise GraphFormatError(
+                f"{path}: indptr spans [{int(indptr[0])}, {int(indptr[-1])}] "
+                f"but indices has {indices.shape[0]} entries (truncated "
+                f"arrays?)"
+            )
+        if np.any(np.diff(indptr) < 0):
+            raise GraphFormatError(f"{path}: indptr is not nondecreasing")
+        if indices.size and (indices.min() < 0 or indices.max() >= n):
+            raise GraphFormatError(
+                f"{path}: vertex id {int(indices.max())} out of range "
+                f"[0, {n})"
+            )
+    return Graph(n=n, indptr=indptr, indices=indices, name=graph_name)
 
 
 def erdos_renyi(n: int, avg_degree: float, seed: int = 0, name: str = "") -> Graph:

@@ -1,0 +1,221 @@
+"""Supervision layer for the ``sample_fn(key, batch)`` backend protocol.
+
+Long estimates on real clusters see flaky shards: a batch dispatch can
+raise (preempted worker, OOM, transport error), hang, or return garbage.
+The estimator's contract with its backends is exactly one function, so one
+wrapper hardens every backend at once: :class:`Supervisor` wraps any
+``sample_fn`` with
+
+* a **per-attempt timeout** (the attempt runs on a worker thread; a hung
+  dispatch surfaces as :class:`SampleTimeout` instead of wedging the run);
+* **bounded retry with exponential backoff** for transient faults
+  (exceptions, timeouts) — the retried attempt re-uses the *same* PRNG key,
+  so a retry that succeeds is bit-identical to a first try that succeeded;
+* **payload validation**: per-coloring copy estimates are nonnegative and
+  finite *by construction* (they are scaled colorful-map counts), so a
+  NaN/Inf or negative entry is data corruption, not noise — a **hard
+  fault** that is never retried;
+* **graceful degradation**: a batch that keeps failing (or hard-faults) is
+  *quarantined* — recorded as a :class:`QuarantinedBatch` and excluded from
+  the estimate — rather than silently dropped or allowed to kill the run.
+  The estimator surfaces the quarantine records in ``CountResult``.
+
+Failure taxonomy and which layer handles what: DESIGN.md §16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.testing import faults
+
+__all__ = [
+    "RetryPolicy",
+    "SampleFault",
+    "SampleTimeout",
+    "SampleValidationError",
+    "QuarantinedBatch",
+    "Supervisor",
+    "key_fingerprint",
+]
+
+
+class SampleFault(RuntimeError):
+    """A supervised sample attempt failed."""
+
+
+class SampleTimeout(SampleFault):
+    """An attempt exceeded the policy's per-batch timeout (transient)."""
+
+
+class SampleValidationError(SampleFault):
+    """The returned payload violates the protocol invariants (hard fault).
+
+    Copy estimates are nonnegative finite floats by construction; NaN/Inf
+    or negative entries mean the backend computed garbage — retrying the
+    same deterministic computation would return the same garbage, so the
+    batch is quarantined immediately.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for transient sample faults.
+
+    ``max_retries`` counts *re*-tries: a batch gets ``1 + max_retries``
+    attempts before quarantine.  ``timeout_s=None`` disables the worker
+    thread entirely (attempts run inline — zero overhead, no timeout).
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.05  # first retry delay
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 2.0
+    timeout_s: Optional[float] = None  # per-attempt wall clock
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantinedBatch:
+    """Provenance of one excluded batch: which keys, why, how hard we tried."""
+
+    call_index: int  # index into the run's pre-split key sequence
+    key_data: Tuple[int, ...]  # PRNG key words (uint32) — replayable
+    reason: str
+    attempts: int
+
+    def __str__(self) -> str:
+        return (
+            f"batch #{self.call_index} quarantined after {self.attempts} "
+            f"attempt(s): {self.reason}"
+        )
+
+
+def key_fingerprint(key: jax.Array) -> Tuple[int, ...]:
+    """The raw uint32 words of a PRNG key — a replayable, hashable id."""
+    if hasattr(key, "dtype") and jax.numpy.issubdtype(
+        key.dtype, jax.dtypes.prng_key
+    ):
+        key = jax.random.key_data(key)
+    data = np.asarray(key, np.uint32).reshape(-1)
+    return tuple(int(w) for w in data)
+
+
+class Supervisor:
+    """Wrap a ``sample_fn`` with retry, timeout, validation, quarantine.
+
+    The wrapped object speaks a superset of the protocol:
+    ``supervisor(key, batch, call_index=i)`` returns the float64 samples on
+    success, or the :class:`QuarantinedBatch` record when the batch was
+    given up on.  All quarantine records also accumulate on
+    :attr:`quarantined`.  ``sleep`` is injectable so tests retry without
+    real waiting.
+    """
+
+    def __init__(
+        self,
+        sample_fn: Callable[[jax.Array, int], np.ndarray],
+        policy: Optional[RetryPolicy] = None,
+        *,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.fn = sample_fn
+        self.policy = policy or RetryPolicy()
+        self.quarantined: List[QuarantinedBatch] = []
+        self._sleep = sleep
+
+    # ---------------------------------------------------------- one attempt
+    def _raw_attempt(self, key: jax.Array, batch: int) -> np.ndarray:
+        spec = faults.fire("sample.raise")
+        if spec is not None:
+            raise faults.InjectedFault("injected sample failure")
+        spec = faults.fire("sample.timeout")
+        if spec is not None:
+            t = self.policy.timeout_s
+            time.sleep(spec.payload if spec.payload is not None
+                       else (4.0 * t if t else 0.5))
+        out = np.asarray(self.fn(key, batch), np.float64)
+        spec = faults.fire("sample.nan")
+        if spec is not None:
+            out = out.copy()
+            out.reshape(-1)[0] = np.nan
+        spec = faults.fire("sample.negative")
+        if spec is not None:
+            out = out.copy()
+            out.reshape(-1)[0] = -1.0
+        return out
+
+    def _timed_attempt(self, key: jax.Array, batch: int) -> np.ndarray:
+        t = self.policy.timeout_s
+        if t is None:
+            return self._raw_attempt(key, batch)
+        box: dict = {}
+
+        def work():
+            try:
+                box["out"] = self._raw_attempt(key, batch)
+            except BaseException as e:  # propagated below
+                box["err"] = e
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        th.join(t)
+        if th.is_alive():
+            # the attempt's thread lingers until its dispatch returns (python
+            # threads are not killable); the *run* moves on and retries
+            raise SampleTimeout(f"sample batch exceeded the {t}s timeout")
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    @staticmethod
+    def _validate(out: np.ndarray, batch: int) -> None:
+        if out.ndim < 1 or out.shape[0] != batch:
+            raise SampleValidationError(
+                f"payload shape {out.shape} does not lead with batch={batch}"
+            )
+        if not np.all(np.isfinite(out)):
+            raise SampleValidationError("non-finite (NaN/Inf) sample payload")
+        if np.any(out < 0):
+            raise SampleValidationError(
+                "negative copy estimate — counts are nonnegative by "
+                "construction, so this is data corruption, not noise"
+            )
+
+    # ------------------------------------------------------------- the loop
+    def __call__(
+        self, key: jax.Array, batch: int, call_index: int = 0
+    ) -> Union[np.ndarray, QuarantinedBatch]:
+        delay = self.policy.backoff_s
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                out = self._timed_attempt(key, batch)
+                self._validate(out, batch)
+                return out
+            except SampleValidationError as e:
+                reason = str(e)  # hard fault: never retried
+                break
+            except Exception as e:
+                reason = f"{type(e).__name__}: {e}"
+                if attempts > self.policy.max_retries:
+                    break
+                self._sleep(delay)
+                delay = min(
+                    delay * self.policy.backoff_factor,
+                    self.policy.max_backoff_s,
+                )
+        record = QuarantinedBatch(
+            call_index=call_index,
+            key_data=key_fingerprint(key),
+            reason=reason,
+            attempts=attempts,
+        )
+        self.quarantined.append(record)
+        return record

@@ -59,6 +59,15 @@ def _plan_report(plan):
     print(f"compaction caps: {caps if caps else 'none engaged'}")
 
 
+def _robust_report(res):
+    """Recovery provenance: what was restored, what was given up on."""
+    if res.resumed_from:
+        print(f"resumed: {res.resumed_from} colorings restored from "
+              f"checkpoint (progress/RSD include them)")
+    for q in res.quarantined:
+        print(f"quarantined: {q}")
+
+
 def _report(label, shards, res, dt, ran):
     # the timer covers every coloring that actually executed (the last
     # batched dispatch may overshoot --iters); the statistics use --iters
@@ -110,10 +119,37 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=None,
                     help="capacity headroom over the probed active maximum "
                          "before the dense overflow fallback")
+    # robustness (DESIGN.md §16): estimator state survives kills and flaky
+    # shards; a killed run resumed via --resume returns the bit-identical
+    # estimate an uninterrupted run produces
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="persist estimator state (atomic, checksummed) "
+                         "under DIR every --checkpoint-every colorings")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from the latest readable checkpoint in DIR "
+                         "(implies --checkpoint-dir DIR); bit-exact vs an "
+                         "uninterrupted run with the same seed")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in colorings (default: every "
+                         "batch when a checkpoint dir is set)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="supervise the sample pipeline: retry transient "
+                         "per-batch faults up to N times with backoff, then "
+                         "quarantine the batch and report it")
+    ap.add_argument("--target-rsd", type=float, default=None,
+                    help="stop early once the running relative standard "
+                         "error of the mean reaches this (resume-aware)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.batch < 1:
         ap.error(f"--batch must be >= 1 (got {args.batch})")
+    ckpt_dir = args.resume or args.checkpoint_dir
+    ckpt_every = args.checkpoint_every or (args.batch if ckpt_dir else 0)
+    robust_kw = dict(
+        checkpoint=ckpt_dir, checkpoint_every=ckpt_every,
+        resume=bool(args.resume), max_retries=args.max_retries,
+        target_rsd=args.target_rsd,
+    )
 
     ccfg = COUNTING_CONFIGS[args.config]
     if args.graph:
@@ -171,9 +207,10 @@ def main():
         t0 = time.perf_counter()
         res = counter.estimate_many(
             family, n_iter=request.n_iter, delta=request.delta, key=key,
-            batch=request.batch,
+            batch=request.batch, **robust_kw,
         )
         dt = time.perf_counter() - t0
+        _robust_report(res)
         print(f"mode={label} shards={shards}: family of {len(res)} templates, "
               f"k={res.k}, {res.unique_tables} unique tables "
               f"(vs {res.chain_tables} chain nodes), {ran} colorings in "
@@ -199,9 +236,11 @@ def main():
     counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
     res = counter.estimate(
-        n_iter=request.n_iter, delta=request.delta, key=key, batch=request.batch
+        n_iter=request.n_iter, delta=request.delta, key=key,
+        batch=request.batch, **robust_kw,
     )
     dt = time.perf_counter() - t0
+    _robust_report(res)
     _report(label, shards, res, dt, ran)
 
 

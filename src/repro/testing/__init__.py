@@ -1,0 +1,10 @@
+"""Test-support layer: deterministic fault injection (``repro.testing.faults``).
+
+Nothing in here runs unless a test (or an operator debugging a recovery
+path) explicitly activates it; the hooks compiled into the product code
+are a single ``is None`` check when inactive.
+"""
+
+from . import faults  # noqa: F401
+
+__all__ = ["faults"]

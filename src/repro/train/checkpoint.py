@@ -26,10 +26,12 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.testing import faults
 
 __all__ = ["CheckpointManager"]
 
@@ -50,6 +52,9 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        #: the step load_latest()/restore() last read: keep-pruning never
+        #: deletes the checkpoint a live run was restored from
+        self._protected: Optional[int] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- save
@@ -66,10 +71,9 @@ class CheckpointManager:
             self._write(step, host)
 
     def _write(self, step: int, host: Dict[str, Dict[str, np.ndarray]]):
+        self._gc_tmp()  # crash residue from a previously killed writer
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
         final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
         os.makedirs(tmp)
         manifest = {"step": step, "time": time.time(), "trees": {}}
         for name, flat in host.items():
@@ -82,6 +86,13 @@ class CheckpointManager:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        spec = faults.fire("checkpoint.write_crash")
+        if spec is not None:
+            # simulate a kill between the tmp write and the atomic rename:
+            # the .tmp dir stays behind, the previous checkpoint stays latest
+            raise faults.InjectedCrash(
+                f"injected writer kill before renaming {tmp}"
+            )
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -90,7 +101,21 @@ class CheckpointManager:
     def _gc(self):
         steps = self.all_steps()
         for s in steps[: -self.keep]:
+            if s == self._protected:
+                continue  # never delete the checkpoint a run restored from
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def _gc_tmp(self):
+        """Remove ``step_*.tmp`` residue left by a killed writer.
+
+        Only called with no writer thread in flight (save() joins the
+        previous writer first; load_latest() waits too), so any tmp dir on
+        disk is from a dead process and can never become a valid
+        checkpoint — its rename never happened.
+        """
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
@@ -109,6 +134,57 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _try_load(self, step: int) -> Optional[Dict[str, Dict[str, np.ndarray]]]:
+        """Load one checkpoint as raw flat arrays; ``None`` if unreadable.
+
+        Verifies every tree file against the manifest's sha256 — a
+        truncated npz, a flipped bit, or a missing file all read as "this
+        checkpoint does not exist", never as wrong data.
+        """
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(base, "manifest.json")) as f:
+                manifest = json.load(f)
+            out: Dict[str, Dict[str, np.ndarray]] = {}
+            for name, meta in manifest["trees"].items():
+                path = os.path.join(base, meta["file"])
+                with open(path, "rb") as f:
+                    digest = hashlib.sha256(f.read()).hexdigest()
+                if digest != meta["sha256"]:
+                    raise IOError(f"checksum mismatch for {name}")
+                with np.load(path, allow_pickle=False) as z:
+                    out[name] = {k: np.asarray(z[k]) for k in z.files}
+            return out
+        except Exception as e:  # corrupt/partial: caller falls back a step
+            print(f"checkpoint: skipping unreadable step {step} "
+                  f"({type(e).__name__}: {e})")
+            return None
+
+    def load_latest(
+        self,
+    ) -> Optional[Tuple[int, Dict[str, Dict[str, np.ndarray]]]]:
+        """``(step, {tree: {leaf: array}})`` of the newest *readable*
+        checkpoint, or ``None`` when the directory holds none.
+
+        Walks steps newest-first, garbage-collecting ``step_*.tmp`` crash
+        residue and skipping any checkpoint whose manifest is missing or
+        whose sha256s don't verify — a run killed mid-save (or a partially
+        synced directory) resumes from the last *good* state instead of
+        crashing or reading garbage.  Arrays come back raw (no shape
+        templates needed — the schema lives with the caller, e.g.
+        ``EstimatorState.from_arrays``); use :meth:`restore` when re-sharding
+        pytrees onto a mesh.  The returned step is protected from
+        ``keep``-pruning for this manager's lifetime.
+        """
+        self.wait()
+        self._gc_tmp()
+        for step in reversed(self.all_steps()):
+            data = self._try_load(step)
+            if data is not None:
+                self._protected = step
+                return step, data
+        return None
+
     def restore(
         self,
         step: int,
@@ -124,6 +200,7 @@ class CheckpointManager:
         mesh than the one that saved.
         """
         base = os.path.join(self.dir, f"step_{step:08d}")
+        self._protected = step  # keep-pruning must not delete it mid-restore
         with open(os.path.join(base, "manifest.json")) as f:
             manifest = json.load(f)
         out = {}

@@ -549,6 +549,74 @@ def test_elastic_restore():
               f"devices={got['w'].sharding.num_devices}")
 
 
+def test_robustness():
+    """Kill-and-resume over 8 real shards (DESIGN.md §16).
+
+    The resume invariant must hold when the sample stream crosses the full
+    shard_map/exchange machinery: a run killed right after a mid-run
+    checkpoint and resumed from the directory reproduces the uninterrupted
+    run's samples and estimate bit for bit; a supervised run with a
+    persistently failing batch quarantines it and keeps the healthy
+    samples identical to the clean run's.
+    """
+    import tempfile
+
+    from repro.api import Counter
+    from repro.core import erdos_renyi
+    from repro.core.estimator import estimate_counts
+    from repro.core.supervisor import RetryPolicy, Supervisor
+    from repro.core.templates import path_tree
+    from repro.testing import faults
+
+    g = erdos_renyi(97, 5.0, seed=7)  # ragged shard sizes on purpose
+    tree = path_tree(3)
+    key = jax.random.key(17)
+
+    def counter():
+        return Counter.from_graph(
+            g, tree, backend="distributed", num_shards=8, mode="pipeline"
+        )
+
+    base = counter().estimate(n_iter=12, key=key, batch=4)
+
+    with tempfile.TemporaryDirectory() as d:
+        with faults.active(faults.inject("estimator.kill", at=(0,))):
+            try:
+                counter().estimate(n_iter=12, key=key, batch=4,
+                                   checkpoint=d, checkpoint_every=4)
+                crashed = False
+            except faults.InjectedCrash:
+                crashed = True
+        check("robust_kill_fired_P8", crashed)
+        res = counter().estimate(n_iter=12, key=key, batch=4, resume=d)
+        check(
+            "robust_resume_bitexact_P8",
+            res.resumed_from == 4
+            and np.array_equal(res.samples, base.samples)
+            and res.estimate == base.estimate
+            and res.relative_sd == base.relative_sd,
+            f"resumed_from={res.resumed_from} "
+            f"est {res.estimate} want {base.estimate}",
+        )
+
+    # supervised 8-shard pipeline: batch 1 fails every attempt (occurrences
+    # count attempts: batch 0 is 0, batch 1's three tries are 1-3)
+    sup = Supervisor(counter().sample_fn, RetryPolicy(max_retries=2),
+                     sleep=lambda _: None)
+    with faults.active(faults.inject("sample.raise", at=(1, 2, 3))):
+        est = estimate_counts(sup, 12, key, batch=4)
+    healthy = np.concatenate([base.samples[:4], base.samples[8:]])
+    check(
+        "robust_quarantine_P8",
+        len(est.quarantined) == 1
+        and est.quarantined[0].call_index == 1
+        and est.quarantined[0].attempts == 3
+        and est.niter == 8
+        and np.array_equal(est.samples, healthy),
+        f"quarantined={[str(q) for q in est.quarantined]} niter={est.niter}",
+    )
+
+
 def main():
     test_ring_collectives()
     test_grouped_exchange()
@@ -557,6 +625,7 @@ def main():
     test_unified_api()
     test_multi_template()
     test_compaction()
+    test_robustness()
     test_moe_manual_vs_dense()
     test_elastic_restore()
     if FAILURES:

@@ -1,0 +1,592 @@
+"""Resumable, fault-tolerant estimation (DESIGN.md §16).
+
+The contract under test: a killed estimate resumed from its checkpoint
+returns the **bit-identical** result an uninterrupted run produces — at
+every checkpoint boundary, on both backends, under compaction, and even
+when the kill lands *inside* a checkpoint write.  Around it: the
+supervisor's retry/validate/quarantine taxonomy, the checkpoint manager's
+corrupt-skip and crash-residue handling, and the hardened graph loaders.
+
+Every failure here is *injected deterministically* via
+``repro.testing.faults`` — no timing races, no monkeypatched internals.
+The real 8-shard distributed variants run in ``tests/_dist_worker.py``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import Counter
+from repro.core import erdos_renyi, load_edge_file, load_npz, rmat, save_npz
+from repro.core.estimator import (
+    EstimationAborted,
+    EstimatorState,
+    ResumeMismatchError,
+    estimate_counts,
+    num_groups_for,
+)
+from repro.core.graphs import GraphFormatError
+from repro.core.supervisor import (
+    QuarantinedBatch,
+    RetryPolicy,
+    SampleValidationError,
+    Supervisor,
+    key_fingerprint,
+)
+from repro.core.templates import path_tree, template
+from repro.testing import faults
+from repro.train.checkpoint import CheckpointManager
+
+
+def _noop_sleep(_):
+    pass
+
+
+def _mgr(tmp_path, sub="ckpt"):
+    return CheckpointManager(str(tmp_path / sub), async_save=False)
+
+
+@pytest.fixture
+def force_floors(monkeypatch):
+    import repro.core.frontier as frontier
+
+    monkeypatch.setattr(frontier, "MIN_COMBINE_ELEMENTS", 1)
+    monkeypatch.setattr(frontier, "MIN_TABLE_WIDTH", 1)
+
+
+# --------------------------------------------------------------------------
+# kill-and-resume determinism
+# --------------------------------------------------------------------------
+
+BACKENDS = [
+    ("single", {}),
+    ("distributed", {"num_shards": 1, "mode": "pipeline"}),
+]
+
+
+class TestResumeDeterminism:
+    """Bit-exact resume: the tentpole invariant, at every boundary."""
+
+    def _counter(self, backend, opts, **extra):
+        g = erdos_renyi(40, 4.0, seed=5)
+        return Counter.from_graph(g, path_tree(3), backend=backend,
+                                  **opts, **extra)
+
+    @pytest.mark.parametrize("backend,opts", BACKENDS)
+    def test_kill_and_resume_every_boundary(self, backend, opts, tmp_path):
+        """n_iter=12 / batch=4 => 3 calls, mid-run checkpoints after calls
+        1 and 2.  Kill after each and resume: samples, estimate, and RSD
+        must equal the uninterrupted run exactly (==, not approx)."""
+        key = jax.random.key(0)
+        base = self._counter(backend, opts).estimate(
+            n_iter=12, key=key, batch=4
+        )
+        for kill_at in (0, 1):
+            d = tmp_path / f"{backend}-{kill_at}"
+            c = self._counter(backend, opts)
+            with faults.active(faults.inject("estimator.kill", at=(kill_at,))):
+                with pytest.raises(faults.InjectedCrash):
+                    c.estimate(n_iter=12, key=key, batch=4,
+                               checkpoint=str(d), checkpoint_every=4)
+            res = self._counter(backend, opts).estimate(
+                n_iter=12, key=key, batch=4, resume=str(d)
+            )
+            assert res.resumed_from == 4 * (kill_at + 1)
+            np.testing.assert_array_equal(res.samples, base.samples)
+            assert res.estimate == base.estimate
+            assert res.mean == base.mean
+            assert res.relative_sd == base.relative_sd
+            assert res.quarantined == ()
+
+    @pytest.mark.parametrize("backend,opts", BACKENDS)
+    def test_kill_inside_checkpoint_write(self, backend, opts, tmp_path):
+        """The worst kill: inside ``_write``, after the tmp dir is full but
+        before the atomic rename.  The ``step_*.tmp`` residue must be
+        skipped/GCed and the run resumes from the last *renamed* step."""
+        key = jax.random.key(1)
+        base = self._counter(backend, opts).estimate(
+            n_iter=12, key=key, batch=4
+        )
+        d = tmp_path / "midwrite"
+        c = self._counter(backend, opts)
+        # second checkpoint write (occurrence 1) dies mid-save: step 1 is
+        # the newest *renamed* checkpoint, step 2 exists only as .tmp
+        with faults.active(faults.inject("checkpoint.write_crash", at=(1,))):
+            with pytest.raises(faults.InjectedCrash):
+                c.estimate(n_iter=12, key=key, batch=4,
+                           checkpoint=str(d), checkpoint_every=4)
+        left = sorted(os.listdir(d))
+        assert "step_00000001" in left
+        assert any(name.endswith(".tmp") for name in left)
+        res = self._counter(backend, opts).estimate(
+            n_iter=12, key=key, batch=4, resume=str(d)
+        )
+        assert res.resumed_from == 4  # resumed from step 1, not the tmp
+        np.testing.assert_array_equal(res.samples, base.samples)
+        assert res.estimate == base.estimate
+        # the residue is gone after load_latest's GC
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+    def test_resume_under_compaction(self, tmp_path, force_floors):
+        """Resume composes with §15 compaction, including a forced overflow
+        storm on the resumed leg (every compact dispatch re-runs its dense
+        twin) — compaction is a layout choice, so the estimate is still
+        bit-identical."""
+        g = rmat(256, 700, skew=8, seed=2)
+        opts = dict(compact=True, density_threshold=0.7)
+        key = jax.random.key(2)
+        base = Counter.from_graph(g, template("u5-2"), backend="single",
+                                  **opts).estimate(n_iter=8, key=key, batch=4)
+        d = tmp_path / "compact"
+        c = Counter.from_graph(g, template("u5-2"), backend="single", **opts)
+        with faults.active(faults.inject("estimator.kill", at=(0,))):
+            with pytest.raises(faults.InjectedCrash):
+                c.estimate(n_iter=8, key=key, batch=4,
+                           checkpoint=str(d), checkpoint_every=4)
+        c2 = Counter.from_graph(g, template("u5-2"), backend="single", **opts)
+        with faults.active(
+            faults.inject("compaction.overflow", at=None)
+        ) as plan:
+            res = c2.estimate(n_iter=8, key=key, batch=4, resume=str(d))
+            assert plan.fired  # the storm actually hit the fallback path
+        assert res.resumed_from == 4
+        np.testing.assert_array_equal(res.samples, base.samples)
+        assert res.estimate == base.estimate
+
+    def test_resume_family(self, tmp_path):
+        """estimate_many banks the full [iter, T] matrix; resume is
+        bit-exact per template."""
+        g = erdos_renyi(40, 4.0, seed=7)
+        fam = ["u3-1", "u5-2"]
+        key = jax.random.key(3)
+        base = Counter.from_graph(g, "u5-2", backend="single").estimate_many(
+            fam, n_iter=12, key=key, batch=4
+        )
+        d = tmp_path / "family"
+        c = Counter.from_graph(g, "u5-2", backend="single")
+        with faults.active(faults.inject("estimator.kill", at=(1,))):
+            with pytest.raises(faults.InjectedCrash):
+                c.estimate_many(fam, n_iter=12, key=key, batch=4,
+                                checkpoint=str(d), checkpoint_every=4)
+        res = Counter.from_graph(g, "u5-2", backend="single").estimate_many(
+            fam, n_iter=12, key=key, batch=4, resume=str(d)
+        )
+        assert res.resumed_from == 8
+        np.testing.assert_array_equal(res.samples, base.samples)
+        np.testing.assert_array_equal(res.estimates, base.estimates)
+        np.testing.assert_array_equal(res.relative_sds, base.relative_sds)
+
+    def test_completed_run_resumes_as_noop(self, tmp_path):
+        """A finished checkpoint directory restores to a no-op: zero new
+        backend calls, same result."""
+        calls = []
+
+        def fn(key, b):
+            calls.append(1)
+            return np.full(b, 7.0)
+
+        key = jax.random.key(4)
+        mgr = _mgr(tmp_path)
+        est = estimate_counts(fn, 12, key, batch=4, checkpoint=mgr,
+                              checkpoint_every=4)
+        assert len(calls) == 3
+        latest = mgr.load_latest()
+        assert latest is not None and latest[0] == 3
+        state = EstimatorState.from_arrays(latest[1]["estimator"])
+        res = estimate_counts(fn, 12, key, batch=4, resume=state)
+        assert len(calls) == 3  # no new sampling
+        assert res.resumed_from == 12 and res.niter == 12
+        np.testing.assert_array_equal(res.samples, est.samples)
+        assert res.estimate == est.estimate
+
+    def test_resume_signature_mismatch_is_fatal(self, tmp_path):
+        """Splicing two different runs would silently bias the estimate —
+        the signature check makes it a hard error, for every knob that
+        changes the sample stream."""
+        g = erdos_renyi(40, 4.0, seed=5)
+        d = tmp_path / "sig"
+        c = Counter.from_graph(g, path_tree(3), backend="single")
+        c.estimate(n_iter=12, key=jax.random.key(0), batch=4,
+                   checkpoint=str(d), checkpoint_every=4)
+        fresh = Counter.from_graph(g, path_tree(3), backend="single")
+        for kw in (dict(n_iter=16, key=jax.random.key(0), batch=4),
+                   dict(n_iter=12, key=jax.random.key(9), batch=4),
+                   dict(n_iter=12, key=jax.random.key(0), batch=6),
+                   dict(n_iter=12, key=jax.random.key(0), batch=4,
+                        delta=0.05)):
+            with pytest.raises(ResumeMismatchError):
+                fresh.estimate(resume=str(d), **kw)
+        # different template: also fatal (signature_extra carries it)
+        other = Counter.from_graph(g, path_tree(4), backend="single")
+        with pytest.raises(ResumeMismatchError):
+            other.estimate(n_iter=12, key=jax.random.key(0), batch=4,
+                           resume=str(d))
+
+    def test_resume_without_checkpoint_dir_raises(self):
+        g = erdos_renyi(30, 4.0, seed=1)
+        c = Counter.from_graph(g, path_tree(3), backend="single")
+        with pytest.raises(ValueError, match="resume requires"):
+            c.estimate(n_iter=4, key=jax.random.key(0), resume=True)
+
+    def test_early_stop_counts_restored_samples(self, tmp_path):
+        """The ``target_rsd`` early stop (and progress) start from the
+        restored bank, not from zero: a resumed run whose banked samples
+        already satisfy the target makes ZERO new backend calls."""
+        calls = []
+
+        def fn(key, b):
+            calls.append(1)
+            return np.full(b, 7.0)  # constant stream: rse == 0 at n >= 2
+
+        key = jax.random.key(5)
+        mgr = _mgr(tmp_path)
+        with faults.active(faults.inject("estimator.kill", at=(0,))):
+            with pytest.raises(faults.InjectedCrash):
+                estimate_counts(fn, 12, key, batch=4, checkpoint=mgr,
+                                checkpoint_every=4)
+        assert len(calls) == 1
+        state = EstimatorState.from_arrays(mgr.load_latest()[1]["estimator"])
+        assert state.done == 4
+        res = estimate_counts(fn, 12, key, batch=4, resume=state,
+                              target_rsd=0.5)
+        assert len(calls) == 1  # banked samples alone met the target
+        assert res.niter == 4 and res.resumed_from == 4
+        assert res.mean == 7.0
+
+
+# --------------------------------------------------------------------------
+# supervisor: retry / validate / quarantine
+# --------------------------------------------------------------------------
+
+
+class TestSupervisor:
+    def _fn(self, value=3.0):
+        def fn(key, b):
+            return np.full(b, value)
+
+        return fn
+
+    def test_transient_fault_retried_same_key(self):
+        """A raise on the first attempt retries with the SAME key, so the
+        eventual success is bit-identical to a clean first try."""
+        seen = []
+
+        def fn(key, b):
+            seen.append(key_fingerprint(key))
+            return np.full(b, 3.0)
+
+        sup = Supervisor(fn, RetryPolicy(max_retries=2), sleep=_noop_sleep)
+        key = jax.random.key(0)
+        with faults.active(faults.inject("sample.raise", at=(0,))):
+            out = sup(key, 4)
+        assert isinstance(out, np.ndarray)
+        np.testing.assert_array_equal(out, np.full(4, 3.0))
+        assert sup.quarantined == []
+        assert len(seen) == 1  # the faulted attempt raised before fn ran
+
+    def test_persistent_fault_quarantines_with_bounded_attempts(self):
+        sleeps = []
+        sup = Supervisor(
+            self._fn(), RetryPolicy(max_retries=2, backoff_s=0.01),
+            sleep=sleeps.append,
+        )
+        with faults.active(faults.inject("sample.raise", at=None)):
+            out = sup(jax.random.key(0), 4, call_index=7)
+        assert isinstance(out, QuarantinedBatch)
+        assert out.attempts == 3  # 1 try + 2 retries, then give up
+        assert out.call_index == 7
+        assert "InjectedFault" in out.reason
+        assert sup.quarantined == [out]
+        # exponential backoff between attempts
+        assert sleeps == [0.01, 0.02]
+
+    @pytest.mark.parametrize("site,needle", [
+        ("sample.nan", "non-finite"),
+        ("sample.negative", "negative copy estimate"),
+    ])
+    def test_corrupt_payload_is_hard_fault(self, site, needle):
+        """NaN/negative payloads are data corruption, not noise: exactly
+        one attempt, no retry, immediate quarantine."""
+        sleeps = []
+        sup = Supervisor(self._fn(), RetryPolicy(max_retries=5),
+                         sleep=sleeps.append)
+        with faults.active(faults.inject(site, at=None)):
+            out = sup(jax.random.key(0), 4)
+        assert isinstance(out, QuarantinedBatch)
+        assert out.attempts == 1
+        assert needle in out.reason
+        assert sleeps == []  # never backed off: hard faults don't retry
+
+    def test_shape_violation_is_hard_fault(self):
+        sup = Supervisor(lambda key, b: np.zeros(b + 1),
+                         RetryPolicy(max_retries=3), sleep=_noop_sleep)
+        out = sup(jax.random.key(0), 4)
+        assert isinstance(out, QuarantinedBatch) and out.attempts == 1
+        assert "batch=4" in out.reason
+
+    @pytest.mark.timeout(60)
+    def test_timeout_then_retry(self):
+        """A hung attempt surfaces as a timeout and the retry (same key)
+        succeeds."""
+        sup = Supervisor(
+            self._fn(9.0),
+            RetryPolicy(max_retries=1, timeout_s=0.1, backoff_s=0.0),
+            sleep=_noop_sleep,
+        )
+        with faults.active(
+            faults.inject("sample.timeout", at=(0,), payload=0.5)
+        ):
+            out = sup(jax.random.key(0), 4)
+        np.testing.assert_array_equal(out, np.full(4, 9.0))
+        assert sup.quarantined == []
+
+    def test_quarantine_excluded_from_estimate(self):
+        """End to end through estimate_counts: the poisoned batch is
+        excluded from the aggregates and surfaced on the result, and the
+        healthy batches are exactly the unfaulted run's."""
+        g = erdos_renyi(40, 4.0, seed=5)
+        key = jax.random.key(0)
+        c = Counter.from_graph(g, path_tree(3), backend="single")
+        base = c.estimate(n_iter=12, key=key, batch=4)
+        sup = Supervisor(c.sample_fn, RetryPolicy(max_retries=2),
+                         sleep=_noop_sleep)
+        # the second batch fails on every attempt (occurrences count
+        # attempts: batch 0 is occurrence 0, batch 1's three tries are 1-3)
+        with faults.active(faults.inject("sample.raise", at=(1, 2, 3))):
+            est = estimate_counts(sup, 12, key, batch=4)
+        assert len(est.quarantined) == 1
+        q = est.quarantined[0]
+        assert q.call_index == 1 and q.attempts == 3
+        assert est.niter == 8
+        np.testing.assert_array_equal(
+            est.samples, np.concatenate([base.samples[:4], base.samples[8:]])
+        )
+        assert np.isfinite(est.estimate)
+
+    def test_all_quarantined_aborts(self):
+        sup = Supervisor(self._fn(), RetryPolicy(max_retries=0),
+                         sleep=_noop_sleep)
+        with faults.active(faults.inject("sample.raise", at=None)):
+            with pytest.raises(EstimationAborted, match="quarantined"):
+                estimate_counts(sup, 8, jax.random.key(0), batch=4)
+
+    def test_validate_directly(self):
+        with pytest.raises(SampleValidationError):
+            Supervisor._validate(np.array([1.0, np.inf]), 2)
+        with pytest.raises(SampleValidationError):
+            Supervisor._validate(np.array([1.0, -2.0]), 2)
+        Supervisor._validate(np.array([0.0, 2.0]), 2)  # clean: no raise
+
+
+# --------------------------------------------------------------------------
+# checkpoint manager hardening
+# --------------------------------------------------------------------------
+
+
+class TestCheckpointManager:
+    def _save(self, mgr, step, value):
+        mgr.save(step, {"estimator": {"x": np.full(3, float(value))}})
+
+    def test_load_latest_skips_corrupt_step(self, tmp_path, capsys):
+        mgr = _mgr(tmp_path)
+        self._save(mgr, 1, 1.0)
+        self._save(mgr, 2, 2.0)
+        # flip bits in the newest step's payload: sha256 must catch it
+        bad = tmp_path / "ckpt" / "step_00000002" / "estimator.npz"
+        bad.write_bytes(b"garbage" + bad.read_bytes()[7:])
+        step, data = mgr.load_latest()
+        assert step == 1
+        np.testing.assert_array_equal(data["estimator"]["x"], np.full(3, 1.0))
+        assert "skipping unreadable step 2" in capsys.readouterr().out
+
+    def test_load_latest_skips_missing_manifest(self, tmp_path):
+        mgr = _mgr(tmp_path)
+        self._save(mgr, 1, 1.0)
+        self._save(mgr, 2, 2.0)
+        os.remove(tmp_path / "ckpt" / "step_00000002" / "manifest.json")
+        assert mgr.load_latest()[0] == 1
+
+    def test_empty_dir_loads_none(self, tmp_path):
+        assert _mgr(tmp_path).load_latest() is None
+
+    def test_stale_tmp_gc_on_save_and_load(self, tmp_path):
+        mgr = _mgr(tmp_path)
+        residue = tmp_path / "ckpt" / "step_00000009.tmp"
+        residue.mkdir()
+        (residue / "junk.npz").write_bytes(b"\x00")
+        self._save(mgr, 1, 1.0)  # save GCs residue before writing
+        assert not residue.exists()
+        residue.mkdir()
+        assert mgr.load_latest()[0] == 1  # load GCs it too
+        assert not residue.exists()
+
+    def test_write_crash_leaves_previous_latest_intact(self, tmp_path):
+        mgr = _mgr(tmp_path)
+        self._save(mgr, 1, 1.0)
+        with faults.active(faults.inject("checkpoint.write_crash")):
+            with pytest.raises(faults.InjectedCrash):
+                self._save(mgr, 2, 2.0)
+        assert (tmp_path / "ckpt" / "step_00000002.tmp").exists()
+        step, data = mgr.load_latest()
+        assert step == 1
+        np.testing.assert_array_equal(data["estimator"]["x"], np.full(3, 1.0))
+
+    def test_keep_pruning_spares_restored_step(self, tmp_path):
+        """The checkpoint a live run restored from is never pruned, even
+        when ``keep`` new checkpoints land on top of it."""
+        mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2,
+                                async_save=False)
+        self._save(mgr, 1, 1.0)
+        assert mgr.load_latest()[0] == 1  # a resume pins step 1
+        for s in range(2, 6):
+            self._save(mgr, s, float(s))
+        assert mgr.all_steps() == [1, 4, 5]  # 2..3 pruned, 1 protected
+
+    def test_estimator_state_roundtrip(self):
+        q = (
+            QuarantinedBatch(3, (7, 11), "InjectedFault: boom", 4),
+            QuarantinedBatch(5, (13, 17), "non-finite (NaN/Inf)", 1),
+        )
+        state = EstimatorState(
+            signature="g|V=10|E=20|p3|single|n_iter=12|batch=4|delta=0.1|key=1,2",
+            n_iter=12, batch=4, delta=0.1, cursor=6,
+            samples=np.arange(20, dtype=np.float64).reshape(10, 2),
+            quarantined=q,
+        )
+        back = EstimatorState.from_arrays(state.to_arrays())
+        assert back.signature == state.signature
+        assert (back.n_iter, back.batch, back.delta, back.cursor) == \
+            (12, 4, 0.1, 6)
+        np.testing.assert_array_equal(back.samples, state.samples)
+        assert back.quarantined == q
+
+    def test_group_sums_match_final_grouping(self):
+        """The associative per-group sums at a prefix agree with slicing
+        the final sample array the way median_of_means groups it."""
+        state = EstimatorState(
+            signature="s", n_iter=12, batch=4, delta=0.1, cursor=2,
+            samples=np.arange(8, dtype=np.float64),
+        )
+        g = num_groups_for(0.1, 12)
+        sums, counts = state.group_sums()
+        per = max(1, 12 // g)
+        for i in range(g):
+            part = state.samples[i * per: min((i + 1) * per, 8)]
+            assert sums[i] == part.sum()
+            assert counts[i] == part.shape[0]
+        assert counts.sum() == 8
+
+
+# --------------------------------------------------------------------------
+# fault-injection harness itself
+# --------------------------------------------------------------------------
+
+
+class TestFaultHarness:
+    def test_occurrence_indexing(self):
+        with faults.active(faults.inject("x", at=(1, 3))) as plan:
+            hits = [faults.fire("x") is not None for _ in range(5)]
+        assert hits == [False, True, False, True, False]
+        assert plan.fired == [("x", 1), ("x", 3)]
+
+    def test_at_none_fires_always(self):
+        with faults.active(faults.inject("x", at=None)):
+            assert all(faults.fire("x") is not None for _ in range(4))
+
+    def test_inactive_site_is_silent(self):
+        assert faults.fire("nonexistent.site") is None
+        with faults.active(faults.inject("x")):
+            assert faults.fire("y") is None
+
+    def test_no_nesting(self):
+        with faults.active(faults.inject("x")):
+            with pytest.raises(RuntimeError, match="already active"):
+                with faults.active(faults.inject("y")):
+                    pass
+        assert not faults.is_active()
+
+    def test_payload_carried(self):
+        with faults.active(faults.inject("x", payload=0.25)):
+            assert faults.fire("x").payload == 0.25
+
+
+# --------------------------------------------------------------------------
+# hardened graph ingestion
+# --------------------------------------------------------------------------
+
+
+class TestGraphIngestion:
+    def test_truncated_line_names_lineno(self, tmp_path):
+        p = tmp_path / "e.txt"
+        p.write_text("0 1\n1 2\n3\n")
+        with pytest.raises(GraphFormatError, match=r"e\.txt:3.*truncated"):
+            load_edge_file(str(p))
+        g = load_edge_file(str(p), validate=False)  # escape hatch: skip it
+        assert g.num_edges == 2
+
+    def test_non_integer_token_names_lineno(self, tmp_path):
+        p = tmp_path / "e.txt"
+        p.write_text("0 1\nfoo 2\n")
+        with pytest.raises(GraphFormatError, match=r"e\.txt:2.*non-integer"):
+            load_edge_file(str(p))
+        assert load_edge_file(str(p), validate=False).num_edges == 1
+
+    def test_out_of_range_id(self, tmp_path):
+        p = tmp_path / "e.txt"
+        p.write_text("0 1\n1 99\n")
+        with pytest.raises(GraphFormatError, match="out of range for n=10"):
+            load_edge_file(str(p), n=10)
+
+    def test_one_indexed_zero_id(self, tmp_path):
+        p = tmp_path / "e.txt"
+        p.write_text("1 2\n0 3\n")
+        with pytest.raises(GraphFormatError, match="below 1"):
+            load_edge_file(str(p), zero_indexed=False)
+
+    def test_empty_file(self, tmp_path):
+        p = tmp_path / "e.txt"
+        p.write_text("# only comments\n\n")
+        with pytest.raises(GraphFormatError, match="no edges"):
+            load_edge_file(str(p))
+        assert load_edge_file(str(p), validate=False).num_edges == 0
+
+    def test_npz_missing_key(self, tmp_path):
+        p = tmp_path / "g.npz"
+        np.savez(p, n=np.int64(3), indptr=np.zeros(4, np.int64))
+        with pytest.raises(GraphFormatError, match="missing npz key 'indices'"):
+            load_npz(str(p))
+
+    def test_npz_not_an_archive(self, tmp_path):
+        p = tmp_path / "g.npz"
+        p.write_bytes(b"this is not a zip file")
+        with pytest.raises(GraphFormatError, match="not a readable npz"):
+            load_npz(str(p))
+
+    def test_npz_inconsistent_csr(self, tmp_path):
+        p = tmp_path / "g.npz"
+        indptr = np.array([0, 1, 2, 5], np.int64)  # claims 5, has 2
+        np.savez(p, n=np.int64(3), indptr=indptr,
+                 indices=np.array([1, 0], np.int32))
+        with pytest.raises(GraphFormatError, match="truncated arrays"):
+            load_npz(str(p))
+        g = load_npz(str(p), validate=False)  # trusted load still works
+        assert g.n == 3
+
+    def test_npz_out_of_range_indices(self, tmp_path):
+        p = tmp_path / "g.npz"
+        np.savez(p, n=np.int64(2), indptr=np.array([0, 1, 2], np.int64),
+                 indices=np.array([1, 7], np.int32))
+        with pytest.raises(GraphFormatError, match="out of range"):
+            load_npz(str(p))
+
+    def test_roundtrip_still_clean(self, tmp_path):
+        g = erdos_renyi(30, 4.0, seed=1, name="rt")
+        p = tmp_path / "g.npz"
+        save_npz(g, str(p))
+        g2 = load_npz(str(p))
+        assert g2.n == g.n and g2.name == "rt"
+        np.testing.assert_array_equal(g2.indptr, g.indptr)
+        np.testing.assert_array_equal(g2.indices, g.indices)

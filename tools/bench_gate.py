@@ -36,6 +36,11 @@ import os
 import sys
 
 # metric classification by leaf key (substring match, checked in order)
+#: robustness metrics (bench_sparsity's checkpoint section): save/restore
+#: overhead of the §16 estimator state.  Host-dependent like timings, so
+#: they gate at the same loose multiplicative factor — the class exists so
+#: a checkpoint-cost cliff fails with its own label, not as generic timing
+ROBUSTNESS_KEYS = ("ckpt_",)
 TIMING_KEYS = ("_us", "iter_us", "_s")
 HIGHER_BETTER_KEYS = ("speedup",)
 STRUCTURAL_KEYS = (
@@ -65,6 +70,8 @@ META_KEYS = ("smoke", "backend")
 def classify(key: str):
     if any(s in key for s in HIGHER_BETTER_KEYS):
         return "speedup"
+    if any(key.startswith(s) for s in ROBUSTNESS_KEYS):
+        return "robustness"
     if key.endswith(TIMING_KEYS) or key == "us":
         return "timing"
     if any(s in key for s in STRUCTURAL_KEYS):
@@ -116,7 +123,7 @@ def compare_file(name, base, fresh, *, struct_rtol: float, timing_factor: float)
         bv, fv = b_leaves[path], f_leaves[path]
         if cls is None:
             continue
-        if cls == "timing":
+        if cls in ("timing", "robustness"):
             ok = fv <= bv * timing_factor
             note = f"<= {timing_factor:.1f}x baseline"
         elif cls == "speedup":

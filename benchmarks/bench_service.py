@@ -1,0 +1,121 @@
+"""Counting-service benchmark: cache reuse, coalescing, request latency.
+
+Drives the ``bench-service`` synthetic multi-tenant workload
+(:data:`repro.configs.SERVICE_WORKLOADS` — three tenants, overlapping
+template families, a shared default key) through a resident
+:class:`~repro.serve.CountingService` and reports the service-level
+quantities the tentpole claims:
+
+  * ``hit_rate`` — plan-cache hits / lookups: cross-request compiled-plan
+    reuse (must be > 0 on this workload: alice re-asks her family);
+  * ``coalescing_factor`` — request-calls served per backend call
+    (must be > 1: overlapping requests share coloring passes);
+  * ``latency_p50_us`` / ``latency_p95_us`` — submit-to-result wall
+    clock per request under fair scheduling.
+
+``main()`` writes ``BENCH_service.json`` at the repo root; the CI bench
+gate holds the line on it (hit rate and coalescing gate as
+higher-is-better, latencies as timings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import SERVICE_WORKLOADS
+from repro.core import rmat
+from repro.serve import CountingService, ServiceConfig
+
+from .common import ROOT, emit
+
+JSON_PATH = os.path.join(ROOT, "BENCH_service.json")
+
+
+def run(smoke: bool = False) -> dict:
+    wl = SERVICE_WORKLOADS["bench-service"]
+    if smoke:
+        g = rmat(2048, 15_000, skew=3, seed=0, name="bench-service-smoke")
+        iter_scale = 4  # budgets shrink with the graph
+    else:
+        g = wl.counting_config().synthesize()
+        iter_scale = 1
+    svc = CountingService(
+        g,
+        n_colors=wl.k,
+        backend="single",
+        config=ServiceConfig(batch=wl.batch),
+    )
+    tickets = []
+    t0 = time.perf_counter()
+    for _ in range(wl.repeats):
+        for tenant, templates, kw in wl.requests:
+            kw = dict(kw)
+            if "n_iter" in kw:
+                kw["n_iter"] = max(wl.batch, kw["n_iter"] // iter_scale)
+            tickets.append(svc.submit(tenant, templates, **kw))
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    failed = [t for t in tickets if t.status != "done"]
+    assert not failed, f"service left requests unserved: {failed}"
+    stats = svc.stats()
+    lat_us = np.array([t.latency_s for t in tickets]) * 1e6
+    rec = {
+        "requests": len(tickets),
+        "pass_calls": stats["pass_calls"],
+        "request_calls": stats["request_calls"],
+        "coalescing_factor": stats["coalescing_factor"],
+        "hit_rate": stats["cache"]["hit_rate"],
+        "cache_hits": stats["cache"]["hits"],
+        "cache_misses": stats["cache"]["misses"],
+        "latency_p50_us": float(np.percentile(lat_us, 50)),
+        "latency_p95_us": float(np.percentile(lat_us, 95)),
+        "wall_us": wall * 1e6,
+    }
+    # the tentpole's acceptance floor: reuse and coalescing must engage
+    assert rec["hit_rate"] > 0, "plan cache never hit on repeat requests"
+    assert rec["coalescing_factor"] > 1, "no requests shared a pass"
+    emit(
+        "service_coalescing",
+        rec["coalescing_factor"] * 100,
+        f"x{rec['coalescing_factor']:.2f}",
+    )
+    emit("service_hit_rate", rec["hit_rate"] * 100, f"{rec['hit_rate']:.0%}")
+    emit(
+        "service_latency_p50",
+        rec["latency_p50_us"],
+        f"p95 {rec['latency_p95_us'] / 1e3:.1f}ms",
+    )
+    return {
+        "backend": "cpu",
+        "smoke": smoke,
+        "graph": {"v": g.n, "e": g.num_edges},
+        "k": wl.k,
+        "batch": wl.batch,
+        "repeats": wl.repeats,
+        "service": rec,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small graph / reduced budgets (the CI mode)",
+    )
+    args = ap.parse_args()
+    out = run(smoke=args.smoke)
+    with open(JSON_PATH, "w") as fh:
+        json.dump(out, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -65,7 +65,18 @@ from repro.core.supervisor import RetryPolicy
 from repro.core.templates import Tree, partition_tree, template as resolve_template
 from repro.train.checkpoint import CheckpointManager
 
-__all__ = ["CountRequest", "CountResult", "MultiCountResult", "Counter", "run"]
+__all__ = [
+    "CountRequest",
+    "CountResult",
+    "MultiCountResult",
+    "Counter",
+    "run",
+    # serving layer (lazy re-exports; see module __getattr__)
+    "CountingService",
+    "ServiceClient",
+    "ServiceConfig",
+    "Ticket",
+]
 
 #: plan_opts understood by the single-device backend (``n_colors`` widens
 #: the color budget past the template size — the shared-k contract of
@@ -470,13 +481,21 @@ class Counter:
         return self.plan.scale
 
     def _signature_extra(self, *, family=None, k: Optional[int] = None) -> str:
-        """Workload identity for checkpoint/resume safety (call after the
-        plan is built, so the distributed shard count is resolved)."""
+        """Workload identity for checkpoint/resume safety.
+
+        Deliberately does NOT include the shard count: the keyed coloring
+        stream is shard-count-independent (``distributed.global_coloring``),
+        so a checkpoint taken at P shards is a valid prefix of the same run
+        resumed at P' — the ROADMAP elasticity contract.  A widened color
+        budget (``n_colors``) DOES change the stream and is part of the
+        identity.
+        """
         what = f"family={','.join(family)}|k={k}" if family else self.tree.name
         extra = (f"{self.graph.name}|V={self.graph.n}|"
                  f"E={self.graph.num_edges}|{what}|{self.backend}")
-        if self.backend == "distributed":
-            extra += f"|P={self._num_shards}"
+        n_colors = self.plan_opts.get("n_colors")
+        if not family and n_colors is not None:
+            extra += f"|k={n_colors}"
         return extra
 
     # ------------------------------------------------------------- counting
@@ -757,6 +776,39 @@ class Counter:
         while True:
             key, sub = jax.random.split(key)
             yield self.sample_fn(sub, batch)
+
+    # ---------------------------------------------------------------- serving
+    def serve(self, *, n_colors: Optional[int] = None, config=None):
+        """A resident :class:`~repro.serve.CountingService` on this graph.
+
+        The service loads the graph once and serves a multi-tenant request
+        stream: plan-cache reuse across requests, coalesced coloring
+        passes, per-tenant fair scheduling (see DESIGN.md §17).  It runs
+        with a fixed shared color budget — ``n_colors`` defaults to this
+        Counter's own (``plan_opts['n_colors']`` or the template size), and
+        every request's results are bit-identical to a solo
+        ``Counter.estimate``/``estimate_many`` at that budget.
+        """
+        from repro.serve import CountingService
+
+        k = n_colors or self.plan_opts.get("n_colors") or self.k
+        opts = {
+            key: v for key, v in self.plan_opts.items() if key != "n_colors"
+        }
+        return CountingService(
+            self.graph, n_colors=k, backend=self.backend,
+            plan_opts=opts, config=config,
+        )
+
+
+def __getattr__(name):
+    # lazy serving re-exports: repro.serve imports repro.api at module
+    # scope, so the reverse edge must resolve at attribute time
+    if name in ("CountingService", "ServiceClient", "ServiceConfig", "Ticket"):
+        import repro.serve as _serve
+
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def run(

@@ -13,7 +13,12 @@ from . import (
     smollm_360m,
     whisper_base,
 )
-from .subgraph import COUNTING_CONFIGS, CountingConfig  # noqa: F401
+from .subgraph import (  # noqa: F401
+    COUNTING_CONFIGS,
+    SERVICE_WORKLOADS,
+    CountingConfig,
+    ServiceWorkloadConfig,
+)
 
 ARCHS = {
     c.name: c

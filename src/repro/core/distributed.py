@@ -131,6 +131,7 @@ __all__ = [
     "make_count_fn",
     "keyed_sample_fn",
     "shard_coloring",
+    "global_coloring",
 ]
 
 
@@ -497,6 +498,18 @@ def shard_coloring(plan: DistributedPlan, coloring: np.ndarray) -> np.ndarray:
     return out
 
 
+def global_coloring(key: jax.Array, n: int, k: int) -> jax.Array:
+    """The keyed backend's coloring for one iteration: int32 ``[n]``.
+
+    Deliberately a function of ``(key, n, k)`` only — no shard count, no
+    padding — so the coloring stream is identical on every mesh shape.
+    ``sharded_fn_keyed`` slices this per shard on-device; tests and the
+    elasticity contract (resume the same run on a different shard count)
+    reconstruct it on the host to assert parity.
+    """
+    return jax.random.randint(key, (n,), 0, k, dtype=jnp.int32)
+
+
 def _node_mode(
     plan: DistributedPlan,
     node_index: int,
@@ -860,8 +873,21 @@ def make_count_fn(
         p = jax.lax.axis_index(data_axis)
 
         def one(kd):
-            k = jax.random.fold_in(jax.random.wrap_key_data(kd), p)
-            col = jax.random.randint(k, (n_loc_pad,), 0, plan.k, dtype=jnp.int32)
+            # every shard draws the same GLOBAL coloring and slices its own
+            # rows, so the coloring stream depends only on (key, n, k) —
+            # never on the shard count.  That is what lets a checkpointed
+            # run resume on a different shard count (ROADMAP elasticity)
+            # and keeps service coloring streams portable across meshes.
+            # Rows past the shard's true size (local pad, and global pad on
+            # the ragged last shard) take a clipped color; they are either
+            # masked (row >= shard_size) or edgeless, contributing zero to
+            # every internal-node table, exactly like the zero color
+            # shard_coloring pads with.
+            col_glob = global_coloring(
+                jax.random.wrap_key_data(kd), plan.n, plan.k
+            )
+            idx = p * plan.shard_size + jnp.arange(n_loc_pad)
+            col = jnp.take(col_glob, jnp.minimum(idx, plan.n - 1))
             return local_count(col, *local)
 
         partials, oks = jax.vmap(one)(key_data)  # [I_loc, R]

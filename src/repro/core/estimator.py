@@ -30,13 +30,18 @@ runs use a fixed iteration budget and report the empirical relative SD.
 Resumability (DESIGN.md §16)
 ----------------------------
 Multi-hour estimates survive kills bit-exactly.  The whole run derives from
-one key: the key sequence is pre-split (``jax.random.split(key, n_calls)``)
-and :class:`EstimatorState` banks the per-iteration estimates plus the
-**cursor** — how many backend calls completed.  A resumed run re-splits the
-same key, skips the first ``cursor`` keys, and continues; since the banked
-prefix and the freshly-computed suffix are exactly the arrays an
-uninterrupted run would have produced, every aggregate (median-of-means,
-mean, RSD, early-stop decision) is bit-identical.  The state is tiny — one
+one key: backend call ``i`` uses :func:`call_key` — ``fold_in(key, i)``,
+a *prefix-stable* stream whose ``i``-th key depends only on ``(key, i)``,
+never on the total budget — and :class:`EstimatorState` banks the
+per-iteration estimates plus the **cursor** — how many backend calls
+completed.  A resumed run re-derives the same per-call keys, skips the
+first ``cursor``, and continues; since the banked prefix and the
+freshly-computed suffix are exactly the arrays an uninterrupted run would
+have produced, every aggregate (median-of-means, mean, RSD, early-stop
+decision) is bit-identical.  Prefix stability is also what lets the
+counting service (serve/counting_service.py) coalesce requests with
+*different* budgets into one shared coloring stream and let late requests
+join a pass mid-stream.  The state is tiny — one
 float64 per coloring — so checkpointing it every few batches (via
 ``checkpoint=CheckpointManager(...)``) costs microseconds against
 multi-second iterations.  A :class:`~repro.core.supervisor.Supervisor` (or
@@ -64,6 +69,9 @@ __all__ = [
     "niter_bound",
     "num_groups_for",
     "median_of_means",
+    "call_key",
+    "relative_se",
+    "aggregate_single",
     "CountEstimate",
     "MultiCountEstimate",
     "EstimatorState",
@@ -88,6 +96,20 @@ def niter_bound(k: int, eps: float, delta: float) -> int:
 def num_groups_for(delta: float, n_iter: int) -> int:
     """Median-of-means group count: ``t = O(log 1/delta)``, clamped to n_iter."""
     return max(1, min(int(round(math.log(1.0 / delta))), n_iter))
+
+
+def call_key(key: jax.Array, index: int) -> jax.Array:
+    """PRNG key for backend call ``index`` of a run keyed by ``key``.
+
+    ``fold_in`` rather than a pre-split: the per-call key stream is
+    *prefix-stable* — call ``i``'s key depends only on ``(key, i)``, never
+    on the total call count (``jax.random.split(key, n)`` pairs counters as
+    ``(i, n+i)``, so its streams differ across budgets).  Prefix stability
+    is what makes a banked sample prefix valid under a different remaining
+    budget: resume, per-request early exit inside a coalesced family pass,
+    and mid-stream joins all rely on it.
+    """
+    return jax.random.fold_in(key, index)
 
 
 def median_of_means(samples: np.ndarray, num_groups: int):
@@ -147,7 +169,7 @@ def run_signature(
 ) -> str:
     """The identity of one estimation run, for resume safety.
 
-    Two runs with equal signatures draw the identical pre-split key sequence
+    Two runs with equal signatures draw the identical per-call key sequence
     over the identical budget, so banked samples from one are a valid prefix
     of the other.  ``extra`` carries caller context (graph, template,
     backend — see ``Counter``) so a checkpoint can't cross workloads.
@@ -172,7 +194,7 @@ class EstimatorState:
     exact ``median(group means)`` an uninterrupted run computes.
 
     ``cursor`` is the PRNG position: how many backend calls of the
-    pre-split key sequence completed (including quarantined ones — their
+    per-call key sequence completed (including quarantined ones — their
     keys are consumed, their records kept, so a resumed run neither replays
     nor double-counts them).
     """
@@ -265,12 +287,15 @@ class EstimatorState:
         )
 
 
-def _relative_se(samples: np.ndarray) -> float:
+def relative_se(samples: np.ndarray) -> float:
     """Relative standard error of the running mean — the early-stop signal.
 
     Unlike the per-iteration RSD (which converges to the sampling noise
     level, not zero), this shrinks ~1/sqrt(n), so "stop at target" is
     meaningful.  Family runs stop when the *worst* template hits target.
+    Exported because the counting service must apply the *identical*
+    predicate per request inside a coalesced pass (bit-identical stopping
+    decisions are part of the service's solo-equivalence contract).
     """
     n = samples.shape[0]
     if n < 2:
@@ -280,6 +305,23 @@ def _relative_se(samples: np.ndarray) -> float:
     with np.errstate(divide="ignore", invalid="ignore"):
         rse = np.where(means != 0, sds / np.abs(means) / math.sqrt(n), np.inf)
     return float(rse.max())
+
+
+def aggregate_single(samples: np.ndarray, n_iter: int, delta: float):
+    """The scalar tail aggregate of :func:`estimate_counts`, factored out.
+
+    Returns ``(mom, mean, rsd, used, ests)`` over ``samples`` truncated to
+    the ``n_iter`` budget.  The counting service computes each request's
+    final numbers through this exact function, which is what makes a
+    coalesced pass bit-identical to a solo run by construction rather than
+    by coincidence.  ``samples`` must be non-empty.
+    """
+    ests = np.asarray(samples, np.float64).reshape(-1)[:n_iter]
+    used = int(ests.shape[0])
+    mom = median_of_means(ests, num_groups_for(delta, used))
+    mean = float(ests.mean())
+    rsd = float(ests.std() / mean) if mean != 0 else float("inf")
+    return mom, mean, rsd, used, ests
 
 
 def _append(bank: np.ndarray, chunk: np.ndarray) -> np.ndarray:
@@ -301,7 +343,7 @@ def _collect_samples(
 ) -> EstimatorState:
     """The shared sampling loop, resumable at any call boundary.
 
-    Walks the pre-split key sequence from ``state.cursor``, banking each
+    Walks the :func:`call_key` sequence from ``state.cursor``, banking each
     batch into ``state``; saves the state to ``checkpoint`` every
     ``checkpoint_every`` iterations (rounded up to call boundaries) and
     once more on completion, so a finished directory restores to a no-op
@@ -309,7 +351,6 @@ def _collect_samples(
     advance the cursor without contributing samples.
     """
     b, n_iter, n_calls = state.batch, state.n_iter, state.n_calls
-    keys = jax.random.split(key, n_calls)
     supervised = isinstance(sample, Supervisor)
     stride = max(1, n_calls // 10)
     ckpt_calls = max(1, -(-checkpoint_every // b)) if checkpoint_every else 0
@@ -317,12 +358,13 @@ def _collect_samples(
     for i in range(state.cursor, n_calls):
         # the early-stop check sees banked + fresh samples alike, so a
         # resumed run stops exactly where the uninterrupted run would
-        if target_rsd is not None and _relative_se(state.samples) <= target_rsd:
+        if target_rsd is not None and relative_se(state.samples) <= target_rsd:
             break
+        ki = call_key(key, i)
         if supervised:
-            out = sample(keys[i], b, call_index=i)
+            out = sample(ki, b, call_index=i)
         else:
-            out = np.asarray(sample(keys[i], b), np.float64)
+            out = np.asarray(sample(ki, b), np.float64)
         if isinstance(out, QuarantinedBatch):
             state = dataclasses.replace(
                 state, cursor=i + 1, quarantined=state.quarantined + (out,)
@@ -438,16 +480,12 @@ def estimate_counts(
         checkpoint=checkpoint, checkpoint_every=checkpoint_every,
         target_rsd=target_rsd,
     )
-    ests = state.samples.reshape(-1)[:n_iter]
-    if ests.shape[0] == 0:
+    if state.samples.reshape(-1)[:n_iter].shape[0] == 0:
         raise EstimationAborted(
             f"all {len(state.quarantined)} batches were quarantined: "
             + "; ".join(str(q) for q in state.quarantined)
         )
-    used = int(ests.shape[0])
-    mom = median_of_means(ests, num_groups_for(delta, used))
-    mean = float(ests.mean())
-    rsd = float(ests.std() / mean) if mean != 0 else float("inf")
+    mom, mean, rsd, used, ests = aggregate_single(state.samples, n_iter, delta)
     return CountEstimate(
         mom, mean, rsd, ests, used,
         quarantined=state.quarantined, resumed_from=resumed_from,

@@ -84,7 +84,7 @@ class RetryPolicy:
 class QuarantinedBatch:
     """Provenance of one excluded batch: which keys, why, how hard we tried."""
 
-    call_index: int  # index into the run's pre-split key sequence
+    call_index: int  # index into the run's per-call key sequence
     key_data: Tuple[int, ...]  # PRNG key words (uint32) — replayable
     reason: str
     attempts: int

@@ -32,6 +32,8 @@ __all__ = [
     "PartitionChain",
     "TemplateDag",
     "compile_templates",
+    "rooted_signature",
+    "family_signature",
     "partition_tree",
     "partition_complexity",
     "automorphism_count",
@@ -492,6 +494,42 @@ def compile_templates(
         roots=tuple(root_ids),
         templates=trees,
     )
+
+
+def rooted_signature(tree, root: int = 0) -> tuple:
+    """AHU canonical signature of ``tree`` rooted at ``root``.
+
+    The same signature :func:`compile_templates` interns partition nodes
+    by: two templates with equal rooted signatures are isomorphic as rooted
+    trees, so they compile to the same DAG node, read the same table
+    column, and (being isomorphic unrooted too) carry the same ``|Aut|``
+    and scale.  This is the cache key the counting service uses for
+    cross-*request* plan reuse — a request never misses the plan cache
+    because a tenant labeled its vertices differently.
+    """
+    t = template(tree) if isinstance(tree, str) else tree
+    return _rooted_canon(t.adjacency(), root, -1)
+
+
+def family_signature(templates: Sequence, n_colors: Optional[int] = None) -> tuple:
+    """Order-insensitive identity of a compiled template family.
+
+    ``(k, sorted unique rooted signatures)`` — the complete identity of the
+    DAG :func:`compile_templates` produces up to column order: the node
+    tables depend only on each rooted sub-template's isomorphism class and
+    the shared color budget ``k``.  Families that differ only in template
+    order or duplicates share one cache entry.
+    """
+    trees = tuple(template(t) if isinstance(t, str) else t for t in templates)
+    if not trees:
+        raise ValueError("family_signature needs at least one template")
+    k_min = max(t.n for t in trees)
+    k = n_colors if n_colors is not None else k_min
+    if k < k_min:
+        raise ValueError(
+            f"n_colors={k} is smaller than the largest template ({k_min})"
+        )
+    return (k, tuple(sorted(set(rooted_signature(t) for t in trees))))
 
 
 # ---------------------------------------------------------------------------

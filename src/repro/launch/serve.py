@@ -1,51 +1,105 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Counting-service launcher: ``python -m repro.launch.serve``.
 
-Runs the batched prefill/decode engine (reduced configs locally; the
-production-mesh decode path is exercised by ``repro.launch.dryrun``).
+Boots a resident :class:`~repro.serve.CountingService` over a synthesized
+graph and drives a scripted multi-tenant request stream through it
+(:data:`repro.configs.SERVICE_WORKLOADS`), printing per-request results
+and the service's cache/coalescing/fairness counters.  This is the
+synthetic driver for the serving layer — the single-process analogue of N
+clients sharing one resident engine.
+
+Run::
+
+    PYTHONPATH=src python -m repro.launch.serve --workload bench-service
+    PYTHONPATH=src python -m repro.launch.serve --workload smoke-service \
+        --backend single --repeats 1
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
-import numpy as np
+from repro.configs import SERVICE_WORKLOADS
+from repro.serve import CountingService, ServiceConfig
 
-from repro.configs import get_arch
-from repro.models import build_model
-from repro.serve import ServeConfig, ServingEngine
+
+def run_workload(
+    wl,
+    *,
+    backend: str = "auto",
+    repeats: int | None = None,
+    batch: int | None = None,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    """Drive one scripted workload; returns ``(tickets, service)``."""
+    cfg = wl.counting_config()
+    graph = cfg.synthesize(seed=seed)
+    svc = CountingService(
+        graph,
+        n_colors=wl.k,
+        backend=backend,
+        plan_opts={"num_shards": cfg.num_shards} if backend == "distributed"
+        else None,
+        config=ServiceConfig(batch=batch or wl.batch),
+    )
+    tickets = []
+    for _ in range(repeats if repeats is not None else wl.repeats):
+        for tenant, templates, kw in wl.requests:
+            tickets.append(svc.submit(tenant, templates, **kw))
+    svc.run_until_idle()
+    if verbose:
+        for t in tickets:
+            if t.status == "failed":
+                print(f"  {t}: FAILED — {t.error}")
+                continue
+            r = t.result()
+            ests = getattr(r, "estimates", None)
+            shown = (f"{r.estimate:.6g}" if ests is None
+                     else "[" + ", ".join(f"{e:.6g}" for e in ests) + "]")
+            print(f"  {t}: {shown}  niter={r.niter}  "
+                  f"latency={t.latency_s:.3f}s")
+    return tickets, svc
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", default="bench-service",
+                    choices=sorted(SERVICE_WORKLOADS))
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "single", "distributed"))
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="override the workload's request-stream repeats")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override the per-call coloring batch")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="graph synthesis seed")
+    ap.add_argument("--json", action="store_true",
+                    help="print the stats dict as JSON (for scripting)")
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch)
-    if not args.full:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    eng = ServingEngine(
-        model, ServeConfig(batch_size=args.batch, max_new_tokens=args.new_tokens)
+    wl = SERVICE_WORKLOADS[args.workload]
+    print(f"workload {wl.name}: graph={wl.graph} k={wl.k} "
+          f"{len(wl.requests)} requests x {args.repeats or wl.repeats}")
+    tickets, svc = run_workload(
+        wl, backend=args.backend, repeats=args.repeats, batch=args.batch,
+        seed=args.seed,
     )
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(
-        np.int32
-    )
-    ctx_len, needed = model._context_len()
-    ctx = (
-        (rng.standard_normal((args.batch, ctx_len, cfg.d_model)) * 0.1).astype(
-            np.float32
-        )
-        if needed
-        else None
-    )
-    out = eng.generate(prompts, context=ctx)
-    print(f"{cfg.name}: generated {out.shape[0]}x{out.shape[1]} tokens")
-    print(out)
+    stats = svc.stats()
+    if args.json:
+        print(json.dumps(stats, indent=2, default=str))
+    else:
+        cache = stats["cache"]
+        print(f"served {stats.get('completed', 0)} "
+              f"(failed {stats.get('failed', 0)}) | "
+              f"coalescing x{stats['coalescing_factor']:.2f} | "
+              f"plan cache {cache['hits']}/{cache['hits'] + cache['misses']} "
+              f"hits ({cache['hit_rate']:.0%}), "
+              f"{cache['evictions']} evictions | "
+              f"backfill {stats.get('backfill_calls', 0)} calls")
+        for name, ts in stats["tenants"].items():
+            print(f"  tenant {name}: charged={ts['charged']} "
+                  f"weight={ts['weight']}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,23 @@
-"""Serving substrate: prefill/decode engine with batched requests."""
+"""Serving layer: the resident multi-tenant counting service."""
 
-from .engine import ServeConfig, ServingEngine  # noqa: F401
+from .counting_service import (  # noqa: F401
+    CountingService,
+    PlanCache,
+    ProgressUpdate,
+    QueueFullError,
+    ServiceClient,
+    ServiceConfig,
+    Ticket,
+    UnsatisfiableRequestError,
+)
+
+__all__ = [
+    "CountingService",
+    "PlanCache",
+    "ProgressUpdate",
+    "QueueFullError",
+    "ServiceClient",
+    "ServiceConfig",
+    "Ticket",
+    "UnsatisfiableRequestError",
+]

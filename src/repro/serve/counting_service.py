@@ -1,0 +1,850 @@
+"""Counting-as-a-service: a resident multi-tenant subgraph-count engine.
+
+The paper amortizes one expensive counting pass across a massive graph;
+this module amortizes *across a request stream*: a :class:`CountingService`
+loads a graph once, keeps compiled family plans in a signature-keyed LRU
+cache (extending the cross-template interning of DESIGN.md §14 to
+cross-*request* reuse), admits queries from named tenants through a bounded
+queue with deficit-round-robin fairness, and coalesces compatible pending
+requests into shared-coloring family passes — one backend dispatch serves
+every request that wants the same coloring stream.
+
+Solo-equivalence contract
+-------------------------
+Every request's numbers are **bit-identical** to a stand-alone
+``Counter.estimate`` / ``estimate_many`` call with the same
+``(key, batch, n_colors=k, n_iter, delta, target_rsd)``.  Three properties
+make that hold by construction rather than by coincidence:
+
+* the per-call key stream is prefix-stable
+  (:func:`repro.core.estimator.call_key` — ``fold_in(key, i)``), so call
+  ``i``'s coloring never depends on any request's total budget;
+* a compiled family's per-template sample columns depend only on the rooted
+  sub-template's isomorphism class and the shared color budget ``k``
+  (the §14 shared-``k`` contract), never on which *other* templates rode in
+  the same pass — so coalescing mates cannot perturb each other;
+* per-request stopping and aggregation reuse the estimator's own
+  helpers (:func:`~repro.core.estimator.relative_se`,
+  :func:`~repro.core.estimator.aggregate_single`) applied to the request's
+  own banked samples, including during a mid-stream join: a late request
+  backfills the pass history call by call, checking the stop rule before
+  each consumed call, exactly as the solo loop would have.
+
+Scheduling
+----------
+Single-threaded and deterministic: :meth:`CountingService.step` performs
+one admission round plus one pass advance, chosen by deficit round-robin
+over tenants (a tenant's deficit grows by ``quantum * weight`` per visit
+and pays 1 per backend call it schedules; co-tenants of a coalesced pass
+ride free).  ``run_until_idle`` drives the loop to quiescence.  Nothing
+here spawns threads — determinism is what makes the coalescing tests and
+the solo-equivalence contract checkable.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.estimator import (
+    EstimatorState,
+    aggregate_single,
+    call_key,
+    median_of_means,
+    niter_bound,
+    num_groups_for,
+    relative_se,
+    run_signature,
+)
+from repro.core.graphs import Graph
+from repro.core.supervisor import (
+    QuarantinedBatch,
+    RetryPolicy,
+    Supervisor,
+    key_fingerprint,
+)
+from repro.core.templates import (
+    Tree,
+    rooted_signature,
+    template as resolve_template,
+)
+
+__all__ = [
+    "ServiceConfig",
+    "CountingService",
+    "ServiceClient",
+    "Ticket",
+    "PlanCache",
+    "ProgressUpdate",
+    "QueueFullError",
+    "UnsatisfiableRequestError",
+]
+
+
+class QueueFullError(RuntimeError):
+    """The service's bounded admission queue rejected a submit."""
+
+
+class UnsatisfiableRequestError(ValueError):
+    """The request cannot be satisfied within the service's iteration budget.
+
+    Raised at submit time — never discovered after hours of silent
+    over-sampling — when an ``eps``-derived worst-case budget
+    (:func:`~repro.core.estimator.niter_bound`, exponential in the template
+    size) or an explicit ``n_iter`` exceeds ``ServiceConfig.max_iters``.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Resident-service knobs.  All of these are part of service identity.
+
+    ``batch`` is part of each request's *stream* identity (a backend call
+    draws its colorings from ``(key, batch, n, k)``), so the solo-equivalent
+    call must pass the same batch.  ``n_colors`` is pinned on the service,
+    not per request: a fixed shared color budget is what lets any two
+    requests share a coloring stream and what keeps a request's estimates
+    independent of its coalescing mates.
+    """
+
+    batch: int = 8  # colorings per backend call (stream identity)
+    max_iters: int = 100_000  # per-request iteration budget ceiling
+    max_pending: int = 64  # bounded queue: queued + active requests
+    max_active: int = 8  # requests concurrently attached to passes
+    quantum: float = 1.0  # DRR deficit replenished per tenant visit
+    plan_cache_capacity: int = 8  # LRU entries (compiled family plans)
+    seed: int = 0  # default request key = jax.random.key(seed)
+    max_retries: Optional[int] = None  # supervise passes when set
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgressUpdate:
+    """One streamed increment of a request's running estimate."""
+
+    niter: int  # iterations banked so far
+    estimates: Tuple[float, ...]  # per-template median-of-means so far
+    rse: float  # worst-template relative standard error
+    target_met: bool
+
+
+class PlanCache:
+    """Signature-keyed LRU over compiled family plans.
+
+    Keys are :func:`~repro.core.templates.family_signature` values — order-
+    insensitive, label-insensitive — so a request hits whenever *any*
+    earlier request compiled the same family, regardless of template order,
+    vertex labeling, or tenant.  ``get`` returns the cached entry or builds
+    one via the supplied builder; eviction notifies ``on_evict`` so the
+    owner can drop its own per-family state too.
+    """
+
+    def __init__(self, capacity: int, on_evict=None):
+        self.capacity = max(1, int(capacity))
+        self._entries: "collections.OrderedDict[tuple, dict]" = (
+            collections.OrderedDict()
+        )
+        self._on_evict = on_evict
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, sig: tuple) -> bool:
+        return sig in self._entries
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def get(self, sig: tuple, build) -> dict:
+        entry = self._entries.get(sig)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(sig)
+            return entry
+        self.misses += 1
+        entry = build()
+        self._entries[sig] = entry
+        while len(self._entries) > self.capacity:
+            _, evicted = self._entries.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(evicted)
+        return entry
+
+
+@dataclasses.dataclass
+class _Request:
+    """Internal per-request state (the public view is :class:`Ticket`)."""
+
+    ticket: "Ticket"
+    tenant: str
+    trees: Tuple[Tree, ...]  # as submitted (deduplicated by signature)
+    sigs: Tuple[tuple, ...]  # rooted signature per tree
+    n_iter: int
+    delta: float
+    eps: Optional[float]
+    target_rsd: Optional[float]
+    key: jax.Array
+    key_fp: Tuple[int, ...]
+    batch: int
+    samples: np.ndarray  # [done, T_req] banked per-call estimates
+    quarantined: Tuple[QuarantinedBatch, ...] = ()
+    cursor: int = 0  # backend calls consumed (absolute call index)
+    satisfied: bool = False  # target_rsd hit (checked before each call)
+
+    @property
+    def n_calls(self) -> int:
+        return -(-self.n_iter // self.batch)
+
+    @property
+    def is_multi(self) -> bool:
+        return len(self.trees) > 1
+
+
+class Ticket:
+    """Handle on one submitted request: status, streamed progress, result.
+
+    ``updates`` grows by one :class:`ProgressUpdate` per consumed backend
+    call — the streaming surface; ``result()`` raises until the request is
+    done.  ``state()`` exports a solo-compatible
+    :class:`~repro.core.estimator.EstimatorState` at any time, so a
+    partially-served request can be drained and finished by a stand-alone
+    ``estimate_counts`` run (``resume=ticket.state()``) bit-exactly.
+    """
+
+    def __init__(self, ticket_id: int, tenant: str, templates: Tuple[str, ...]):
+        self.id = ticket_id
+        self.tenant = tenant
+        self.templates = templates
+        self.status = "queued"  # queued | active | done | failed
+        self.updates: List[ProgressUpdate] = []
+        self.error: Optional[str] = None
+        self.submitted_at = time.perf_counter()
+        self.finished_at: Optional[float] = None
+        self._result = None
+        self._request: Optional[_Request] = None
+        self._service: Optional["CountingService"] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status in ("done", "failed")
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    @property
+    def progress(self) -> Optional[ProgressUpdate]:
+        return self.updates[-1] if self.updates else None
+
+    def result(self):
+        """The final estimate (CountResult / MultiCountResult shaped)."""
+        if self.status == "failed":
+            raise RuntimeError(f"request failed: {self.error}")
+        if self._result is None:
+            raise RuntimeError(f"request is {self.status}; drive the "
+                               f"service (step/run_until_idle) first")
+        return self._result
+
+    def state(self) -> EstimatorState:
+        """Solo-compatible estimator state of the banked progress."""
+        if self._request is None or self._service is None:
+            raise RuntimeError("request has no banked state yet")
+        return self._service._export_state(self._request)
+
+    def __repr__(self) -> str:
+        return (f"Ticket(#{self.id} {self.tenant}: "
+                f"{','.join(self.templates)} [{self.status}])")
+
+
+class _Pass:
+    """One shared coloring stream: requests coalesced on (key, batch).
+
+    ``history[i]`` banks call ``i``'s per-template columns by rooted
+    signature (plus any quarantine record), which is what lets a late
+    request join mid-stream: templates already riding the pass backfill
+    for free; missing templates recompute their own columns at the same
+    per-call keys (prefix-stable, so the values are the solo values).
+    """
+
+    def __init__(self, key: jax.Array, key_fp: Tuple[int, ...], batch: int):
+        self.key = key
+        self.key_fp = key_fp
+        self.batch = batch
+        self.requests: List[_Request] = []
+        self.cursor = 0  # next call index
+        self.history: List[dict] = []  # per call: {"cols": {sig: [b]}, "quarantine": ...}
+
+    def active(self) -> List[_Request]:
+        return [r for r in self.requests
+                if not r.satisfied and r.cursor < r.n_calls]
+
+
+class ServiceClient:
+    """A tenant-bound view of a :class:`CountingService`.
+
+    The convenience surface for callers that do not care about the
+    scheduling loop: ``submit`` tags requests with the tenant name;
+    ``count`` submits and drives the service until the request completes.
+    """
+
+    def __init__(self, service: "CountingService", tenant: str):
+        self.service = service
+        self.tenant = tenant
+
+    def submit(self, templates, **kw) -> Ticket:
+        return self.service.submit(self.tenant, templates, **kw)
+
+    def count(self, templates, **kw):
+        ticket = self.submit(templates, **kw)
+        self.service.run_until(ticket)
+        return ticket.result()
+
+
+class CountingService:
+    """A resident multi-tenant query engine over one loaded graph.
+
+    Parameters
+    ----------
+    graph:
+        The resident graph (loaded once; every request counts against it).
+    n_colors:
+        The service-wide shared color budget ``k``.  Fixed at construction:
+        all passes, all plans, and all solo-equivalent calls use this
+        ``k``, which is what makes coloring streams shareable and request
+        results independent of coalescing.  Requests with templates larger
+        than ``k`` are rejected.
+    backend / plan_opts:
+        Forwarded to the ``Counter`` facade — the service runs unmodified
+        on the single-device and the distributed backend.
+    config:
+        :class:`ServiceConfig` (queue bounds, fairness, cache capacity).
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        *,
+        n_colors: int,
+        backend: str = "auto",
+        plan_opts: Optional[Mapping[str, Any]] = None,
+        config: Optional[ServiceConfig] = None,
+    ):
+        from repro.api import Counter
+        from repro.core.templates import path_tree
+
+        self.graph = graph
+        self.k = int(n_colors)
+        self.config = config or ServiceConfig()
+        opts = dict(plan_opts or {})
+        opts["n_colors"] = self.k
+        # the facade needs a representative template; the service only ever
+        # builds family plans, so any tree within the budget works
+        self._counter = Counter.from_graph(
+            graph, path_tree(min(2, self.k) if self.k >= 2 else 1),
+            backend=backend, **opts,
+        )
+        self.backend = self._counter.backend
+        self._retry = (RetryPolicy(max_retries=self.config.max_retries)
+                       if self.config.max_retries is not None else None)
+        self._sleep = time.sleep  # injectable: tests retry without waiting
+
+        def _evict(entry):
+            self._counter._families.pop(entry["trees"], None)
+
+        self.plan_cache = PlanCache(self.config.plan_cache_capacity, _evict)
+        self._rep: Dict[tuple, Tree] = {}  # rooted sig -> representative Tree
+        self._passes: Dict[tuple, _Pass] = {}  # (key_fp) -> pass
+        self._tenants: Dict[str, dict] = {}
+        self._tenant_order: List[str] = []
+        self._admit_ptr = 0
+        self._drr_ptr = 0
+        self._next_id = 1
+        self.completed: List[Ticket] = []
+        self._stats = collections.Counter()
+
+    # ------------------------------------------------------------ admission
+    def client(self, tenant: str) -> ServiceClient:
+        return ServiceClient(self, tenant)
+
+    def set_weight(self, tenant: str, weight: float) -> None:
+        """DRR weight: a tenant's deficit grows by ``quantum * weight``."""
+        self._tenant(tenant)["weight"] = float(weight)
+
+    def _tenant(self, name: str) -> dict:
+        st = self._tenants.get(name)
+        if st is None:
+            st = self._tenants[name] = {
+                "queue": collections.deque(), "active": [],
+                "deficit": 0.0, "weight": 1.0, "charged": 0,
+            }
+            self._tenant_order.append(name)
+        return st
+
+    def _pending(self) -> int:
+        return sum(len(t["queue"]) + len(t["active"])
+                   for t in self._tenants.values())
+
+    def submit(
+        self,
+        tenant: str,
+        templates,
+        *,
+        n_iter: Optional[int] = None,
+        eps: Optional[float] = None,
+        delta: float = 0.1,
+        target_rsd: Optional[float] = None,
+        key: Optional[jax.Array] = None,
+    ) -> Ticket:
+        """Admit one query ``(templates, eps/n_iter, delta, target_rsd)``.
+
+        Validation happens here, synchronously: an oversized template, an
+        unsatisfiable ``eps``, or a full queue raise immediately — the
+        queue only ever holds servable work.  ``key`` defaults to the
+        service seed; requests sharing a key (the default) share one
+        coloring stream and coalesce into one family pass.
+        """
+        if isinstance(templates, (str, Tree)):
+            templates = (templates,)
+        trees_raw = tuple(
+            resolve_template(t) if isinstance(t, str) else t for t in templates
+        )
+        if not trees_raw:
+            raise ValueError("submit needs at least one template")
+        for t in trees_raw:
+            if t.n > self.k:
+                raise ValueError(
+                    f"template {t.name or t.n} has {t.n} vertices; the "
+                    f"service color budget is k={self.k}"
+                )
+        # deduplicate by rooted signature (isomorphic duplicates share a
+        # column; the ticket reports the deduplicated family)
+        sigs, trees = [], []
+        for t in trees_raw:
+            s = rooted_signature(t)
+            if s not in sigs:
+                sigs.append(s)
+                trees.append(t)
+                self._rep.setdefault(s, t)
+        trees, sigs = tuple(trees), tuple(sigs)
+
+        if n_iter is None and eps is not None:
+            bound_k = trees[0].n if len(trees) == 1 else self.k
+            n_iter = niter_bound(bound_k, eps, delta)
+            if n_iter > self.config.max_iters:
+                raise UnsatisfiableRequestError(
+                    f"eps={eps} (delta={delta}) needs {n_iter} iterations "
+                    f"(niter_bound at k={bound_k}); the service budget is "
+                    f"max_iters={self.config.max_iters}.  Relax eps, raise "
+                    f"the budget, or pass target_rsd for empirical stopping."
+                )
+        if n_iter is None:
+            if target_rsd is None:
+                raise ValueError("pass n_iter, eps, or target_rsd")
+            n_iter = self.config.max_iters
+        if n_iter > self.config.max_iters:
+            raise UnsatisfiableRequestError(
+                f"n_iter={n_iter} exceeds the service budget "
+                f"max_iters={self.config.max_iters}"
+            )
+        if self._pending() >= self.config.max_pending:
+            raise QueueFullError(
+                f"service queue is full ({self.config.max_pending} pending); "
+                f"retry after draining"
+            )
+        if key is None:
+            key = jax.random.key(self.config.seed)
+        names = tuple(t.name or f"tree{i}" for i, t in enumerate(trees))
+        ticket = Ticket(self._next_id, tenant, names)
+        self._next_id += 1
+        req = _Request(
+            ticket=ticket, tenant=tenant, trees=trees, sigs=sigs,
+            n_iter=int(n_iter), delta=float(delta), eps=eps,
+            target_rsd=target_rsd, key=key, key_fp=key_fingerprint(key),
+            batch=self.config.batch,
+            samples=np.zeros((0, len(trees)), np.float64),
+        )
+        ticket._request = req
+        ticket._service = self
+        self._tenant(tenant)["queue"].append(req)
+        self._stats["submitted"] += 1
+        return ticket
+
+    # ---------------------------------------------------------- plan cache
+    def _entry_for(self, sigs: Sequence[tuple]) -> dict:
+        """Compiled family plan + sample_fn for a signature set (cached)."""
+        from repro.core.templates import family_signature
+
+        canon = tuple(sorted(set(sigs)))
+        trees = tuple(self._rep[s] for s in canon)
+        fam_sig = family_signature(trees, n_colors=self.k)
+
+        def build():
+            st = self._counter._family(trees)
+            if st["sample_fn"] is None:  # distributed: keyed shard_map
+                from repro.core.distributed import keyed_sample_fn
+
+                st["sample_fn"] = keyed_sample_fn(
+                    st["plan"], self._counter._mesh, **self._counter._fn_kw
+                )
+            return {
+                "trees": trees,
+                "sample_fn": st["sample_fn"],
+                "columns": {s: i for i, s in enumerate(canon)},
+                "sigs": canon,
+            }
+
+        return self.plan_cache.get(fam_sig, build)
+
+    # ------------------------------------------------------------- sampling
+    def _call(self, entry: dict, key: jax.Array, batch: int, call_index: int):
+        """One backend dispatch over ``entry``'s family at one call key.
+
+        Returns ``(cols_by_sig, quarantine_record_or_None)``.
+        """
+        fn = entry["sample_fn"]
+        if self._retry is not None:
+            out = Supervisor(fn, self._retry, sleep=self._sleep)(
+                key, batch, call_index=call_index
+            )
+            if isinstance(out, QuarantinedBatch):
+                self._stats["quarantined"] += 1
+                return {}, out
+            out = np.asarray(out, np.float64)
+        else:
+            out = np.asarray(fn(key, batch), np.float64)
+        if out.ndim != 2:
+            raise ValueError(
+                f"family sample_fn must return [batch, T]; got {out.shape}"
+            )
+        cols = {s: out[:, entry["columns"][s]] for s in entry["sigs"]}
+        return cols, None
+
+    def _consume(self, req: _Request, cols: Dict[tuple, np.ndarray],
+                 quarantine: Optional[QuarantinedBatch]) -> None:
+        """Bank one call's outcome into a request and stream an update."""
+        if quarantine is not None:
+            req.quarantined = req.quarantined + (quarantine,)
+        else:
+            chunk = np.stack([cols[s] for s in req.sigs], axis=1)
+            req.samples = (chunk.copy() if req.samples.shape[0] == 0
+                           else np.concatenate([req.samples, chunk], axis=0))
+        req.cursor += 1
+        done = int(req.samples.shape[0])
+        if done:
+            rse = relative_se(req.samples)
+            ests = tuple(
+                float(np.atleast_1d(median_of_means(
+                    req.samples[:, i][: req.n_iter],
+                    num_groups_for(req.delta, min(done, req.n_iter)),
+                ))[0])
+                for i in range(req.samples.shape[1])
+            )
+            req.ticket.updates.append(ProgressUpdate(
+                niter=min(done, req.n_iter), estimates=ests, rse=rse,
+                target_met=(req.target_rsd is not None
+                            and rse <= req.target_rsd),
+            ))
+
+    def _stop_now(self, req: _Request) -> bool:
+        """The solo loop's pre-call early-stop predicate, verbatim."""
+        return (req.target_rsd is not None
+                and relative_se(req.samples) <= req.target_rsd)
+
+    # ------------------------------------------------------------ lifecycle
+    def _attach(self, req: _Request) -> None:
+        """Admit a request: join (or open) its key's pass, backfilling the
+        pass history call by call with the solo stop rule applied before
+        each consumed call — the mid-stream-join consistency contract."""
+        req.ticket.status = "active"
+        pa = self._passes.get(req.key_fp)
+        if pa is None:
+            pa = self._passes[req.key_fp] = _Pass(
+                req.key, req.key_fp, req.batch
+            )
+        # ---- backfill the already-consumed prefix (mid-stream join)
+        own_entry = None
+        while req.cursor < min(pa.cursor, req.n_calls):
+            if self._stop_now(req):
+                req.satisfied = True
+                break
+            i = req.cursor
+            slot = pa.history[i]
+            if slot["quarantine"] is not None:
+                self._consume(req, {}, slot["quarantine"])
+                continue
+            have = slot["cols"]
+            if all(s in have for s in req.sigs):
+                self._stats["history_rides"] += 1
+                self._consume(req, have, None)
+                continue
+            # recompute this call for the request's own family only —
+            # prefix-stable keys make the values the solo values
+            if own_entry is None:
+                own_entry = self._entry_for(req.sigs)
+            cols, q = self._call(
+                own_entry, call_key(pa.key, i), pa.batch, call_index=i
+            )
+            self._stats["backfill_calls"] += 1
+            have.update(cols)  # future joiners ride free
+            self._consume(req, cols, q)
+        if self._finalize_if_done(req):
+            if not pa.requests and not pa.active():
+                self._maybe_drop_pass(pa)
+            return
+        pa.requests.append(req)
+
+    def _maybe_drop_pass(self, pa: _Pass) -> None:
+        if not pa.requests:
+            self._passes.pop(pa.key_fp, None)
+
+    def _finalize_if_done(self, req: _Request) -> bool:
+        if req.satisfied or req.cursor >= req.n_calls:
+            self._finalize(req)
+            return True
+        return False
+
+    def _finalize(self, req: _Request) -> None:
+        from repro.api import CountResult, MultiCountResult
+
+        t = req.ticket
+        if req.samples.reshape(-1)[: req.n_iter].shape[0] == 0:
+            t.status = "failed"
+            t.error = (
+                f"all {len(req.quarantined)} batches were quarantined: "
+                + "; ".join(str(q) for q in req.quarantined)
+            )
+            t.finished_at = time.perf_counter()
+            self._stats["failed"] += 1
+            self.completed.append(t)
+            self._remove_active(req)
+            return
+        elapsed = time.perf_counter() - t.submitted_at
+        if not req.is_multi:
+            mom, mean, rsd, used, ests = aggregate_single(
+                req.samples, req.n_iter, req.delta
+            )
+            t._result = CountResult(
+                estimate=mom, mean=mean, relative_sd=rsd, niter=used,
+                samples=ests, backend=self.backend,
+                template=t.templates[0], graph=self.graph.name,
+                delta=req.delta, eps=req.eps, elapsed_s=elapsed,
+                quarantined=req.quarantined,
+            )
+        else:
+            from repro.core.templates import partition_tree
+
+            ests = req.samples[: req.n_iter]
+            used = int(ests.shape[0])
+            mom = np.atleast_1d(
+                median_of_means(ests, num_groups_for(req.delta, used))
+            )
+            means = ests.mean(axis=0)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                rsds = np.where(
+                    means != 0, ests.std(axis=0) / np.abs(means), np.inf
+                )
+            entry = self._entry_for(req.sigs)  # cache hit: already compiled
+            plan = self._counter._families[entry["trees"]]["plan"]
+            dag = plan.dag if self.backend == "single" else plan.program
+            t._result = MultiCountResult(
+                templates=t.templates, estimates=mom, means=means,
+                relative_sds=rsds, samples=ests, niter=used,
+                backend=self.backend, graph=self.graph.name, k=self.k,
+                unique_tables=len(dag.nodes),
+                chain_tables=sum(
+                    len(partition_tree(tr).nodes) for tr in plan.templates
+                ),
+                delta=req.delta,
+                eps=req.eps, elapsed_s=elapsed, quarantined=req.quarantined,
+            )
+        t.status = "done"
+        t.finished_at = time.perf_counter()
+        self._stats["completed"] += 1
+        self.completed.append(t)
+        self._remove_active(req)
+
+    def _remove_active(self, req: _Request) -> None:
+        st = self._tenants.get(req.tenant)
+        if st is not None and req in st["active"]:
+            st["active"].remove(req)
+
+    # ------------------------------------------------------------ the loop
+    def _admit_round(self) -> int:
+        """Round-robin admission into free active slots."""
+        n_active = sum(len(t["active"]) for t in self._tenants.values())
+        admitted = 0
+        order = self._tenant_order
+        if not order:
+            return 0
+        visits = 0
+        while n_active + admitted < self.config.max_active:
+            if visits >= len(order):
+                break
+            name = order[self._admit_ptr % len(order)]
+            self._admit_ptr += 1
+            st = self._tenants[name]
+            if not st["queue"]:
+                visits += 1
+                continue
+            visits = 0
+            req = st["queue"].popleft()
+            st["active"].append(req)
+            self._attach(req)  # may finalize (and deregister) immediately
+            admitted += 1
+        return admitted
+
+    def _runnable(self, st: dict) -> List[_Request]:
+        return [r for r in st["active"]
+                if not r.ticket.done
+                and not r.satisfied and r.cursor < r.n_calls]
+
+    def step(self) -> bool:
+        """One scheduling decision: admit, then advance one pass by one
+        call on behalf of the deficit-round-robin-selected tenant.
+
+        Deficit round-robin proper: each replenish round credits every
+        *runnable* tenant ``quantum * weight``, and a tenant is served
+        (one backend call each visit) for as long as its deficit lasts —
+        a weight-3 tenant gets three calls per round to a weight-1
+        tenant's one.  Idle tenants forfeit their deficit (the classic
+        rule: credit never accumulates across idle periods).
+
+        Returns ``False`` when the service is idle (nothing queued or
+        active) — the ``run_until_idle`` termination condition.
+        """
+        self._admit_round()
+        order = self._tenant_order
+        while order:
+            for _ in range(len(order)):
+                name = order[self._drr_ptr % len(order)]
+                st = self._tenants[name]
+                runnable = self._runnable(st)
+                if runnable and st["deficit"] >= 1.0:
+                    st["deficit"] -= 1.0
+                    st["charged"] += 1
+                    self._advance_pass(self._passes.get(runnable[0].key_fp))
+                    self._drr_ptr += 1
+                    return True
+                self._drr_ptr += 1
+            # no tenant is both runnable and funded: replenish one round
+            rates = []
+            for name in order:
+                st = self._tenants[name]
+                if self._runnable(st):
+                    inc = self.config.quantum * st["weight"]
+                    st["deficit"] += inc
+                    rates.append(inc)
+                else:
+                    st["deficit"] = 0.0
+            if not rates:
+                # nothing active; not idle while queued work remains
+                # (admission picks it up next step)
+                return self._pending() > 0
+            if max(rates) <= 0:
+                raise RuntimeError(
+                    "deadlock: every runnable tenant has a non-positive "
+                    "DRR weight/quantum"
+                )
+        return self._pending() > 0
+
+    def _advance_pass(self, pa: _Pass) -> None:
+        """One live backend call; every active request in the pass rides."""
+        for r in list(pa.requests):
+            if not r.satisfied and self._stop_now(r):
+                r.satisfied = True
+            if r.satisfied or r.cursor >= r.n_calls:
+                self._finalize_if_done(r)
+                pa.requests.remove(r)
+        active = pa.active()
+        if not active:
+            self._maybe_drop_pass(pa)
+            return
+        union = tuple(sorted(set(s for r in active for s in r.sigs)))
+        entry = self._entry_for(union)
+        i = pa.cursor
+        cols, q = self._call(entry, call_key(pa.key, i), pa.batch,
+                             call_index=i)
+        pa.history.append({"cols": dict(cols), "quarantine": q})
+        pa.cursor += 1
+        self._stats["pass_calls"] += 1
+        self._stats["request_calls"] += len(active)
+        for r in active:
+            self._consume(r, cols, q)
+            if r.cursor >= r.n_calls or self._stop_now(r):
+                if self._stop_now(r):
+                    r.satisfied = True
+                if self._finalize_if_done(r):
+                    pa.requests.remove(r)
+        if not pa.requests:
+            self._maybe_drop_pass(pa)
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> List[Ticket]:
+        """Drive the loop to quiescence; returns tickets completed so far."""
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.completed
+
+    def run_until(self, ticket: Ticket, max_steps: int = 1_000_000) -> Ticket:
+        for _ in range(max_steps):
+            if ticket.done or not self.step():
+                break
+        return ticket
+
+    # ------------------------------------------------------------ plumbing
+    def _export_state(self, req: _Request) -> EstimatorState:
+        """A solo-compatible EstimatorState for the request's progress.
+
+        The signature matches what ``Counter.estimate`` (single template,
+        ``n_colors=k``) / ``estimate_many`` computes for the same workload,
+        so the exported state resumes under the stand-alone estimator."""
+        g = self.graph
+        if req.is_multi:
+            names = ",".join(req.ticket.templates)
+            what = f"family={names}|k={self.k}"
+            extra = (f"{g.name}|V={g.n}|E={g.num_edges}|{what}|{self.backend}")
+        else:
+            extra = (f"{g.name}|V={g.n}|E={g.num_edges}|"
+                     f"{req.ticket.templates[0]}|{self.backend}|k={self.k}")
+        samples = req.samples if req.is_multi else req.samples.reshape(-1)
+        return EstimatorState(
+            signature=run_signature(
+                req.n_iter, req.batch, req.delta, req.key, extra=extra
+            ),
+            n_iter=req.n_iter, batch=req.batch, delta=req.delta,
+            cursor=req.cursor, samples=samples.copy(),
+            quarantined=req.quarantined,
+        )
+
+    def stats(self) -> dict:
+        """Service counters: cache behavior, coalescing, fairness, volume."""
+        s = dict(self._stats)
+        pass_calls = s.get("pass_calls", 0)
+        s["coalescing_factor"] = (
+            s.get("request_calls", 0) / pass_calls if pass_calls else 0.0
+        )
+        s["cache"] = {
+            "hits": self.plan_cache.hits,
+            "misses": self.plan_cache.misses,
+            "evictions": self.plan_cache.evictions,
+            "hit_rate": self.plan_cache.hit_rate,
+            "entries": len(self.plan_cache),
+        }
+        s["tenants"] = {
+            name: {"charged": st["charged"], "queued": len(st["queue"]),
+                   "active": len(st["active"]), "weight": st["weight"]}
+            for name, st in self._tenants.items()
+        }
+        return s

@@ -617,6 +617,103 @@ def test_robustness():
     )
 
 
+def test_elastic_coloring():
+    """Shard-count independence of the keyed coloring stream.
+
+    ``global_coloring`` makes the per-call coloring a function of
+    ``(key, n, k)`` only: the same key must yield the same samples on a
+    1-shard and an 8-shard plan (the ROADMAP elasticity contract), and both
+    must equal the host-reconstructed coloring fed to the brute-force
+    oracle.
+    """
+    from repro.core import erdos_renyi
+    from repro.core.brute_force import count_colorful_maps
+    from repro.core.distributed import (
+        build_distributed_plan,
+        global_coloring,
+        keyed_sample_fn,
+    )
+    from repro.core.templates import path_tree
+
+    g = erdos_renyi(97, 5.0, seed=7)  # ragged shard sizes on purpose
+    tree = path_tree(3)
+    key, batch = jax.random.key(23), 6
+
+    samples = {}
+    for shards in (1, 8):
+        mesh = make_mesh((shards,), ("data",))
+        plan = build_distributed_plan(g, tree, shards)
+        samples[shards] = np.asarray(
+            keyed_sample_fn(plan, mesh, mode="pipeline")(key, batch)
+        )
+    check(
+        "elastic_coloring_P1_vs_P8",
+        np.allclose(samples[1], samples[8], rtol=1e-6),
+        f"P1 {samples[1][:3]} P8 {samples[8][:3]}",
+    )
+
+    # host reconstruction: the same split + global_coloring draw, counted
+    # by the exponential oracle
+    plan = build_distributed_plan(g, tree, 8)
+    want = np.array([
+        count_colorful_maps(
+            g, tree, np.asarray(global_coloring(kd, g.n, tree.n))
+        ) * plan.scale
+        for kd in jax.random.split(key, batch)
+    ])
+    check(
+        "elastic_coloring_host_oracle",
+        np.allclose(samples[8], want, rtol=1e-6),
+        f"got {samples[8][:3]} want {want[:3]}",
+    )
+
+
+def test_service():
+    """Counting service over 8 real shards: coalesced family passes must
+    match solo runs (same key/batch/n_colors) sample for sample."""
+    from repro.api import Counter
+    from repro.core import erdos_renyi
+    from repro.core.templates import path_tree
+    from repro.serve import CountingService, ServiceConfig
+
+    g = erdos_renyi(97, 5.0, seed=7)
+    k, batch = 4, 4
+    p4 = path_tree(4)
+    svc = CountingService(
+        g, n_colors=k, backend="distributed",
+        plan_opts={"num_shards": 8, "mode": "pipeline"},
+        config=ServiceConfig(batch=batch),
+    )
+    ta = svc.client("alice").submit("u3-1", n_iter=16)
+    tb = svc.client("bob").submit(("u3-1", p4), n_iter=8)
+    svc.run_until_idle()
+    coalesced = svc.stats()["coalescing_factor"]
+
+    key = jax.random.key(0)
+    sa = Counter.from_graph(
+        g, "u3-1", backend="distributed", num_shards=8, mode="pipeline",
+        n_colors=k,
+    ).estimate(16, key=key, batch=batch)
+    sb = Counter.from_graph(
+        g, "u3-1", backend="distributed", num_shards=8, mode="pipeline",
+        n_colors=k,
+    ).estimate_many(("u3-1", p4), 8, key=key, batch=batch)
+    ra, rb = ta.result(), tb.result()
+    check(
+        "service_solo_scalar_P8",
+        np.allclose(np.asarray(ra.samples), np.asarray(sa.samples),
+                    rtol=1e-6),
+        f"svc {np.asarray(ra.samples)[:3]} solo {np.asarray(sa.samples)[:3]}",
+    )
+    check(
+        "service_solo_family_P8",
+        np.allclose(np.asarray(rb.samples), np.asarray(sb.samples),
+                    rtol=1e-6),
+        f"svc {np.asarray(rb.samples)[0]} solo {np.asarray(sb.samples)[0]}",
+    )
+    check("service_coalesced_P8", coalesced > 1.0, f"factor {coalesced:.2f}")
+
+
 def main():
     test_ring_collectives()
     test_grouped_exchange()
@@ -626,6 +723,8 @@ def main():
     test_multi_template()
     test_compaction()
     test_robustness()
+    test_elastic_coloring()
+    test_service()
     test_moe_manual_vs_dense()
     test_elastic_restore()
     if FAILURES:

@@ -1,0 +1,359 @@
+"""Counting-service tests (DESIGN.md §17): solo-equivalence of coalesced
+passes, mid-stream joins, plan-cache behavior, fair scheduling, admission
+errors, quarantine surfacing, and state export.
+
+Everything here runs on the single-device backend, where the shared-k
+family contract is bit-exact — the solo comparisons use
+``np.testing.assert_array_equal``, not allclose.  The 8-shard analogues
+(rtol 1e-6 across psum orderings) live in ``_dist_worker.py``.
+"""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import Counter  # noqa: E402
+from repro.core import erdos_renyi  # noqa: E402
+from repro.core.estimator import estimate_counts  # noqa: E402
+from repro.serve import (  # noqa: E402
+    CountingService,
+    PlanCache,
+    QueueFullError,
+    ServiceConfig,
+    UnsatisfiableRequestError,
+)
+from repro.testing import faults  # noqa: E402
+
+K = 5  # service-wide color budget for every test service
+BATCH = 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(60, 8.0, seed=1)
+
+
+def service(graph, **cfg_kw):
+    cfg = ServiceConfig(batch=BATCH, **cfg_kw)
+    return CountingService(graph, n_colors=K, backend="single", config=cfg)
+
+
+def solo(graph, template, n_iter, **kw):
+    c = Counter.from_graph(graph, template, backend="single", n_colors=K)
+    return c.estimate(n_iter, key=jax.random.key(0), batch=BATCH, **kw)
+
+
+def solo_many(graph, templates, n_iter, **kw):
+    c = Counter.from_graph(graph, templates[0], backend="single", n_colors=K)
+    return c.estimate_many(templates, n_iter, key=jax.random.key(0),
+                           batch=BATCH, **kw)
+
+
+class TestSoloEquivalence:
+    def test_three_tenant_coalesced_bit_identical(self, graph):
+        """The acceptance workload: three tenants, overlapping templates,
+        one shared key — every request's samples and estimate must equal
+        the solo run's bit for bit."""
+        svc = service(graph)
+        ta = svc.client("alice").submit("u3-1", n_iter=24)
+        tb = svc.client("bob").submit(("u3-1", "u5-2"), n_iter=16)
+        tc = svc.client("carol").submit("u5-2", n_iter=20)
+        svc.run_until_idle()
+
+        ra, rb, rc = ta.result(), tb.result(), tc.result()
+        sa = solo(graph, "u3-1", 24)
+        sb = solo_many(graph, ("u3-1", "u5-2"), 16)
+        sc = solo(graph, "u5-2", 20)
+        np.testing.assert_array_equal(np.asarray(ra.samples),
+                                      np.asarray(sa.samples))
+        np.testing.assert_array_equal(np.asarray(rb.samples),
+                                      np.asarray(sb.samples))
+        np.testing.assert_array_equal(np.asarray(rc.samples),
+                                      np.asarray(sc.samples))
+        assert ra.estimate == sa.estimate
+        assert np.array_equal(rb.estimates, sb.estimates)
+        assert rc.estimate == sc.estimate
+        # and the passes actually coalesced: fewer backend calls than the
+        # three solo runs would have made
+        stats = svc.stats()
+        assert stats["coalescing_factor"] > 1.0
+        assert stats["pass_calls"] < 24 // BATCH + 16 // BATCH + 20 // BATCH
+
+    def test_early_stop_matches_solo(self, graph):
+        """target_rsd stopping inside a coalesced pass truncates at the
+        same call as the stand-alone estimator."""
+        svc = service(graph)
+        t1 = svc.client("a").submit("u3-1", n_iter=60, target_rsd=0.25)
+        t2 = svc.client("b").submit("u5-2", n_iter=60)
+        svc.run_until_idle()
+        s1 = solo(graph, "u3-1", 60, target_rsd=0.25)
+        r1 = t1.result()
+        assert r1.niter == s1.niter  # stopped at the same call boundary
+        np.testing.assert_array_equal(np.asarray(r1.samples),
+                                      np.asarray(s1.samples))
+        assert r1.estimate == s1.estimate
+        # the co-tenant keeps running to its own budget, unperturbed
+        r2 = t2.result()
+        s2 = solo(graph, "u5-2", 60)
+        np.testing.assert_array_equal(np.asarray(r2.samples),
+                                      np.asarray(s2.samples))
+
+    def test_distinct_keys_distinct_streams(self, graph):
+        """Requests with different keys get different passes and still
+        match their own solo runs."""
+        svc = service(graph)
+        t1 = svc.client("a").submit("u3-1", n_iter=12)
+        t2 = svc.client("a").submit("u3-1", n_iter=12, key=jax.random.key(9))
+        svc.run_until_idle()
+        assert not np.array_equal(np.asarray(t1.result().samples),
+                                  np.asarray(t2.result().samples))
+        c = Counter.from_graph(graph, "u3-1", backend="single", n_colors=K)
+        s2 = c.estimate(12, key=jax.random.key(9), batch=BATCH)
+        np.testing.assert_array_equal(np.asarray(t2.result().samples),
+                                      np.asarray(s2.samples))
+
+
+class TestMidStreamJoin:
+    def test_join_rides_history(self, graph):
+        """A later request whose templates are already in the pass
+        backfills from history without any backend call."""
+        svc = service(graph)
+        ta = svc.client("a").submit(("u3-1", "u5-2"), n_iter=40)
+        for _ in range(4):
+            svc.step()
+        tb = svc.client("b").submit("u3-1", n_iter=16)
+        svc.run_until_idle()
+        stats = svc.stats()
+        assert stats.get("history_rides", 0) > 0
+        assert stats.get("backfill_calls", 0) == 0
+        np.testing.assert_array_equal(
+            np.asarray(tb.result().samples),
+            np.asarray(solo(graph, "u3-1", 16).samples),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ta.result().samples),
+            np.asarray(solo_many(graph, ("u3-1", "u5-2"), 40).samples),
+        )
+
+    def test_join_backfills_missing_columns(self, graph):
+        """A later request with a template the pass has not computed
+        recomputes the consumed prefix at the same per-call keys."""
+        svc = service(graph)
+        ta = svc.client("a").submit("u3-1", n_iter=40)
+        for _ in range(4):
+            svc.step()
+        tb = svc.client("b").submit("u5-2", n_iter=16)
+        svc.run_until_idle()
+        assert svc.stats().get("backfill_calls", 0) > 0
+        np.testing.assert_array_equal(
+            np.asarray(tb.result().samples),
+            np.asarray(solo(graph, "u5-2", 16).samples),
+        )
+
+    def test_join_with_target_rsd_stops_consistently(self, graph):
+        """The issue's bugfix: a request joining mid-stream applies the
+        stop rule during backfill exactly as the solo loop would — it must
+        not consume the whole banked prefix first."""
+        svc = service(graph)
+        svc.client("a").submit("u3-1", n_iter=80)
+        for _ in range(12):
+            svc.step()
+        tb = svc.client("b").submit("u3-1", n_iter=80, target_rsd=0.25)
+        svc.run_until_idle()
+        sb = solo(graph, "u3-1", 80, target_rsd=0.25)
+        rb = tb.result()
+        assert rb.niter == sb.niter
+        np.testing.assert_array_equal(np.asarray(rb.samples),
+                                      np.asarray(sb.samples))
+        assert rb.estimate == sb.estimate
+
+
+class TestPlanCache:
+    def test_repeat_requests_hit(self, graph):
+        svc = service(graph)
+        svc.client("a").submit(("u3-1", "u5-2"), n_iter=8)
+        svc.run_until_idle()
+        svc.client("b").submit(("u5-2", "u3-1"), n_iter=8)  # order-insensitive
+        svc.run_until_idle()
+        assert svc.plan_cache.hits > 0
+        assert svc.plan_cache.misses == 1
+        assert svc.plan_cache.hit_rate > 0
+
+    def test_lru_eviction_purges_family_state(self, graph):
+        svc = service(graph, plan_cache_capacity=1)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        svc.client("a").submit("u5-2", n_iter=8)
+        svc.run_until_idle()
+        assert svc.plan_cache.evictions >= 1
+        assert len(svc.plan_cache) == 1
+        # the Counter-side compiled state went with it
+        assert len(svc._counter._families) <= 1
+
+    def test_unit_cache_standalone(self):
+        calls = []
+        cache = PlanCache(2, on_evict=lambda e: calls.append(e["trees"]))
+        cache.get(("a",), lambda: {"trees": "A"})
+        cache.get(("b",), lambda: {"trees": "B"})
+        cache.get(("a",), lambda: {"trees": "A2"})  # hit; refreshes LRU slot
+        cache.get(("c",), lambda: {"trees": "C"})  # evicts b, not a
+        assert cache.hits == 1 and cache.misses == 3
+        assert calls == ["B"]
+        assert ("a",) in cache and ("b",) not in cache
+
+
+class TestScheduling:
+    def test_drr_weights_bias_service_rate(self, graph):
+        """Distinct keys → distinct passes; the weight-3 tenant gets ~3x
+        the backend calls over any window."""
+        svc = service(graph)
+        svc.set_weight("heavy", 3.0)
+        svc.client("light").submit("u3-1", n_iter=96,
+                                   key=jax.random.key(1))
+        svc.client("heavy").submit("u3-1", n_iter=96,
+                                   key=jax.random.key(2))
+        for _ in range(17):  # partial window: both still running
+            svc.step()
+        ts = svc.stats()["tenants"]
+        assert ts["heavy"]["charged"] >= 2 * ts["light"]["charged"]
+        svc.run_until_idle()
+
+    def test_coalesced_pass_charges_scheduler_once(self, graph):
+        """Co-tenants of one pass ride free: request_calls grows per rider,
+        charged grows only for the scheduling tenant."""
+        svc = service(graph)
+        svc.client("a").submit("u3-1", n_iter=24)
+        svc.client("b").submit("u3-1", n_iter=24)
+        svc.run_until_idle()
+        stats = svc.stats()
+        assert stats["request_calls"] == 2 * stats["pass_calls"]
+        total_charged = sum(t["charged"] for t in stats["tenants"].values())
+        assert total_charged == stats["pass_calls"]
+
+    def test_bounded_queue_rejects(self, graph):
+        svc = service(graph, max_pending=2)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.client("a").submit("u3-1", n_iter=8)
+        with pytest.raises(QueueFullError):
+            svc.client("b").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        svc.client("b").submit("u3-1", n_iter=8)  # drained: admits again
+        svc.run_until_idle()
+
+
+class TestAdmissionErrors:
+    def test_unsatisfiable_eps_raises_at_submit(self, graph):
+        svc = service(graph, max_iters=1000)
+        with pytest.raises(UnsatisfiableRequestError) as ei:
+            svc.client("a").submit("u5-2", eps=0.01, delta=0.1)
+        msg = str(ei.value)
+        assert "max_iters" in msg and "eps" in msg
+
+    def test_unsatisfiable_n_iter_raises_at_submit(self, graph):
+        svc = service(graph, max_iters=100)
+        with pytest.raises(UnsatisfiableRequestError):
+            svc.client("a").submit("u3-1", n_iter=101)
+
+    def test_oversized_template_rejected(self, graph):
+        svc = service(graph)  # K = 5
+        with pytest.raises(ValueError, match="color budget"):
+            svc.client("a").submit("u7-2", n_iter=8)
+
+    def test_satisfiable_eps_admits(self, graph):
+        svc = service(graph, max_iters=10_000)
+        t = svc.client("a").submit("u3-1", eps=2.0, delta=0.5)
+        svc.run_until_idle()
+        assert t.status == "done"
+
+
+class TestStreamingAndState:
+    def test_progress_updates_stream(self, graph):
+        svc = service(graph)
+        t = svc.client("a").submit("u3-1", n_iter=24)
+        svc.run_until_idle()
+        assert len(t.updates) == 24 // BATCH
+        niters = [u.niter for u in t.updates]
+        assert niters == sorted(niters) and niters[-1] == 24
+        assert t.latency_s is not None and t.latency_s >= 0
+
+    def test_state_export_resumes_solo(self, graph):
+        """A partially-served request drains into the stand-alone
+        estimator and finishes bit-exact with the uninterrupted solo run."""
+        svc = service(graph)
+        t = svc.client("a").submit("u5-2", n_iter=32)
+        for _ in range(4):
+            svc.step()
+        st = t.state()
+        assert 0 < st.cursor < 32 // BATCH
+        c = Counter.from_graph(graph, "u5-2", backend="single", n_colors=K)
+        full = c.estimate(32, key=jax.random.key(0), batch=BATCH)
+        res = estimate_counts(c.sample_fn, 32, jax.random.key(0), batch=BATCH,
+                              resume=st, signature_extra=c._signature_extra())
+        assert res.resumed_from == st.cursor * BATCH  # iterations, not calls
+        np.testing.assert_array_equal(res.samples, np.asarray(full.samples))
+        assert res.estimate == full.estimate
+
+    def test_result_before_done_raises(self, graph):
+        svc = service(graph)
+        t = svc.client("a").submit("u3-1", n_iter=8)
+        with pytest.raises(RuntimeError, match="queued"):
+            t.result()
+
+
+class TestQuarantine:
+    def test_persistent_fault_quarantined_per_request(self, graph):
+        """A batch that fails every retry is quarantined; the request
+        completes on the healthy samples and surfaces the record."""
+        svc = service(graph, max_retries=1)
+        svc._sleep = lambda _: None
+        t = svc.client("a").submit("u3-1", n_iter=12)
+        # occurrences count attempts: call 0 is attempts 0-1 (1 + 1 retry)
+        with faults.active(faults.inject("sample.raise", at=(0, 1))):
+            svc.run_until_idle()
+        r = t.result()
+        assert t.status == "done"
+        assert len(r.quarantined) == 1
+        assert r.quarantined[0].call_index == 0
+        assert r.niter == 8  # 12 budgeted minus the quarantined batch
+        # healthy samples are the solo run's calls 1..2 (same keys)
+        s = solo(graph, "u3-1", 12)
+        np.testing.assert_array_equal(np.asarray(r.samples),
+                                      np.asarray(s.samples)[BATCH:])
+
+    def test_all_quarantined_fails_clearly(self, graph):
+        svc = service(graph, max_retries=0)
+        svc._sleep = lambda _: None
+        t = svc.client("a").submit("u3-1", n_iter=4)
+        with faults.active(faults.inject("sample.raise", at=None)):
+            svc.run_until_idle()
+        assert t.status == "failed"
+        assert "quarantined" in t.error
+        with pytest.raises(RuntimeError, match="failed"):
+            t.result()
+
+
+class TestFacade:
+    def test_counter_serve_roundtrip(self, graph):
+        c = Counter.from_graph(graph, "u5-2", backend="single", n_colors=K)
+        svc = c.serve(config=ServiceConfig(batch=BATCH))
+        assert svc.k == K  # inherited the Counter's n_colors
+        t = svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until(t)
+        np.testing.assert_array_equal(np.asarray(t.result().samples),
+                                      np.asarray(solo(graph, "u3-1", 8).samples))
+
+    def test_client_count_convenience(self, graph):
+        svc = service(graph)
+        r = svc.client("a").count("u3-1", n_iter=8)
+        assert r.niter == 8
+
+    def test_api_reexports(self):
+        import repro.api as api
+
+        assert api.CountingService is CountingService
+        assert api.ServiceConfig is ServiceConfig

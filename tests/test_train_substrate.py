@@ -156,14 +156,3 @@ class TestEndToEnd:
         assert max(jax.tree.leaves(d)) < 5e-3
 
 
-class TestServe:
-    def test_generate_shapes(self):
-        from repro.serve import ServeConfig, ServingEngine
-
-        cfg = get_arch("smollm-360m").reduced()
-        model = build_model(cfg)
-        eng = ServingEngine(model, ServeConfig(batch_size=2, max_new_tokens=4))
-        prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8))
-        out = eng.generate(prompts.astype(np.int32))
-        assert out.shape == (2, 4)
-        assert (out >= 0).all() and (out < cfg.vocab_size).all()

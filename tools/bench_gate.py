@@ -42,7 +42,11 @@ import sys
 #: a checkpoint-cost cliff fails with its own label, not as generic timing
 ROBUSTNESS_KEYS = ("ckpt_",)
 TIMING_KEYS = ("_us", "iter_us", "_s")
-HIGHER_BETTER_KEYS = ("speedup",)
+#: higher-is-better metrics: timing-derived speedups, plus the counting
+#: service's reuse signals (bench_service's plan-cache hit rate and
+#: pass-coalescing factor) — a drop means cross-request amortization
+#: regressed, an increase is pure win and must never fail the gate
+HIGHER_BETTER_KEYS = ("speedup", "hit_rate", "coalescing")
 STRUCTURAL_KEYS = (
     "pad_frac",
     "waste",

@@ -71,19 +71,24 @@ def _graph(smoke: bool):
 
 def exchange_bytes(plan) -> dict:
     """Per-iteration, per-device wire volume of every exchange mode family,
-    dense vs compacted (plan math only — nothing runs)."""
+    dense vs compacted — at every wire dtype (§18).  Plan math only
+    (nothing runs); the ``*bytes*`` keys are structural in the CI bench
+    gate, so the wire volume is held lower-is-better per PR."""
     spec = plan.compaction
-    a2a_dense = a2a_compact = ring_dense = ring_compact = 0
-    for i, nd in enumerate(plan.program.nodes):
-        if nd.is_leaf:
-            continue
-        d, c = node_exchange_bytes(plan, i, "alltoall")
-        a2a_dense += d
-        a2a_compact += c
-        d, c = node_exchange_bytes(plan, i, "ring")
-        ring_dense += d
-        ring_compact += c
-    return {
+
+    def totals(mode, wire):
+        dense = compact = 0
+        for i, nd in enumerate(plan.program.nodes):
+            if nd.is_leaf:
+                continue
+            d, c = node_exchange_bytes(plan, i, mode, wire_dtype=wire)
+            dense += d
+            compact += c
+        return dense, compact
+
+    a2a_dense, a2a_compact = totals("alltoall", "float32")
+    ring_dense, ring_compact = totals("ring", "float32")
+    out = {
         "num_shards": plan.num_shards,
         "r_pad": plan.r_pad,
         "exchange_caps_engaged": len(spec.exchange_caps) if spec else 0,
@@ -95,6 +100,16 @@ def exchange_bytes(plan) -> dict:
         "ring_bytes_compact": ring_compact,
         "ring_bytes_compact_frac": ring_compact / max(ring_dense, 1),
     }
+    # narrow wires: compacted+compressed volume vs the float32 dense
+    # baseline (the router's own byte counts — same shared formula)
+    for wire in ("int16", "int8"):
+        _, a2a_w = totals("alltoall", wire)
+        _, ring_w = totals("ring", wire)
+        out[f"a2a_bytes_compact_{wire}"] = a2a_w
+        out[f"ring_bytes_compact_{wire}"] = ring_w
+        out[f"a2a_bytes_{wire}_frac"] = a2a_w / max(a2a_dense, 1)
+        out[f"ring_bytes_{wire}_frac"] = ring_w / max(ring_dense, 1)
+    return out
 
 
 def bench_template(tname: str, g, smoke: bool) -> dict:
@@ -217,13 +232,18 @@ def _dist_worker(smoke: bool):
         )
         sd = keyed_sample_fn(pd, mesh, mode="pipeline")
         sc = keyed_sample_fn(pc, mesh, mode="pipeline")
+        sw = keyed_sample_fn(pc, mesh, mode="pipeline", wire_dtype="int16")
         assert np.array_equal(sd(key, BATCH), sc(key, BATCH)), tname
+        assert np.array_equal(sd(key, BATCH), sw(key, BATCH)), tname
         sec_dense = time_fn(lambda: sd(key, BATCH), iters=3)
         sec_comp = time_fn(lambda: sc(key, BATCH), iters=3)
+        sec_wire = time_fn(lambda: sw(key, BATCH), iters=3)
         out[tname] = {
             "dense_iter_us": sec_dense / BATCH * 1e6,
             "compact_iter_us": sec_comp / BATCH * 1e6,
+            "compact_int16_iter_us": sec_wire / BATCH * 1e6,
             "speedup_compact": sec_dense / sec_comp,
+            "speedup_int16": sec_dense / sec_wire,
         }
     print("DIST_RESULT " + json.dumps(out), flush=True)
 

@@ -89,11 +89,14 @@ _SINGLE_OPTS = frozenset(
 #: plan_opts understood by the distributed backend (``impl``/``fuse`` carry
 #: the same kernel-routing semantics as the single-device engine;
 #: ``bucket_tile`` is the §3.3 task size of the tiled bucket layout; the
-#: compaction knobs compact the exchange slabs too)
+#: compaction knobs compact the exchange slabs too; ``wire_dtype`` narrows
+#: the exchange payload and ``adaptive`` selects the router's cost model,
+#: §18)
 _DIST_OPTS = frozenset(
     {"root", "bucket_tile", "num_shards", "mode", "group_factor", "impl",
      "fuse", "mesh", "data_axis", "iter_axis", "n_colors",
-     "compact", "density_threshold", "capacity_factor", "probes"}
+     "compact", "density_threshold", "capacity_factor", "probes",
+     "wire_dtype", "adaptive"}
 )
 #: opts consumed by build_distributed_plan (rest go to make_count_fn)
 _DIST_PLAN_OPTS = frozenset(
@@ -358,7 +361,7 @@ class Counter:
         sharing it.
         """
         allowed = {"mode", "group_factor", "impl", "fuse", "iter_axis",
-                   "bucket_tile"}
+                   "bucket_tile", "wire_dtype", "adaptive"}
         if self.backend != "distributed":
             raise ValueError(
                 f"with_options is for the distributed backend; this Counter "

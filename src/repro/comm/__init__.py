@@ -22,9 +22,23 @@ from .adaptive import (  # noqa: F401
     HockneyModel,
     V5E_ICI,
     V5E_DCI,
+    calibrate,
     choose_mode,
+    choose_mode_full,
     overlap_ratio,
     pipeline_cost,
     fused_cost,
 )
-from .compress import int8_compress, int8_decompress, compressed_ring_reduce_scatter  # noqa: F401
+from .compress import (  # noqa: F401
+    WIRE_DTYPES,
+    WIRE_ESCALATION,
+    int8_compress,
+    int8_decompress,
+    compressed_ring_reduce_scatter,
+    mask_column_count,
+    mask_columns,
+    mask_from_columns,
+    narrow_cast,
+    widen,
+    wire_itemsize,
+)

@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+import time
+from typing import Dict, Tuple
 
 __all__ = [
     "HockneyModel",
@@ -31,6 +32,8 @@ __all__ = [
     "pipeline_cost",
     "fused_cost",
     "choose_mode",
+    "choose_mode_full",
+    "calibrate",
 ]
 
 
@@ -103,3 +106,130 @@ def choose_mode(
         "intensity_flops_per_byte": total_flops / max(total_bytes, 1.0),
     }
     return ("pipeline" if tp <= tf else "alltoall"), diag
+
+
+def choose_mode_full(
+    a2a_bytes: float,
+    ring_bytes: float,
+    total_flops: float,
+    P: int,
+    model: HockneyModel = V5E_ICI,
+    group_factor: int = 1,
+) -> Tuple[str, dict]:
+    """Pick among all three exchange schedules for one tree node.
+
+    ``a2a_bytes`` is what the alltoall/pipeline schedules ship (per-peer
+    request slabs, compacted+compressed); ``ring_bytes`` is the ring
+    relay's whole-table volume — usually larger, but the ring's O(1)-HLO
+    shift overlaps every step, so it wins when compute dominates.  The
+    ring is costed as a fully pipelined (group 1) schedule over its own
+    byte count.
+    """
+    costs: Dict[str, float] = {
+        "alltoall": fused_cost(a2a_bytes, total_flops, model),
+        "pipeline": pipeline_cost(a2a_bytes, total_flops, P, model, group_factor),
+        "ring": pipeline_cost(ring_bytes, total_flops, P, model, 1),
+    }
+    mode = min(costs, key=costs.get)
+    comp_chunk = total_flops / max(1, P) / model.flops_per_s
+    comm_chunk = model.alpha + model.beta * a2a_bytes / max(1, P - 1)
+    diag = {
+        "costs_s": costs,
+        "predicted_s": costs[mode],
+        "rho": overlap_ratio(comp_chunk, comm_chunk),
+        "intensity_flops_per_byte": total_flops / max(a2a_bytes, 1.0),
+    }
+    return mode, diag
+
+
+# one-shot probe results, keyed by (platform, device kind, axis size):
+# calibration is a property of the link, not of the plan being built
+_CALIBRATION_CACHE: Dict[tuple, HockneyModel] = {}
+
+
+def _time_call(fn, *args, repeats: int = 3) -> float:
+    """Min-of-N wall time of a jitted call (after one warmup)."""
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = math.inf
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(
+    mesh,
+    data_axis: str = "data",
+    *,
+    payload_bytes: Tuple[int, ...] = (1 << 16, 1 << 19, 1 << 22),
+    repeats: int = 3,
+    base: HockneyModel = V5E_ICI,
+) -> HockneyModel:
+    """Fit alpha/beta (and a matmul flop rate) from a measured probe.
+
+    Times one ring-shift ``ppermute`` across ``data_axis`` at each payload
+    size, least-squares fits ``t = alpha + beta * bytes``, and times a
+    single [n, n] matmul for ``flops_per_s``.  Runs once per
+    ``(platform, device kind, P)`` — results are cached for the process.
+    On a single-device axis the assumed ``base`` model is returned
+    unchanged (there is no link to measure).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import shard_map
+
+    P = int(mesh.shape[data_axis])
+    if P <= 1:
+        return base
+    dev = jax.devices()[0]
+    cache_key = (dev.platform, getattr(dev, "device_kind", ""), P, payload_bytes)
+    hit = _CALIBRATION_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+
+    from jax.sharding import PartitionSpec as PS
+
+    perm = [(i, (i + 1) % P) for i in range(P)]
+    times = []
+    for nbytes in payload_bytes:
+        n = max(1, nbytes // 4)
+
+        def shift(x):
+            return jax.lax.ppermute(x, data_axis, perm)
+
+        fn = jax.jit(
+            shard_map(
+                shift,
+                mesh=mesh,
+                in_specs=PS(data_axis),
+                out_specs=PS(data_axis),
+                check_vma=False,
+            )
+        )
+        x = jnp.ones((P * n,), jnp.float32)
+        times.append(_time_call(fn, x, repeats=repeats))
+    # least-squares t = alpha + beta * S over the probe sizes
+    m = len(payload_bytes)
+    sx = sum(float(s) for s in payload_bytes)
+    sy = sum(times)
+    sxx = sum(float(s) ** 2 for s in payload_bytes)
+    sxy = sum(float(s) * t for s, t in zip(payload_bytes, times))
+    denom = m * sxx - sx * sx
+    beta = (m * sxy - sx * sy) / denom if denom else base.beta
+    alpha = (sy - beta * sx) / m
+    alpha = min(max(alpha, 1e-8), 1.0)
+    beta = min(max(beta, 1e-13), 1e-3)
+
+    nmm = 512
+    a = jnp.ones((nmm, nmm), jnp.float32)
+    t_mm = _time_call(jax.jit(lambda u: u @ u), a, repeats=repeats)
+    flops = 2.0 * nmm**3 / max(t_mm, 1e-9)
+    flops = min(max(flops, 1e9), 1e16)
+
+    fitted = HockneyModel(alpha=alpha, beta=beta, flops_per_s=flops)
+    _CALIBRATION_CACHE[cache_key] = fitted
+    return fitted

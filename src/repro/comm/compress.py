@@ -1,23 +1,142 @@
-"""int8-compressed ring reduce-scatter (beyond-paper gradient compression).
+"""Narrow wire formats for the exchange (exact) and gradients (lossy).
 
-Each hop of the ring carries the chunk quantized to int8 with a per-row
-(block) fp32 scale — 4x less ICI traffic than fp32 (2x vs bf16) at the
-cost of one quantization error per hop.  Dequantize-accumulate keeps the
-running sum in fp32, so errors add linearly in P rather than compounding.
+Two families live here:
 
-Used by the train loop when ``grad_compression="int8"``.
+**Exact narrow exchange** (the counting engine, DESIGN.md §18).  DP table
+entries are nonnegative integer counts stored in float32, so any slab
+whose maximum fits the target integer range round-trips bit-exactly
+through ``int16``/``int8``.  ``narrow_cast`` ships a slab at wire width
+and appends a saturation flag (``max <= dtype max``) to the caller's
+speculate-check flag list — on overflow the whole batch re-runs on a
+wider twin, the same contract as compaction overflow.  Compacted slabs
+additionally carry their active-row bitmaps bit-packed into extra payload
+*columns* of the same wire dtype (``mask_columns``/``mask_from_columns``),
+replacing the float32 slot column: the receiver re-derives slot indices
+from the mask with the same deterministic ``nonzero`` the sender used.
+
+**Lossy int8 gradient compression** (the original beyond-paper ring
+reduce-scatter): per-block fp32 scales, one quantization error per hop,
+used by the train loop when ``grad_compression="int8"``.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size
 
-__all__ = ["int8_compress", "int8_decompress", "compressed_ring_reduce_scatter"]
+__all__ = [
+    "WIRE_DTYPES",
+    "WIRE_ESCALATION",
+    "wire_itemsize",
+    "narrow_cast",
+    "widen",
+    "mask_column_count",
+    "mask_columns",
+    "mask_from_columns",
+    "int8_compress",
+    "int8_decompress",
+    "compressed_ring_reduce_scatter",
+]
+
+# wire_dtype -> (jnp dtype, bytes per element, max exactly-held count)
+# float32 is the wide (identity) wire; int widths hold counts exactly up
+# to their max, guarded by the narrow_cast saturation flag.
+WIRE_DTYPES: Dict[str, tuple] = {
+    "float32": (jnp.float32, 4, None),
+    "int16": (jnp.int16, 2, 32767),
+    "int8": (jnp.int8, 1, 127),
+}
+
+# On saturation the batch re-dispatches one rung up this ladder (the
+# float32 rung still speculates on compaction; its own twin is dense).
+WIRE_ESCALATION: Dict[str, str] = {"int8": "int16", "int16": "float32"}
+
+_WORD_BITS = {"int8": 8, "int16": 16}
+_WORD_UINT = {"int8": jnp.uint8, "int16": jnp.uint16}
+
+
+def wire_itemsize(wire_dtype: str) -> int:
+    """Bytes per exchanged element for a wire dtype name."""
+    return WIRE_DTYPES[wire_dtype][1]
+
+
+def narrow_cast(
+    x: jax.Array, wire_dtype: str, flags: Optional[List[jax.Array]] = None
+) -> jax.Array:
+    """Cast a nonnegative integer-valued float32 slab to the wire dtype.
+
+    Appends the exactness guard ``max(x) <= dtype max`` to ``flags``;
+    under that flag the cast round-trips bit-exactly (the clip makes the
+    overflowing trace deterministic — its result is discarded by the
+    redispatch anyway).  ``float32`` is the identity.
+    """
+    dt, _, maxv = WIRE_DTYPES[wire_dtype]
+    if maxv is None:
+        return x
+    if flags is not None:
+        flags.append(jnp.max(x) <= maxv)
+    return jnp.clip(x, 0, maxv).astype(dt)
+
+
+def widen(x: jax.Array) -> jax.Array:
+    """Receiver-side inverse of ``narrow_cast`` (exact for in-range ints)."""
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
+
+
+def _pack_mask_words(mask: jax.Array, wire_dtype: str) -> jax.Array:
+    """[..., r] activity mask -> bit-packed words of the wire dtype."""
+    wb = _WORD_BITS[wire_dtype]
+    r = mask.shape[-1]
+    r_pad = -(-r // wb) * wb
+    bits = jnp.asarray(mask, jnp.uint32)
+    if r_pad != r:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (r_pad - r,), bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (-1, wb))
+    words = jnp.sum(bits << jnp.arange(wb, dtype=jnp.uint32), axis=-1)
+    wdt = WIRE_DTYPES[wire_dtype][0]
+    return jax.lax.bitcast_convert_type(words.astype(_WORD_UINT[wire_dtype]), wdt)
+
+
+def mask_column_count(r_len: int, cap: int, wire_dtype: str) -> int:
+    """How many payload columns carry a length-``r_len`` bitmap at ``cap`` rows."""
+    n_words = -(-r_len // _WORD_BITS[wire_dtype])
+    return -(-n_words // cap)
+
+
+def mask_columns(mask: jax.Array, cap: int, wire_dtype: str) -> jax.Array:
+    """Pack ``mask [..., r]`` into ``[..., cap, ncols]`` wire-dtype columns.
+
+    The columns concatenate onto a ``[..., cap, B]`` compact slab so the
+    bitmap rides the same collective as the rows it describes.
+    """
+    words = _pack_mask_words(mask, wire_dtype)
+    n_words = words.shape[-1]
+    ncols = -(-n_words // cap)
+    pad = ncols * cap - n_words
+    if pad:
+        words = jnp.concatenate(
+            [words, jnp.zeros(words.shape[:-1] + (pad,), words.dtype)], axis=-1
+        )
+    cols = words.reshape(words.shape[:-1] + (ncols, cap))
+    return jnp.swapaxes(cols, -1, -2)
+
+
+def mask_from_columns(cols: jax.Array, r_len: int, wire_dtype: str) -> jax.Array:
+    """Inverse of ``mask_columns``: ``[..., cap, ncols]`` -> bool ``[..., r_len]``."""
+    wb = _WORD_BITS[wire_dtype]
+    n_words = -(-r_len // wb)
+    flat = jnp.swapaxes(cols, -1, -2).reshape(cols.shape[:-2] + (-1,))
+    u = jax.lax.bitcast_convert_type(
+        flat[..., :n_words], _WORD_UINT[wire_dtype]
+    ).astype(jnp.uint32)
+    bits = (u[..., None] >> jnp.arange(wb, dtype=jnp.uint32)) & 1
+    return bits.reshape(bits.shape[:-2] + (-1,))[..., :r_len] != 0
 
 
 def _shift_perm(P: int, shift: int = 1):

@@ -36,6 +36,12 @@ class CountingConfig:
     compact: bool = False
     density_threshold: float = 0.25
     capacity_factor: float = 1.5
+    #: narrow-wire exchange (DESIGN.md §18): ship exchange slabs as int16 /
+    #: int8 with per-batch saturation checking and wider-wire redispatch;
+    #: ``adaptive`` picks the router's cost model — 'model' uses the assumed
+    #: link constants, 'measured' calibrates alpha/beta with a one-shot probe
+    wire_dtype: str = "float32"
+    adaptive: str = "model"
     #: multi-template family (template names): when non-empty, the row is a
     #: one-pass family-counting workload over the shared subtree DAG
     #: (``Counter.estimate_many`` / the multi-template dry-run cell);
@@ -101,6 +107,8 @@ class CountingConfig:
                 "compact": self.compact,
                 "density_threshold": self.density_threshold,
                 "capacity_factor": self.capacity_factor,
+                "wire_dtype": self.wire_dtype,
+                "adaptive": self.adaptive,
                 **plan_opts,
             },
         )

@@ -57,6 +57,16 @@ buffer, so the tiled consume below is byte-for-byte the dense code, and a
 psum'd overflow flag re-dispatches the dense twin when a static capacity
 is exceeded — bit-exact either way.
 
+**Narrow wire (§18).**  Counts are nonnegative integers held in float32,
+so with ``wire_dtype="int16"``/``"int8"`` every exchange payload ships at
+integer width — 2x/4x less wire than float32 — with a per-slab saturation
+flag riding the same speculate-check-redispatch contract: on overflow the
+batch re-runs one rung up the int8 -> int16 -> float32 -> dense ladder,
+bit-exact always.  Compacted slabs replace their float32 slot column with
+bit-packed activity-bitmap columns of the wire dtype (``comm.compress``);
+the receiver re-derives the slot indices deterministically.  This
+composes multiplicatively with compaction.
+
 Iteration parallelism: the outer color-coding loop is embarrassingly
 parallel, so independent colorings shard over a second mesh axis
 (``iter_axis``), mirroring the paper's multi-node outer loop.
@@ -88,10 +98,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import (
     V5E_ICI,
+    WIRE_DTYPES,
+    WIRE_ESCALATION,
     HockneyModel,
-    choose_mode,
+    calibrate,
+    choose_mode_full,
     grouped_exchange,
+    mask_columns,
+    mask_from_columns,
+    narrow_cast,
     ring_allgather_overlap,
+    widen,
 )
 from repro.compat import pvary_like, shard_map
 from repro.kernels import ops
@@ -130,6 +147,7 @@ __all__ = [
     "build_distributed_plan",
     "make_count_fn",
     "keyed_sample_fn",
+    "plan_route_report",
     "shard_coloring",
     "global_coloring",
 ]
@@ -407,10 +425,12 @@ def abstract_plan(
     family (sequence of trees/names) — the lowered program is then the
     shared-DAG multi-template counter.
 
-    ``compact=True`` sizes frontier-compaction capacities from the
-    analytic density model (:func:`repro.core.frontier.model_density` —
-    nothing exists to probe), so dry-run cells lower and report the
-    compacted exchange at paper scale.
+    ``compact=True`` sizes frontier-compaction capacities from the exact
+    boolean-DP probe run on a small sampled same-degree subgraph
+    (:func:`repro.core.frontier.sampled_density` — the paper-scale graph
+    itself is never materialized), so dry-run cells lower and report the
+    compacted exchange at paper scale with densities that track a real
+    plan's measurements.
     """
     Pn = num_shards
     program, templates, k = _resolve_program(tree, root, n_colors)
@@ -428,6 +448,9 @@ def abstract_plan(
     combine, widths = build_node_tables(program, k, lane=128)
     compaction = None
     if compact:
+        # densities from the exact boolean-DP probe on a sampled subgraph
+        # (frontier.sampled_density) — the Markov bound saturated on dense
+        # paper graphs, so dry-run capacities never engaged
         compaction = abstract_compaction(
             num_vertices,
             2.0 * num_edges / max(num_vertices, 1),
@@ -437,6 +460,7 @@ def abstract_plan(
             n_loc_pad=n_loc_pad,
             threshold=density_threshold,
             capacity_factor=capacity_factor,
+            combine=combine,
         )
 
     s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
@@ -510,30 +534,99 @@ def global_coloring(key: jax.Array, n: int, k: int) -> jax.Array:
     return jax.random.randint(key, (n,), 0, k, dtype=jnp.int32)
 
 
+def _node_flops(plan: DistributedPlan, node_index: int) -> float:
+    """Per-device compute consuming node ``node_index``'s exchange."""
+    nd = plan.program.nodes[node_index]
+    tbl = plan.combine[node_index]
+    b_width = plan.widths[nd.right]
+    edges_dev = float(plan.bucket_counts.sum()) / plan.num_shards
+    if edges_dev <= 0:  # abstract plan: estimate from the tile capacity
+        edges_dev = float(plan.num_tiles * plan.bucket_tile)
+    spmm_flops = 2.0 * edges_dev * b_width
+    combine_flops = 2.0 * plan.n_loc_pad * tbl.s * tbl.j
+    return spmm_flops + combine_flops
+
+
 def _node_mode(
     plan: DistributedPlan,
     node_index: int,
     mode: str,
     hockney: HockneyModel,
     group_factor: int,
+    wire_dtype: str = "float32",
 ) -> str:
     if mode != "adaptive":
         return mode
-    nd = plan.program.nodes[node_index]
-    tbl = plan.combine[node_index]
-    b_width = plan.widths[nd.right]
-    Pn = plan.num_shards
-    # compacted exchange ships [rc, B+1] slabs instead of [r_pad, B]
-    _, total_bytes = node_exchange_bytes(plan, node_index, "alltoall")
-    edges_dev = float(plan.bucket_counts.sum()) / Pn
-    if edges_dev <= 0:  # abstract plan: estimate from the tile capacity
-        edges_dev = float(plan.num_tiles * plan.bucket_tile)
-    spmm_flops = 2.0 * edges_dev * b_width
-    combine_flops = 2.0 * plan.n_loc_pad * tbl.s * tbl.j
-    picked, _ = choose_mode(
-        total_bytes, spmm_flops + combine_flops, Pn, hockney, group_factor
+    # compacted+compressed byte counts: the slabs the wire actually ships
+    _, a2a_bytes = node_exchange_bytes(plan, node_index, "alltoall", wire_dtype)
+    _, ring_bytes = node_exchange_bytes(plan, node_index, "ring", wire_dtype)
+    picked, _ = choose_mode_full(
+        a2a_bytes,
+        ring_bytes,
+        _node_flops(plan, node_index),
+        plan.num_shards,
+        hockney,
+        group_factor,
     )
-    return "alltoall" if picked == "alltoall" else "pipeline"
+    return picked
+
+
+def plan_route_report(
+    plan: DistributedPlan,
+    *,
+    mode: str = "adaptive",
+    group_factor: int = 1,
+    wire_dtype: str = "float32",
+    adaptive: str = "model",
+    hockney: HockneyModel = V5E_ICI,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    data_axis: str = "data",
+) -> dict:
+    """Per-node routing decisions + predicted costs for plan reports.
+
+    With ``adaptive="measured"`` and a mesh, the Hockney constants come
+    from the one-shot calibration probe (``comm.adaptive.calibrate``);
+    otherwise the assumed ``hockney`` model is used.  Per internal node
+    the report carries the compacted+compressed byte counts of both wire
+    layouts, the consuming flops, the modeled cost of each schedule, and
+    the mode the router picks — the launcher plan report and the dry-run
+    cells surface this verbatim.
+    """
+    model = hockney
+    calibrated = False
+    if adaptive == "measured" and mesh is not None:
+        model = calibrate(mesh, data_axis, base=hockney)
+        calibrated = model is not hockney
+    per_node = {}
+    for i, nd in enumerate(plan.program.nodes):
+        if nd.is_leaf:
+            continue
+        _, a2a_bytes = node_exchange_bytes(plan, i, "alltoall", wire_dtype)
+        _, ring_bytes = node_exchange_bytes(plan, i, "ring", wire_dtype)
+        flops = _node_flops(plan, i)
+        picked, diag = choose_mode_full(
+            a2a_bytes, ring_bytes, flops, plan.num_shards, model, group_factor
+        )
+        chosen = picked if mode == "adaptive" else mode
+        per_node[i] = {
+            "mode": chosen,
+            "a2a_bytes": int(a2a_bytes),
+            "ring_bytes": int(ring_bytes),
+            "flops": float(flops),
+            "costs_s": diag["costs_s"],
+            "predicted_s": diag["costs_s"].get(chosen, diag["predicted_s"]),
+        }
+    return {
+        "wire_dtype": wire_dtype,
+        "adaptive": adaptive,
+        "calibrated": calibrated,
+        "model": {
+            "alpha": model.alpha,
+            "beta": model.beta,
+            "flops_per_s": model.flops_per_s,
+        },
+        "per_node": per_node,
+    }
 
 
 def make_count_fn(
@@ -547,6 +640,8 @@ def make_count_fn(
     impl: str = "xla",
     fuse: bool = False,
     hockney: HockneyModel = V5E_ICI,
+    wire_dtype: str = "float32",
+    adaptive: str = "model",
     return_raw: bool = False,
     keyed: bool = False,
 ):
@@ -593,22 +688,51 @@ def make_count_fn(
     overflowed (bit-exact either way).  With ``return_raw=True`` the raw
     ``(counts, overflow)`` function is returned instead (dry-run measures
     the compact program itself).
+
+    ``wire_dtype`` (``"float32"`` | ``"int16"`` | ``"int8"``, DESIGN.md
+    §18) narrows every exchange payload: counts are nonnegative integers,
+    so in-range slabs round-trip through the integer wire bit-exactly,
+    guarded by per-slab saturation flags riding the same
+    speculate-check-redispatch contract as compaction.  On saturation the
+    batch re-runs one rung up the escalation ladder
+    (int8 -> int16 -> float32 -> dense twin).  Compacted slabs swap the
+    float32 slot column for bit-packed activity-bitmap columns of the
+    wire dtype; the receiver re-derives slot indices deterministically.
+
+    ``adaptive="measured"`` replaces the assumed Hockney constants with a
+    one-shot calibration probe on this mesh (``comm.adaptive.calibrate``,
+    cached per device kind and axis size) before the per-node routing
+    decision; ``"model"`` keeps the assumed ``hockney`` constants.
     """
     assert not (keyed and return_raw), "keyed and return_raw are exclusive"
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire_dtype={wire_dtype!r}; expected one of {sorted(WIRE_DTYPES)}"
+        )
+    if adaptive not in ("model", "measured"):
+        raise ValueError(
+            f"adaptive={adaptive!r}; expected 'model' or 'measured'"
+        )
     Pn = plan.num_shards
     n_loc_pad = plan.n_loc_pad
     r_pad = plan.r_pad
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     assert axis_sizes[data_axis] == Pn, (axis_sizes, Pn)
+    wire_narrow = wire_dtype != "float32"
 
+    if mode == "adaptive" and adaptive == "measured":
+        hockney = calibrate(mesh, data_axis, base=hockney)
     node_modes = {
-        i: _node_mode(plan, i, mode, hockney, group_factor)
+        i: _node_mode(plan, i, mode, hockney, group_factor, wire_dtype)
         for i, nd in enumerate(plan.program.nodes)
         if not nd.is_leaf
     }
 
     spec = plan.compaction
     compact_on = spec is not None and spec.enabled
+    # either narrowing makes the program speculative: it returns overflow
+    # counts and the caller re-dispatches a wider twin on any saturation
+    speculative = compact_on or wire_narrow
     # Which tables carry a frontier, and in which form, follows each
     # parent's resolved exchange mode: ring relays need the index form
     # (whole-shard compaction), alltoall/pipeline and the compact combine
@@ -718,9 +842,12 @@ def make_count_fn(
                 return ops.color_combine(c_left, m * row_mask, tbl, impl=impl)
 
             def compact_chunks():
-                """Compacted per-peer slabs [P, rc, B+1]: the active rows of
-                each request chunk plus a bitcast slot column — the only
-                bytes the wire carries in place of [P, r_pad, B]."""
+                """Compacted per-peer slabs: the active rows of each request
+                chunk plus a slot carrier — a bitcast float32 slot column on
+                the wide wire ([P, rc, B+1]), or bit-packed activity-bitmap
+                columns of the wire dtype on a narrow one (the receiver
+                re-derives the identical slots from the mask with the same
+                deterministic capacity-padded nonzero the sender ran)."""
                 act_chunks = jnp.take(f_right.mask, s_idx)  # [P, r_pad]
                 counts = jnp.sum(act_chunks.astype(jnp.int32), axis=1)
                 flags.append(jnp.max(counts) <= rc - 1)
@@ -730,6 +857,14 @@ def make_count_fn(
                     jnp.take_along_axis(s_idx, slots, axis=1).reshape(-1),
                     axis=0,
                 ).reshape(Pn, rc, bw)
+                if wire_narrow:
+                    return jnp.concatenate(
+                        [
+                            narrow_cast(rows, wire_dtype, flags),
+                            mask_columns(act_chunks, rc, wire_dtype),
+                        ],
+                        axis=-1,
+                    )
                 return jnp.concatenate(
                     [rows, encode_slots(slots)[..., None]], axis=-1
                 )
@@ -740,7 +875,7 @@ def make_count_fn(
                 # over the [P * r_pad, B] concatenation (slab columns were
                 # built against exactly this layout).
                 if rc is not None and f_right is not None:
-                    # compacted alltoall: ship [P, rc, B+1], scatter the
+                    # compacted alltoall: ship [P, rc, B+extra], scatter the
                     # received rows back into the (zero-initialized) dense
                     # buffer — inactive slots stay exactly zero, which is
                     # what the dense exchange would have delivered there
@@ -748,21 +883,32 @@ def make_count_fn(
                     received = jax.lax.all_to_all(
                         payload, data_axis, split_axis=0, concat_axis=0
                     )
-                    r_rows = received[..., :bw].reshape(Pn * rc, bw)
-                    r_slots = decode_slots(received[..., bw])  # [P, rc]
+                    r_rows = widen(received[..., :bw]).reshape(Pn * rc, bw)
+                    if wire_narrow:
+                        masks = mask_from_columns(
+                            received[..., bw:], r_pad, wire_dtype
+                        )  # [P, r_pad] — the senders' chunk activity
+                        r_slots = chunk_slots(masks, rc, r_pad - 1)
+                    else:
+                        r_slots = decode_slots(received[..., bw])  # [P, rc]
                     flat = r_slots + (
                         jnp.arange(Pn, dtype=jnp.int32) * r_pad
                     )[:, None]
                     remote = (
-                        jnp.zeros((Pn * r_pad, bw), c_right.dtype)
+                        jnp.zeros((Pn * r_pad, bw), jnp.float32)
                         .at[flat.reshape(-1)]
                         .add(r_rows)
                     )
                 else:
                     chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
                     received = jax.lax.all_to_all(
-                        chunks, data_axis, split_axis=0, concat_axis=0
+                        narrow_cast(chunks, wire_dtype, flags),
+                        data_axis,
+                        split_axis=0,
+                        concat_axis=0,
                     )
+                    # the slab kernels widen narrow tables at entry, so the
+                    # received buffer feeds them without a separate copy
                     remote = received.reshape(Pn * r_pad, bw)
                 if fuse:
                     return ops.fused_count_slabs(
@@ -781,50 +927,93 @@ def make_count_fn(
                 init = jnp.zeros((n_loc_pad, bw), c_right.dtype)
             if nm == "ring":
                 src_arr = tile_src_loc  # chunks are whole remote shards
-                consume = (
+                consume_dense = (
                     consume_into_out(src_arr, c_left, tbl) if fuse
                     else consume_into_m(src_arr)
                 )
+
+                def consume(acc, chunk, src):
+                    # relayed chunks arrive at wire width; the tiled
+                    # consume runs on the (exactly) widened rows
+                    return consume_dense(acc, widen(chunk), src)
+
                 if ring_cap is not None and f_right is not None:
-                    # compacted relay: the ring carries [cap, B+1] active
-                    # rows + local row ids; each hop reconstructs the dense
-                    # shard before the (unchanged) tiled consume
+                    # compacted relay: the ring carries [cap, B+extra]
+                    # active rows + their row ids (slot column on the wide
+                    # wire, packed activity bitmap on a narrow one); each
+                    # hop reconstructs the dense shard before the
+                    # (unchanged) tiled consume
                     rows = jnp.take(c_right, f_right.idx, axis=0)
-                    payload = jnp.concatenate(
-                        [rows, encode_slots(f_right.idx)[:, None]], axis=1
-                    )
+                    if wire_narrow:
+                        payload = jnp.concatenate(
+                            [
+                                narrow_cast(rows, wire_dtype, flags),
+                                mask_columns(
+                                    f_right.mask, ring_cap, wire_dtype
+                                ),
+                            ],
+                            axis=1,
+                        )
+                    else:
+                        payload = jnp.concatenate(
+                            [rows, encode_slots(f_right.idx)[:, None]], axis=1
+                        )
 
                     def consume_compact(acc, chunk, src):
+                        if wire_narrow:
+                            mask = mask_from_columns(
+                                chunk[:, bw:], n_loc_pad, wire_dtype
+                            )
+                            idx = jnp.nonzero(
+                                mask, size=ring_cap,
+                                fill_value=plan.shard_size,
+                            )[0].astype(jnp.int32)
+                        else:
+                            idx = decode_slots(chunk[:, bw])
                         dense = (
-                            jnp.zeros((n_loc_pad, bw), c_right.dtype)
-                            .at[decode_slots(chunk[:, bw])]
-                            .add(chunk[:, :bw])
+                            jnp.zeros((n_loc_pad, bw), jnp.float32)
+                            .at[idx]
+                            .add(widen(chunk[:, :bw]))
                         )
-                        return consume(acc, dense, src)
+                        return consume_dense(acc, dense, src)
 
                     out = ring_allgather_overlap(
                         payload, data_axis, consume_compact, init
                     )
                 else:
                     out = ring_allgather_overlap(
-                        c_right, data_axis, consume, init
+                        narrow_cast(c_right, wire_dtype, flags),
+                        data_axis, consume, init,
                     )
             else:  # pipeline
                 src_arr = tile_src_cmp  # chunks are compact request lists
-                consume = (
+                consume_dense = (
                     consume_into_out(src_arr, c_left, tbl) if fuse
                     else consume_into_m(src_arr)
                 )
+
+                def consume(acc, chunk, src):
+                    return consume_dense(acc, widen(chunk), src)
+
                 if rc is not None and f_right is not None:
                     payload = compact_chunks()
 
                     def consume_compact(acc, chunk, src):
+                        if wire_narrow:
+                            mask = mask_from_columns(
+                                chunk[:, bw:], r_pad, wire_dtype
+                            )
+                            slots = jnp.nonzero(
+                                mask, size=rc, fill_value=r_pad - 1
+                            )[0].astype(jnp.int32)
+                        else:
+                            slots = decode_slots(chunk[:, bw])
                         dense = (
-                            jnp.zeros((r_pad, bw), c_right.dtype)
-                            .at[decode_slots(chunk[:, bw])]
-                            .add(chunk[:, :bw])
+                            jnp.zeros((r_pad, bw), jnp.float32)
+                            .at[slots]
+                            .add(widen(chunk[:, :bw]))
                         )
-                        return consume(acc, dense, src)
+                        return consume_dense(acc, dense, src)
 
                     out = grouped_exchange(
                         payload, data_axis, consume_compact, init,
@@ -833,7 +1022,8 @@ def make_count_fn(
                 else:
                     chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
                     out = grouped_exchange(
-                        chunks, data_axis, consume, init,
+                        narrow_cast(chunks, wire_dtype, flags),
+                        data_axis, consume, init,
                         group_factor=group_factor,
                     )
             if fuse:
@@ -852,9 +1042,9 @@ def make_count_fn(
 
     def _reduce(partials, oks):
         counts = jax.lax.psum(partials, data_axis)  # [I_loc, R]
-        if not compact_on:
+        if not speculative:
             return counts
-        # per-iteration overflow counts, replicated across shards
+        # per-iteration overflow/saturation counts, replicated across shards
         bad = jax.lax.psum(
             jnp.logical_not(oks).astype(jnp.int32), data_axis
         )
@@ -894,7 +1084,7 @@ def make_count_fn(
         return _reduce(partials, oks)
 
     iter_spec = P(iter_axis) if iter_axis else P()
-    out_spec = (iter_spec, iter_spec) if compact_on else iter_spec
+    out_spec = (iter_spec, iter_spec) if speculative else iter_spec
     lead_spec = (
         P(iter_axis) if keyed
         else (P(iter_axis, data_axis) if iter_axis else P(None, data_axis))
@@ -926,32 +1116,48 @@ def make_count_fn(
     @jax.jit
     def fj(data):
         out = mapped(data, *plan.device_arrays)
-        if compact_on:
+        if speculative:
             counts, bad = out
             return (counts if plan.is_multi else counts[:, 0]), bad
         return out if plan.is_multi else out[:, 0]
 
-    if compact_on:
-        # speculative dispatch: the compact program reports per-iteration
-        # overflow counts; any overflow re-runs the batch on the lazily
-        # built dense twin (bit-exact — compact == dense when flags hold)
-        dense_state: Dict[str, object] = {}
+    if speculative:
+        # speculative dispatch: the narrow/compact program reports
+        # per-iteration overflow counts; any overflow re-runs the batch one
+        # rung up the escalation ladder — a narrow wire widens first
+        # (int8 -> int16 -> float32, keeping the same compaction), then the
+        # float32 compact program falls back to its dense twin.  Each twin
+        # wraps itself the same way, so the ladder always terminates at the
+        # dense float32 program (bit-exact — narrow == wide when flags hold).
+        twin_state: Dict[str, object] = {}
 
         def run(data):
             res, bad = fj(data)
-            # fault site: force the overflow storm onto the dense twin
-            forced = faults.fire("compaction.overflow") is not None
+            # fault sites: force the saturation/overflow storm onto the twin
+            forced = wire_narrow and (
+                faults.fire("compression.saturate") is not None
+            )
+            forced = forced or (
+                compact_on and faults.fire("compaction.overflow") is not None
+            )
             if not forced and int(np.asarray(bad).sum()) == 0:
                 return res
-            fd = dense_state.get("fn")
-            if fd is None:
-                fd = dense_state["fn"] = make_count_fn(
-                    dataclasses.replace(plan, compaction=None), mesh,
+            ft = twin_state.get("fn")
+            if ft is None:
+                if wire_narrow:
+                    twin_plan = plan
+                    twin_wire = WIRE_ESCALATION[wire_dtype]
+                else:
+                    twin_plan = dataclasses.replace(plan, compaction=None)
+                    twin_wire = "float32"
+                ft = twin_state["fn"] = make_count_fn(
+                    twin_plan, mesh,
                     mode=mode, data_axis=data_axis, iter_axis=iter_axis,
                     group_factor=group_factor, impl=impl, fuse=fuse,
-                    hockney=hockney, keyed=keyed,
+                    hockney=hockney, wire_dtype=twin_wire, adaptive=adaptive,
+                    keyed=keyed,
                 )
-            return fd(data)
+            return ft(data)
 
     else:
         run = fj

@@ -47,6 +47,7 @@ __all__ = [
     "single_device_compaction",
     "distributed_compaction",
     "model_density",
+    "sampled_density",
     "capacity_for",
     "node_exchange_bytes",
     "make_frontier_fn",
@@ -400,6 +401,43 @@ def distributed_compaction(
     )
 
 
+def sampled_density(
+    num_vertices: int,
+    avg_degree: float,
+    program,
+    combine,
+    k: int,
+    *,
+    sample_vertices: int = 2048,
+    probes: int = 2,
+    seed: int = 0,
+) -> Dict[int, float]:
+    """Per-node table densities from the boolean DP on a sampled subgraph.
+
+    The Markov bound of :func:`model_density` saturates at 1.0 on dense
+    paper graphs (``d^(t-1)`` blows through the colorful-probability
+    discount), so dry-run capacities sized from it never engage.  Running
+    the **exact** probe on a small same-degree synthetic R-MAT instead
+    costs milliseconds at shape-only scale and tracks the measured
+    densities of the real plan within the sampling noise — the densities
+    are per-vertex probabilities, so they transfer across graph size at
+    matched degree.
+    """
+    from .graphs import relabel_random, rmat
+
+    n_s = int(min(max(sample_vertices, 64), max(num_vertices, 64)))
+    m_s = max(n_s // 2, int(round(n_s * avg_degree / 2.0)))
+    g_s = relabel_random(rmat(n_s, m_s, skew=3, seed=seed), seed=seed + 1)
+    density: Dict[int, float] = {}
+    for masks in probe_activity(
+        g_s, program, combine, k, probes=probes, seed=seed
+    ):
+        for i, a in masks.items():
+            rho = float(a.table.sum()) / max(n_s, 1)
+            density[i] = max(density.get(i, 0.0), rho)
+    return density
+
+
 def abstract_compaction(
     num_vertices: int,
     avg_degree: float,
@@ -410,15 +448,34 @@ def abstract_compaction(
     n_loc_pad: int,
     threshold: float,
     capacity_factor: float,
+    combine=None,
+    sample_vertices: int = 2048,
+    probes: int = 2,
+    seed: int = 0,
 ) -> CompactionSpec:
-    """Shape-only spec for dry-run lowering: densities from the analytic
-    :func:`model_density` instead of a probe (nothing is materialized)."""
+    """Shape-only spec for dry-run lowering: nothing is materialized.
+
+    With ``combine`` (the node split tables) the densities come from
+    :func:`sampled_density` — the exact boolean DP on a sampled subgraph;
+    without it, the analytic :func:`model_density` Markov bound."""
     rights, _ = _child_roles(program)
-    density = {
-        i: model_density(nd.size, k, avg_degree)
-        for i, nd in enumerate(program.nodes)
-        if not nd.is_leaf
-    }
+    if combine is not None:
+        density = sampled_density(
+            num_vertices,
+            avg_degree,
+            program,
+            combine,
+            k,
+            sample_vertices=sample_vertices,
+            probes=probes,
+            seed=seed,
+        )
+    else:
+        density = {
+            i: model_density(nd.size, k, avg_degree)
+            for i, nd in enumerate(program.nodes)
+            if not nd.is_leaf
+        }
     exchange_caps = {}
     shard_caps = {}
     combine_caps = {}
@@ -450,13 +507,20 @@ def abstract_compaction(
     )
 
 
-def node_exchange_bytes(plan, i: int, mode: str) -> Tuple[int, int]:
+def node_exchange_bytes(
+    plan, i: int, mode: str, wire_dtype: str = "float32"
+) -> Tuple[int, int]:
     """``(dense, compact)`` per-device wire bytes node ``i``'s exchange
-    moves each iteration under ``mode`` — THE formula for the compacted
-    slab layout (``[cap, B+1]`` active rows + slot column vs the dense
-    ``[rows, B]``), shared by the dry-run report, the sparsity bench, and
-    the adaptive mode's Hockney bytes so the three can never disagree.
+    moves each iteration under ``mode`` at ``wire_dtype`` width — THE
+    formula for the compacted slab layout (``[cap, B+extra]`` active rows
+    plus the slot/bitmap carrier columns vs the dense ``[rows, B]``),
+    shared by the dry-run report, the sparsity bench, and the adaptive
+    mode's Hockney bytes so they can never disagree.  A narrow wire
+    replaces the float32 slot column with bit-packed activity-mask
+    columns of the wire dtype (DESIGN.md §18).
     ``plan`` is a DistributedPlan (duck-typed to avoid a module cycle)."""
+    from repro.comm.compress import mask_column_count, wire_itemsize
+
     nd = plan.program.nodes[i]
     b = plan.widths[nd.right]
     spec = plan.compaction
@@ -466,8 +530,17 @@ def node_exchange_bytes(plan, i: int, mode: str) -> Tuple[int, int]:
     else:
         rows = plan.r_pad
         cap = spec.exchange_caps.get(nd.right) if spec is not None else None
-    dense = (plan.num_shards - 1) * rows * b * 4
-    compact = (plan.num_shards - 1) * cap * (b + 1) * 4 if cap else dense
+    ebytes = wire_itemsize(wire_dtype)
+    dense = (plan.num_shards - 1) * rows * b * ebytes
+    if cap:
+        extra = (
+            1
+            if wire_dtype == "float32"
+            else mask_column_count(rows, cap, wire_dtype)
+        )
+        compact = (plan.num_shards - 1) * cap * (b + extra) * ebytes
+    else:
+        compact = dense
     return dense, compact
 
 

@@ -442,8 +442,14 @@ def spmm_slabs(
     exchange chunks, while the output is this shard's ``[out_rows, B]``
     neighbor sum — the same edge-tile kernel as the single-device engine,
     one uniform ``tile``-edge task per grid step.  Returns [out_rows, B].
+
+    ``table`` may arrive at narrow wire width (int16/int8 — the compressed
+    exchange, DESIGN.md §18); it is widened to float32 here, once, so both
+    kernel paths keep their float32 contract.
     """
     impl = _resolve(impl)
+    if table.dtype != jnp.float32:
+        table = table.astype(jnp.float32)
     num_slabs, tile = slab_dst.shape
     nrb = out_rows // row_tile
     assert num_slabs == nrb * slabs_per_block, (num_slabs, nrb, slabs_per_block)
@@ -678,8 +684,13 @@ def fused_count_slabs(
     the kernel scratch (or one ``lax.map`` step on XLA) before being
     contracted against the resident ``left`` block.  Returns
     ``[out_rows, S_pad]``; pad rows/cols unspecified (engine masks).
+
+    ``right`` may arrive at narrow wire width (the compressed exchange,
+    DESIGN.md §18); it is widened to float32 here, once, before dispatch.
     """
     impl = _resolve(impl)
+    if right.dtype != jnp.float32:
+        right = right.astype(jnp.float32)
     if impl == "xla":
         out = fused_count_xla(
             slab_dst, slab_cols, left, right, tables.idx1, tables.idx2,

@@ -59,6 +59,33 @@ def _plan_report(plan):
     print(f"compaction caps: {caps if caps else 'none engaged'}")
 
 
+def _route_report(counter, request):
+    """Exchange-routing provenance (§18): per-node schedule choices and
+    the cost model behind them — calibrated when --adaptive measured."""
+    from repro.core.distributed import plan_route_report
+
+    opts = request.plan_opts
+    rep = plan_route_report(
+        counter.plan,
+        mode=opts.get("mode", "adaptive"),
+        group_factor=opts.get("group_factor", 1),
+        wire_dtype=opts.get("wire_dtype", "float32"),
+        adaptive=opts.get("adaptive", "model"),
+        mesh=counter._mesh,
+        data_axis=opts.get("data_axis", "data"),
+    )
+    m = rep["model"]
+    src = "calibrated" if rep["calibrated"] else "assumed"
+    print(f"routing: wire={rep['wire_dtype']} {src} model "
+          f"alpha={m['alpha']:.3g}s beta={m['beta']:.3g}s/B "
+          f"flops={m['flops_per_s']:.3g}/s")
+    for i, row in sorted(rep["per_node"].items()):
+        print(f"  node {i}: {row['mode']:<8} "
+              f"a2a {row['a2a_bytes'] / 1e6:.3f} MB "
+              f"ring {row['ring_bytes'] / 1e6:.3f} MB "
+              f"predicted {row['predicted_s'] * 1e6:.1f} us")
+
+
 def _robust_report(res):
     """Recovery provenance: what was restored, what was given up on."""
     if res.resumed_from:
@@ -119,6 +146,15 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=None,
                     help="capacity headroom over the probed active maximum "
                          "before the dense overflow fallback")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["float32", "int16", "int8"],
+                    help="narrow-wire exchange (§18): ship distributed "
+                         "exchange slabs at this width, exactness kept by "
+                         "saturation checking + wider-wire redispatch")
+    ap.add_argument("--adaptive", default=None,
+                    choices=["model", "measured"],
+                    help="adaptive router cost model: assumed link constants "
+                         "or a one-shot calibration probe at plan build")
     # robustness (DESIGN.md §16): estimator state survives kills and flaky
     # shards; a killed run resumed via --resume returns the bit-identical
     # estimate an uninterrupted run produces
@@ -165,7 +201,9 @@ def main():
     impl_opt = {"impl": args.impl} if args.impl else {}
     for name, val in (("compact", args.compact),
                       ("density_threshold", args.density_threshold),
-                      ("capacity_factor", args.capacity_factor)):
+                      ("capacity_factor", args.capacity_factor),
+                      ("wire_dtype", args.wire_dtype),
+                      ("adaptive", args.adaptive)):
         if val is not None:
             impl_opt[name] = val
     if single:
@@ -233,6 +271,8 @@ def main():
                  f"impl={args.impl or 'xla'},"
                  f"tile={counter.plan.bucket_tile}x{counter.plan.num_tiles})")
     _plan_report(counter.plan)
+    if not single:
+        _route_report(counter, request)
     counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
     res = counter.estimate(

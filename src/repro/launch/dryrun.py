@@ -302,7 +302,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
     return rec
 
 
-def _compaction_report(plan, mode: str):
+def _compaction_report(plan, mode: str, wire_dtype: str = "float32"):
     """Per-node density / capacity / bytes-saved cells for a counting plan
     with active-frontier compaction (DESIGN.md §15); None when dense."""
     spec = plan.compaction
@@ -315,7 +315,8 @@ def _compaction_report(plan, mode: str):
     for i, nd in enumerate(plan.program.nodes):
         if nd.is_leaf:
             continue
-        nb_dense, nb_compact = node_exchange_bytes(plan, i, mode)
+        nb_dense, nb_compact = node_exchange_bytes(plan, i, mode,
+                                                   wire_dtype=wire_dtype)
         caps = spec.shard_caps if mode == "ring" else spec.exchange_caps
         bytes_dense += nb_dense
         bytes_compact += nb_compact
@@ -339,7 +340,11 @@ def _compaction_report(plan, mode: str):
 
 def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
     """Dry-run the distributed counting engine at paper-scale shapes."""
-    from repro.core.distributed import abstract_plan, make_count_fn
+    from repro.core.distributed import (
+        abstract_plan,
+        make_count_fn,
+        plan_route_report,
+    )
     from repro.core.templates import template
 
     ccfg = COUNTING_CONFIGS[name]
@@ -380,6 +385,7 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
             mode=mode,
             iter_axis=iter_axis,
             group_factor=ccfg.group_factor,
+            wire_dtype=ccfg.wire_dtype,
             return_raw=True,
         )
         with mesh:
@@ -404,7 +410,13 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
                     ccfg.num_vertices, 2 * ccfg.num_edges
                 ), 2,
             ),
-            "compaction": _compaction_report(plan, mode),
+            "compaction": _compaction_report(plan, mode, ccfg.wire_dtype),
+            # §18 exchange routing at this cell's shape (model costs; a
+            # shape-only cell never runs the measured calibration probe)
+            "routing": plan_route_report(
+                plan, mode=mode, group_factor=ccfg.group_factor,
+                wire_dtype=ccfg.wire_dtype,
+            ),
             "compile_s": round(time.time() - t0, 1),
             "memory": {
                 "argument_bytes": mem.argument_size_in_bytes,

@@ -118,6 +118,11 @@ class ServiceConfig:
     max_active: int = 8  # requests concurrently attached to passes
     quantum: float = 1.0  # DRR deficit replenished per tenant visit
     plan_cache_capacity: int = 8  # LRU entries (compiled family plans)
+    #: LRU entries of finished *results*: a re-submitted identical request
+    #: (same family, key, batch, and budget — the full stream identity, so
+    #: the answer is deterministic) returns the cached CountResult at
+    #: submit time instead of recomputing its samples; 0 disables
+    result_cache_capacity: int = 16
     seed: int = 0  # default request key = jax.random.key(seed)
     max_retries: Optional[int] = None  # supervise passes when set
 
@@ -364,6 +369,10 @@ class CountingService:
             self._counter._families.pop(entry["trees"], None)
 
         self.plan_cache = PlanCache(self.config.plan_cache_capacity, _evict)
+        # finished-result memo: stream-identity key -> result snapshot (LRU)
+        self._result_cache: "collections.OrderedDict[tuple, dict]" = (
+            collections.OrderedDict()
+        )
         self._rep: Dict[tuple, Tree] = {}  # rooted sig -> representative Tree
         self._passes: Dict[tuple, _Pass] = {}  # (key_fp) -> pass
         self._tenants: Dict[str, dict] = {}
@@ -477,9 +486,57 @@ class CountingService:
         )
         ticket._request = req
         ticket._service = self
-        self._tenant(tenant)["queue"].append(req)
         self._stats["submitted"] += 1
+        if self._memo_hit(req):
+            return ticket
+        self._tenant(tenant)["queue"].append(req)
         return ticket
+
+    # ----------------------------------------------------------- result memo
+    @staticmethod
+    def _memo_key(req: _Request) -> tuple:
+        # the full stream identity: same family (in submission order — the
+        # result's template columns follow it), same coloring stream
+        # (key, batch), same budget / stopping rule.  Anything less and the
+        # cached answer would differ from a recomputation.
+        return (req.sigs, req.key_fp, req.batch, req.n_iter, req.delta,
+                req.eps, req.target_rsd)
+
+    def _memo_hit(self, req: _Request) -> bool:
+        """Serve ``req`` from the finished-result memo; True on a hit."""
+        if self.config.result_cache_capacity < 1:
+            return False
+        snap = self._result_cache.get(self._memo_key(req))
+        if snap is None:
+            self._stats["result_misses"] += 1
+            return False
+        self._result_cache.move_to_end(self._memo_key(req))
+        self._stats["result_hits"] += 1
+        t = req.ticket
+        # restore the request's sampling state too, so ticket.state()
+        # exports the same solo-compatible EstimatorState a recomputation
+        # would have produced
+        req.samples = snap["samples"].copy()
+        req.cursor = snap["cursor"]
+        req.satisfied = snap["satisfied"]
+        t._result = snap["result"]
+        t.status = "done"
+        t.finished_at = time.perf_counter()
+        self.completed.append(t)
+        return True
+
+    def _memo_store(self, req: _Request) -> None:
+        if self.config.result_cache_capacity < 1 or req.quarantined:
+            return  # a degraded (quarantined) answer is never memoized
+        self._result_cache[self._memo_key(req)] = {
+            "result": req.ticket._result,
+            "samples": req.samples.copy(),
+            "cursor": req.cursor,
+            "satisfied": req.satisfied,
+        }
+        while len(self._result_cache) > self.config.result_cache_capacity:
+            self._result_cache.popitem(last=False)
+            self._stats["result_evictions"] += 1
 
     # ---------------------------------------------------------- plan cache
     def _entry_for(self, sigs: Sequence[tuple]) -> dict:
@@ -673,6 +730,7 @@ class CountingService:
         t.finished_at = time.perf_counter()
         self._stats["completed"] += 1
         self.completed.append(t)
+        self._memo_store(req)
         self._remove_active(req)
 
     def _remove_active(self, req: _Request) -> None:
@@ -841,6 +899,15 @@ class CountingService:
             "evictions": self.plan_cache.evictions,
             "hit_rate": self.plan_cache.hit_rate,
             "entries": len(self.plan_cache),
+        }
+        r_hits = s.get("result_hits", 0)
+        r_total = r_hits + s.get("result_misses", 0)
+        s["results"] = {
+            "hits": r_hits,
+            "misses": s.get("result_misses", 0),
+            "evictions": s.get("result_evictions", 0),
+            "hit_rate": r_hits / r_total if r_total else 0.0,
+            "entries": len(self._result_cache),
         }
         s["tenants"] = {
             name: {"charged": st["charged"], "queued": len(st["queue"]),

@@ -22,6 +22,9 @@ Instrumented sites (grep ``faults.fire`` for the authoritative list):
                            checkpoints)
 ``compaction.overflow``    the §15 speculate-check wrapper treats the batch as
                            overflowed and re-dispatches the dense twin
+``compression.saturate``   the §18 narrow-wire wrapper treats the batch as
+                           saturated and re-dispatches the wider-wire twin
+                           (int8 -> int16 -> float32 escalation ladder)
 =========================  ====================================================
 
 Usage::

@@ -457,6 +457,102 @@ def _run_compaction_checks():
     )
 
 
+def test_compressed_exchange():
+    """Narrow-wire exchange over 8 real shards (DESIGN.md §18).
+
+    int16/int8 slabs (dense and compacted+bitmapped) must be bit-identical
+    to the float32 wire on every mode, a forced saturation storm must
+    escalate through the wider-wire ladder without changing a count, and
+    the measured-adaptive router must calibrate and still count exactly.
+    """
+    from repro.core import frontier
+
+    saved_floors = (frontier.MIN_COMBINE_ELEMENTS, frontier.MIN_TABLE_WIDTH)
+    frontier.MIN_COMBINE_ELEMENTS = 1
+    frontier.MIN_TABLE_WIDTH = 1
+    try:
+        _run_compressed_checks()
+    finally:
+        frontier.MIN_COMBINE_ELEMENTS, frontier.MIN_TABLE_WIDTH = saved_floors
+
+
+def _run_compressed_checks():
+    from repro.core import relabel_random, rmat
+    from repro.core.distributed import (
+        build_distributed_plan,
+        make_count_fn,
+        plan_route_report,
+        shard_coloring,
+    )
+    from repro.core.templates import template
+    from repro.testing import faults
+
+    g = relabel_random(rmat(2048, 4000, skew=8, seed=2), seed=3)
+    tree = template("u7-2")
+    rng = np.random.default_rng(33)
+    coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
+    mesh = make_mesh((8,), ("data",))
+    plan_d = build_distributed_plan(g, tree, 8)
+    plan_c = build_distributed_plan(
+        g, tree, 8, compact=True, density_threshold=0.5, capacity_factor=1.25
+    )
+    cols = jnp.asarray(shard_coloring(plan_d, coloring)[None])
+
+    # wide baseline per (mode, fuse); narrow wires must match bit for bit
+    cases = [
+        ("alltoall", False), ("alltoall", True),
+        ("pipeline", False), ("pipeline", True),
+        ("adaptive", False), ("ring", False), ("ring", True),
+    ]
+    for mode, fuse in cases:
+        base = np.asarray(
+            make_count_fn(plan_d, mesh, mode=mode, fuse=fuse)(cols)
+        )
+        for wire in ("int16", "int8"):
+            for plan, tag in ((plan_d, "dense"), (plan_c, "compact")):
+                got = np.asarray(make_count_fn(
+                    plan, mesh, mode=mode, fuse=fuse, wire_dtype=wire
+                )(cols))
+                check(
+                    f"wire_{mode}_fuse{int(fuse)}_{wire}_{tag}_P8",
+                    np.array_equal(base, got),
+                    f"wide {base[0]} narrow {got[0]}",
+                )
+
+    # forced saturation storm: int8 escalates int16 -> (if needed) float32;
+    # the ladder must converge on the wide answer and log the fired site
+    base = np.asarray(make_count_fn(plan_d, mesh, mode="pipeline")(cols))
+    fn8 = make_count_fn(plan_c, mesh, mode="pipeline", wire_dtype="int8")
+    with faults.active(faults.inject("compression.saturate", at=(0, 1))) as fp:
+        got = np.asarray(fn8(cols))
+    check(
+        "wire_saturation_storm_P8",
+        np.array_equal(base, got)
+        and [s for s, _ in fp.fired].count("compression.saturate") == 2,
+        f"fired {fp.fired}",
+    )
+
+    # measured-adaptive routing: the calibrated router must pick real modes
+    # and count exactly
+    rep = plan_route_report(
+        plan_c, mode="adaptive", wire_dtype="int16", adaptive="measured",
+        mesh=mesh,
+    )
+    modes = {r["mode"] for r in rep["per_node"].values()}
+    check(
+        "wire_measured_router_P8",
+        rep["calibrated"] and modes <= {"alltoall", "pipeline", "ring"},
+        f"model {rep['model']} modes {modes}",
+    )
+    got = np.asarray(make_count_fn(
+        plan_c, mesh, mode="adaptive", adaptive="measured", wire_dtype="int16"
+    )(cols))
+    check(
+        "wire_measured_counts_P8", np.array_equal(base, got),
+        f"wide {base[0]} measured {got[0]}",
+    )
+
+
 def test_moe_manual_vs_dense():
     """moe_block_manual (EP token-sharded / TP / pipelined) == dense oracle."""
     import dataclasses
@@ -715,18 +811,32 @@ def test_service():
 
 
 def main():
-    test_ring_collectives()
-    test_grouped_exchange()
-    test_distributed_counting()
-    test_tiled_skew_parity()
-    test_unified_api()
-    test_multi_template()
-    test_compaction()
-    test_robustness()
-    test_elastic_coloring()
-    test_service()
-    test_moe_manual_vs_dense()
-    test_elastic_restore()
+    # positional args select tests by substring (e.g. ``compressed_exchange``
+    # runs only test_compressed_exchange — the CI distributed smoke step);
+    # no args runs everything
+    tests = [
+        test_ring_collectives,
+        test_grouped_exchange,
+        test_distributed_counting,
+        test_tiled_skew_parity,
+        test_unified_api,
+        test_multi_template,
+        test_compaction,
+        test_compressed_exchange,
+        test_robustness,
+        test_elastic_coloring,
+        test_service,
+        test_moe_manual_vs_dense,
+        test_elastic_restore,
+    ]
+    wanted = sys.argv[1:]
+    if wanted:
+        tests = [t for t in tests if any(w in t.__name__ for w in wanted)]
+        if not tests:
+            print(f"no tests match {wanted}")
+            sys.exit(2)
+    for t in tests:
+        t()
     if FAILURES:
         print(f"FAILED: {FAILURES}")
         sys.exit(1)

@@ -207,6 +207,64 @@ class TestPlanCache:
         assert ("a",) in cache and ("b",) not in cache
 
 
+class TestResultMemo:
+    def test_identical_resubmit_served_from_memo(self, graph):
+        """An identical finished request returns the cached result at
+        submit time — done immediately, zero extra backend calls — and the
+        answer is the one a recomputation would produce."""
+        svc = service(graph)
+        t1 = svc.client("a").submit("u3-1", n_iter=24)
+        svc.run_until_idle()
+        calls_before = svc.stats().get("pass_calls", 0)
+        t2 = svc.client("b").submit("u3-1", n_iter=24)  # any tenant hits
+        assert t2.done  # no scheduling round needed
+        assert svc.stats().get("pass_calls", 0) == calls_before
+        r1, r2 = t1.result(), t2.result()
+        np.testing.assert_array_equal(np.asarray(r1.samples),
+                                      np.asarray(r2.samples))
+        assert r2.estimate == r1.estimate
+        s = svc.stats()["results"]
+        assert s["hits"] == 1 and s["entries"] == 1
+        assert 0 < s["hit_rate"] < 1
+        # the memo ticket still exports a valid solo-resumable state
+        st = t2.state()
+        assert st.samples.shape[0] == st.cursor * BATCH
+
+    def test_different_budget_or_key_misses(self, graph):
+        """The memo key is the full stream identity: a different n_iter or
+        coloring key recomputes."""
+        svc = service(graph)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        t2 = svc.client("a").submit("u3-1", n_iter=12)
+        assert not t2.done
+        t3 = svc.client("a").submit("u3-1", n_iter=8, key=jax.random.key(7))
+        assert not t3.done
+        svc.run_until_idle()
+        assert svc.stats()["results"]["hits"] == 0
+
+    def test_capacity_zero_disables(self, graph):
+        svc = service(graph, result_cache_capacity=0)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        t2 = svc.client("a").submit("u3-1", n_iter=8)
+        assert not t2.done
+        svc.run_until_idle()
+        assert svc.stats()["results"]["entries"] == 0
+
+    def test_lru_eviction_bounds_entries(self, graph):
+        svc = service(graph, result_cache_capacity=1)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        svc.client("a").submit("u5-2", n_iter=8)  # evicts the u3-1 result
+        svc.run_until_idle()
+        t3 = svc.client("a").submit("u3-1", n_iter=8)
+        assert not t3.done  # evicted: recomputes
+        svc.run_until_idle()
+        s = svc.stats()["results"]
+        assert s["entries"] == 1 and s["evictions"] >= 1
+
+
 class TestScheduling:
     def test_drr_weights_bias_service_rate(self, graph):
         """Distinct keys → distinct passes; the weight-3 tenant gets ~3x

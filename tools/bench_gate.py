@@ -66,6 +66,10 @@ STRUCTURAL_KEYS = (
     # sparsity signals (bench_sparsity / spmm auto): measured from seeded
     # graph structure, so they are machine-independent like the layouts
     "density",
+    # §18 narrow-wire volume (bench_load_balance / bench_sparsity): the
+    # per-wire exchange-bytes and wire-ratio keys ride the "bytes"/"ratio"
+    # substrings above — deterministic plan math, held lower-is-better so
+    # a PR can never quietly fatten the wire
 )
 # context keys that must match for a file's metrics to be comparable at all
 META_KEYS = ("smoke", "backend")

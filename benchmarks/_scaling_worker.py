@@ -76,9 +76,7 @@ def bench_peak_memory(args):
     mesh = make_mesh(shards)
     plan = build_distributed_plan(g, tree, shards)
     rng = np.random.default_rng(0)
-    cols = jnp.asarray(
-        shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))[None]
-    )
+    cols = jnp.asarray(shard_coloring(plan, rng.integers(0, tree.n, g.n).astype(np.int32))[None])
     for mode in ("alltoall", "pipeline", "ring"):
         f = make_count_fn(plan, mesh, mode=mode)
         mem = jax.jit(f).lower(cols).compile().memory_analysis()

@@ -219,9 +219,7 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--smoke", action="store_true", help="small graph + first two templates (CI)"
-    )
+    ap.add_argument("--smoke", action="store_true", help="small graph + first two templates (CI)")
     ap.add_argument("--no-json", action="store_true")
     args = ap.parse_args()
     run(smoke=args.smoke, json_path=None if args.no_json else JSON_PATH)

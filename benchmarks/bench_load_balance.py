@@ -98,9 +98,7 @@ def bench_distributed_buckets(smoke=False, shards=8, bucket_tile=128):
             ("random", relabel_random(raw, seed=skew + 1)),
             ("contiguous", raw),
         ):
-            plan = build_distributed_plan(
-                g, tree, shards, bucket_tile=bucket_tile
-            )
+            plan = build_distributed_plan(g, tree, shards, bucket_tile=bucket_tile)
             e_dir = g.num_directed
             counts = plan.bucket_counts
             max_e_old = max(
@@ -148,24 +146,17 @@ def bench_wire_volume(smoke=False, shards=8):
         g = relabel_random(rmat(v, e, skew=skew, seed=skew), seed=skew + 1)
         plan = build_distributed_plan(g, tree, shards)
         rec = {}
-        for wire, tag in (("float32", "f32"), ("int16", "int16"),
-                          ("int8", "int8")):
+        for wire, tag in (("float32", "f32"), ("int16", "int16"), ("int8", "int8")):
             a2a = ring = 0
             for i, nd in enumerate(plan.program.nodes):
                 if nd.is_leaf:
                     continue
-                a2a += node_exchange_bytes(plan, i, "alltoall",
-                                           wire_dtype=wire)[0]
-                ring += node_exchange_bytes(plan, i, "ring",
-                                            wire_dtype=wire)[0]
+                a2a += node_exchange_bytes(plan, i, "alltoall", wire_dtype=wire)[0]
+                ring += node_exchange_bytes(plan, i, "ring", wire_dtype=wire)[0]
             rec[f"a2a_bytes_{tag}"] = a2a
             rec[f"ring_bytes_{tag}"] = ring
-        rec["ring_wire_ratio_int16"] = (
-            rec["ring_bytes_int16"] / max(rec["ring_bytes_f32"], 1)
-        )
-        rec["ring_wire_ratio_int8"] = (
-            rec["ring_bytes_int8"] / max(rec["ring_bytes_f32"], 1)
-        )
+        rec["ring_wire_ratio_int16"] = rec["ring_bytes_int16"] / max(rec["ring_bytes_f32"], 1)
+        rec["ring_wire_ratio_int8"] = rec["ring_bytes_int8"] / max(rec["ring_bytes_f32"], 1)
         emit(
             f"fig11/wire_volume/skew{skew}",
             0.0,
@@ -193,8 +184,7 @@ def _dist_worker(smoke: bool):
     key = jax.random.key(0)
     out = {}
     base = None
-    for wire, tag in (("float32", "f32"), ("int16", "int16"),
-                      ("int8", "int8")):
+    for wire, tag in (("float32", "f32"), ("int16", "int16"), ("int8", "int8")):
         f = keyed_sample_fn(plan, mesh, mode="ring", wire_dtype=wire)
         got = f(key, 2)
         if base is None:

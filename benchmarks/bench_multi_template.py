@@ -33,7 +33,7 @@ from repro.core.count_engine import (
     count_fn,
     count_fn_many,
 )
-from repro.core.templates import compile_templates, partition_tree, template
+from repro.core.templates import compile_templates, template, template_program
 
 from .common import ROOT, emit, time_fn
 
@@ -48,9 +48,9 @@ FAMILIES = {
 
 
 def dedup_stats(names) -> dict:
-    """Structural reuse: unique DAG tables vs sum of per-chain nodes."""
+    """Structural reuse: unique DAG tables vs sum of per-program nodes."""
     dag = compile_templates(names)
-    chains = [partition_tree(template(n)) for n in names]
+    chains = [template_program(template(n)) for n in names]
     chain_nodes = sum(len(c.nodes) for c in chains)
     chain_internal = sum(len(c.internal_nodes()) for c in chains)
     return {
@@ -104,6 +104,42 @@ def bench_family(fname: str, names, g, batch: int) -> dict:
     return rec
 
 
+#: treewidth-2 smoke family (DESIGN.md §19): bag-table programs carry the
+#: pinned-apex axis, so their tables are [v, x * W] — the section runs on
+#: its own small graph (x = |V| multiplies every bag-table width)
+BAG_FAMILY = ("cycle3", "cycle5", "diamond")
+
+
+def bench_bags(batch: int) -> dict:
+    """Cycle/diamond family through the shared DAG: structural interning
+    metrics (``bag_``-prefixed, held by the CI gate) plus one shared-pass
+    timing on a bag-scale graph."""
+    names = BAG_FAMILY
+    dag = compile_templates(names)
+    progs = [template_program(template(n)) for n in names]
+    solo_nodes = sum(len(p.nodes) for p in progs)
+    g = rmat(192, 1_200, skew=3, seed=0)
+    mp = build_multi_counting_plan(g, names)
+    f_many = count_fn_many(mp, batch=batch)
+    key = jax.random.key(0)
+    sec = time_fn(lambda: f_many(key), iters=3)
+    rec = {
+        "bag_dag_nodes": len(dag.nodes),
+        "bag_solo_nodes_sum": solo_nodes,
+        "bag_unique_table_ratio": len(dag.nodes) / solo_nodes,
+        "bag_x_dim": g.n,
+        "bag_widest_cols": max(mp.widths.values()),
+        "bag_shared_us": sec * 1e6,
+    }
+    emit(
+        "multi_template/bags",
+        sec * 1e6,
+        f"dag={rec['bag_dag_nodes']}/{solo_nodes} x={g.n} "
+        f"widest={rec['bag_widest_cols']} shared={sec * 1e3:.0f}ms",
+    )
+    return rec
+
+
 def run(smoke: bool = False, json_path: str = JSON_PATH):
     v, e, batch = (1 << 11, 16_000, 4) if smoke else (1 << 12, 40_000, 8)
     g = rmat(v, e, skew=3, seed=0)
@@ -121,6 +157,7 @@ def run(smoke: bool = False, json_path: str = JSON_PATH):
             results["families"][fname] = dedup_stats(names)
             continue
         results["families"][fname] = bench_family(fname, names, g, batch)
+    results["bags"] = bench_bags(batch)
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -117,8 +117,11 @@ def bench_template(tname: str, g, smoke: bool) -> dict:
     threshold = THRESHOLDS[tname]
     dense = build_counting_plan(g, template(tname))
     comp = build_counting_plan(
-        g, template(tname), compact=True,
-        density_threshold=threshold, capacity_factor=CAPACITY_FACTOR,
+        g,
+        template(tname),
+        compact=True,
+        density_threshold=threshold,
+        capacity_factor=CAPACITY_FACTOR,
     )
     spec = comp.compaction
     rec = {
@@ -147,8 +150,12 @@ def bench_template(tname: str, g, smoke: bool) -> dict:
     rec["single"]["speedup_compact"] = sec_dense / sec_comp
 
     dist = build_distributed_plan(
-        g, template(tname), SHARDS, compact=True,
-        density_threshold=threshold, capacity_factor=CAPACITY_FACTOR,
+        g,
+        template(tname),
+        SHARDS,
+        compact=True,
+        density_threshold=threshold,
+        capacity_factor=CAPACITY_FACTOR,
     )
     rec["distributed"] = exchange_bytes(dist)
 
@@ -184,7 +191,10 @@ def bench_checkpoint(smoke: bool) -> dict:
     rng = np.random.default_rng(0)
     state = EstimatorState(
         signature=f"bench|n_iter={n_iter}|batch={BATCH}|delta=0.1|key=0,0",
-        n_iter=n_iter, batch=BATCH, delta=0.1, cursor=n_iter // BATCH,
+        n_iter=n_iter,
+        batch=BATCH,
+        delta=0.1,
+        cursor=n_iter // BATCH,
         samples=np.abs(rng.standard_normal(n_iter)),
     )
     payload = state.to_arrays()
@@ -226,7 +236,10 @@ def _dist_worker(smoke: bool):
     for tname in TEMPLATES:
         pd = build_distributed_plan(g, template(tname), SHARDS)
         pc = build_distributed_plan(
-            g, template(tname), SHARDS, compact=True,
+            g,
+            template(tname),
+            SHARDS,
+            compact=True,
             density_threshold=THRESHOLDS[tname],
             capacity_factor=CAPACITY_FACTOR,
         )

@@ -52,9 +52,7 @@ def run(smoke: bool = False):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--smoke", action="store_true", help="small graph + first two templates (CI)"
-    )
+    ap.add_argument("--smoke", action="store_true", help="small graph + first two templates (CI)")
     args = ap.parse_args()
     run(smoke=args.smoke)
 

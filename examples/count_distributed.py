@@ -43,9 +43,7 @@ def main():
     )
 
     key = jax.random.key(0)
-    base = Counter.from_graph(
-        g, tree, backend="distributed", num_shards=shards, mode="alltoall"
-    )
+    base = Counter.from_graph(g, tree, backend="distributed", num_shards=shards, mode="alltoall")
     for mode, gf in (
         ("alltoall", 1),
         ("pipeline", 1),

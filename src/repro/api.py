@@ -62,7 +62,7 @@ from repro.core.estimator import (
 )
 from repro.core.graphs import Graph
 from repro.core.supervisor import RetryPolicy
-from repro.core.templates import Tree, partition_tree, template as resolve_template
+from repro.core.templates import Tree, template_program, template as resolve_template
 from repro.train.checkpoint import CheckpointManager
 
 __all__ = [
@@ -220,9 +220,7 @@ class MultiCountResult:
         return (self[i] for i in range(len(self)))
 
     def __str__(self) -> str:
-        per = ", ".join(
-            f"{t}={e:.6g}" for t, e in zip(self.templates, self.estimates)
-        )
+        per = ", ".join(f"{t}={e:.6g}" for t, e in zip(self.templates, self.estimates))
         return (
             f"MultiCountResult({per} in {self.graph or 'graph'} via "
             f"{self.backend}, k={self.k}, {self.unique_tables}/"
@@ -301,8 +299,7 @@ class Counter:
       and for composing with external aggregators.
     """
 
-    def __init__(self, graph: Graph, tree: Tree, backend: str,
-                 plan_opts: Dict[str, Any]):
+    def __init__(self, graph: Graph, tree: Tree, backend: str, plan_opts: Dict[str, Any]):
         self.graph = graph
         self.tree = tree
         self.backend = backend
@@ -344,7 +341,9 @@ class Counter:
     @classmethod
     def from_request(cls, request: CountRequest) -> "Counter":
         return cls.from_graph(
-            request.graph, request.template, backend=request.backend,
+            request.graph,
+            request.template,
+            backend=request.backend,
             **dict(request.plan_opts),
         )
 
@@ -381,10 +380,8 @@ class Counter:
                 f"{self._mesh.axis_names} — pass an explicit mesh containing "
                 f"it to from_graph"
             )
-        clone = Counter(self.graph, self.tree, self.backend,
-                        {**self.plan_opts, **overrides})
-        if ("bucket_tile" in overrides
-                and overrides["bucket_tile"] != self._plan.bucket_tile):
+        clone = Counter(self.graph, self.tree, self.backend, {**self.plan_opts, **overrides})
+        if ("bucket_tile" in overrides and overrides["bucket_tile"] != self._plan.bucket_tile):
             return clone  # different tiling: plan rebuilds lazily
         clone._plan = self._plan
         clone._mesh = self._mesh
@@ -475,8 +472,7 @@ class Counter:
     @property
     def plan(self):
         """The lazily-built backend plan (CountingPlan or DistributedPlan)."""
-        return (self._build_single() if self.backend == "single"
-                else self._build_distributed())
+        return self._build_single() if self.backend == "single" else self._build_distributed()
 
     @property
     def scale(self) -> float:
@@ -547,10 +543,18 @@ class Counter:
         mgr, state = _resolve_checkpointing(checkpoint, resume)
         t0 = time.perf_counter()
         est = estimate_counts(
-            sample, n_iter, key, delta=delta, batch=b, progress=progress,
-            retry=_retry_policy(retry, max_retries), checkpoint=mgr,
-            checkpoint_every=checkpoint_every, resume=state,
-            target_rsd=target_rsd, signature_extra=self._signature_extra(),
+            sample,
+            n_iter,
+            key,
+            delta=delta,
+            batch=b,
+            progress=progress,
+            retry=_retry_policy(retry, max_retries),
+            checkpoint=mgr,
+            checkpoint_every=checkpoint_every,
+            resume=state,
+            target_rsd=target_rsd,
+            signature_extra=self._signature_extra(),
         )
         elapsed = time.perf_counter() - t0
         return CountResult(
@@ -616,9 +620,7 @@ class Counter:
         per coloring on this Counter's backend — the cross-template subtree
         reuse of DESIGN.md §14.
         """
-        trees = tuple(
-            resolve_template(t) if isinstance(t, str) else t for t in templates
-        )
+        trees = tuple(resolve_template(t) if isinstance(t, str) else t for t in templates)
         if not trees:
             raise ValueError("estimate_many needs at least one template")
         st = self._families.get(trees)
@@ -627,16 +629,13 @@ class Counter:
         if self.backend == "single":
             keep = {k: v for k, v in self.plan_opts.items() if k != "root"}
             plan = build_multi_counting_plan(self.graph, trees, **keep)
-            st = {"plan": plan, "sample_fn": multi_sample_fn(plan),
-                  "coloring_fn": None}
+            st = {"plan": plan, "sample_fn": multi_sample_fn(plan), "coloring_fn": None}
         else:
             from repro.core.distributed import build_distributed_plan
 
             self._dist_ctx()
             plan_kw = {k: v for k, v in self._plan_kw.items() if k != "root"}
-            plan = build_distributed_plan(
-                self.graph, trees, self._num_shards, **plan_kw
-            )
+            plan = build_distributed_plan(self.graph, trees, self._num_shards, **plan_kw)
             st = {"plan": plan, "sample_fn": None, "coloring_fn": None}
         self._families[trees] = st
         return st
@@ -691,18 +690,21 @@ class Counter:
 
             st["sample_fn"] = keyed_sample_fn(plan, self._mesh, **self._fn_kw)
         dag = plan.dag if self.backend == "single" else plan.program
-        chain_tables = sum(
-            len(partition_tree(t).nodes) for t in plan.templates
-        )
-        names = tuple(
-            t.name or f"tree{i}" for i, t in enumerate(plan.templates)
-        )
+        chain_tables = sum(len(template_program(t).nodes) for t in plan.templates)
+        names = tuple(t.name or f"tree{i}" for i, t in enumerate(plan.templates))
         mgr, state = _resolve_checkpointing(checkpoint, resume)
         t0 = time.perf_counter()
         est = estimate_counts_many(
-            st["sample_fn"], n_iter, key, delta=delta, batch=b,
-            progress=progress, retry=_retry_policy(retry, max_retries),
-            checkpoint=mgr, checkpoint_every=checkpoint_every, resume=state,
+            st["sample_fn"],
+            n_iter,
+            key,
+            delta=delta,
+            batch=b,
+            progress=progress,
+            retry=_retry_policy(retry, max_retries),
+            checkpoint=mgr,
+            checkpoint_every=checkpoint_every,
+            resume=state,
             target_rsd=target_rsd,
             signature_extra=self._signature_extra(family=names, k=plan.k),
         )
@@ -745,14 +747,10 @@ class Counter:
             col = np.zeros(plan.n_pad, np.int32)
             col[: self.graph.n] = coloring
             if plan.compaction is not None and plan.compaction.enabled:
-                maps, ok = colorful_map_count_many_checked(
-                    plan, jnp.asarray(col)
-                )
+                maps, ok = colorful_map_count_many_checked(plan, jnp.asarray(col))
                 if bool(ok):
                     return np.asarray(maps, np.float64)
-            return np.asarray(
-                colorful_map_count_many(plan, jnp.asarray(col)), np.float64
-            )
+            return np.asarray(colorful_map_count_many(plan, jnp.asarray(col)), np.float64)
         from repro.core.distributed import make_count_fn, shard_coloring
 
         if st["coloring_fn"] is None:
@@ -761,9 +759,7 @@ class Counter:
             shard_coloring(plan, coloring)[None],
             (self._iter_size(), plan.num_shards, plan.n_loc_pad),
         )
-        return np.asarray(
-            st["coloring_fn"](jnp.asarray(cols)), np.float64
-        )[0]
+        return np.asarray(st["coloring_fn"](jnp.asarray(cols)), np.float64)[0]
 
     def sample_stream(
         self, key: Optional[jax.Array] = None, *, batch: int = 8
@@ -795,12 +791,13 @@ class Counter:
         from repro.serve import CountingService
 
         k = n_colors or self.plan_opts.get("n_colors") or self.k
-        opts = {
-            key: v for key, v in self.plan_opts.items() if key != "n_colors"
-        }
+        opts = {key: v for key, v in self.plan_opts.items() if key != "n_colors"}
         return CountingService(
-            self.graph, n_colors=k, backend=self.backend,
-            plan_opts=opts, config=config,
+            self.graph,
+            n_colors=k,
+            backend=self.backend,
+            plan_opts=opts,
+            config=config,
         )
 
 
@@ -831,9 +828,15 @@ def run(
     """
     counter = Counter.from_request(request)
     return counter.estimate(
-        request.n_iter, eps=request.eps, delta=request.delta, key=key,
-        batch=request.batch, progress=progress,
-        max_retries=request.max_retries, target_rsd=request.target_rsd,
-        checkpoint=checkpoint, checkpoint_every=request.checkpoint_every,
+        request.n_iter,
+        eps=request.eps,
+        delta=request.delta,
+        key=key,
+        batch=request.batch,
+        progress=progress,
+        max_retries=request.max_retries,
+        target_rsd=request.target_rsd,
+        checkpoint=checkpoint,
+        checkpoint_every=request.checkpoint_every,
         resume=resume,
     )

@@ -120,9 +120,7 @@ def mask_columns(mask: jax.Array, cap: int, wire_dtype: str) -> jax.Array:
     ncols = -(-n_words // cap)
     pad = ncols * cap - n_words
     if pad:
-        words = jnp.concatenate(
-            [words, jnp.zeros(words.shape[:-1] + (pad,), words.dtype)], axis=-1
-        )
+        words = jnp.concatenate([words, jnp.zeros(words.shape[:-1] + (pad,), words.dtype)], axis=-1)
     cols = words.reshape(words.shape[:-1] + (ncols, cap))
     return jnp.swapaxes(cols, -1, -2)
 
@@ -132,9 +130,7 @@ def mask_from_columns(cols: jax.Array, r_len: int, wire_dtype: str) -> jax.Array
     wb = _WORD_BITS[wire_dtype]
     n_words = -(-r_len // wb)
     flat = jnp.swapaxes(cols, -1, -2).reshape(cols.shape[:-2] + (-1,))
-    u = jax.lax.bitcast_convert_type(
-        flat[..., :n_words], _WORD_UINT[wire_dtype]
-    ).astype(jnp.uint32)
+    u = jax.lax.bitcast_convert_type(flat[..., :n_words], _WORD_UINT[wire_dtype]).astype(jnp.uint32)
     bits = (u[..., None] >> jnp.arange(wb, dtype=jnp.uint32)) & 1
     return bits.reshape(bits.shape[:-2] + (-1,))[..., :r_len] != 0
 
@@ -161,9 +157,7 @@ def int8_decompress(q: jax.Array, scale: jax.Array, block: int = 256) -> jax.Arr
     return (flat * scale[:, None]).reshape(-1)
 
 
-def compressed_ring_reduce_scatter(
-    x: jax.Array, axis_name: str, *, block: int = 256
-) -> jax.Array:
+def compressed_ring_reduce_scatter(x: jax.Array, axis_name: str, *, block: int = 256) -> jax.Array:
     """Ring reduce-scatter with int8 payloads; input [P, chunk...] per device.
 
     Output: this device's fully reduced chunk (fp32).  Chunk sizes must be a

@@ -84,9 +84,7 @@ def ring_allgather_overlap(
     return acc
 
 
-def ring_reduce_scatter(
-    x: jax.Array, axis_name: str, *, chunk_axis: int = 0
-) -> jax.Array:
+def ring_reduce_scatter(x: jax.Array, axis_name: str, *, chunk_axis: int = 0) -> jax.Array:
     """Ring reduce-scatter: input [P, ...] per device, output chunk ``p``.
 
     Chunk ``c`` starts at device ``c+1`` and accumulates around the ring,

@@ -59,9 +59,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):
             kw["check_vma"] = check_vma
         if axis_names is not None:
             kw["axis_names"] = set(axis_names)
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
-        )
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
     from jax.experimental.shard_map import shard_map as _shard_map
 
     kw = {}

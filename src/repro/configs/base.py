@@ -131,9 +131,7 @@ class ArchConfig:
             d_ff=128,
             vocab_size=256,
             num_experts=min(self.num_experts, 4) if self.num_experts else 0,
-            experts_per_token=min(self.experts_per_token, 2)
-            if self.num_experts
-            else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.num_experts else 0,
             window=min(self.window, 32) if self.window else 0,
             local_window=32,
             encoder_layers=min(self.encoder_layers, 2),

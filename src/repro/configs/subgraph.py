@@ -67,8 +67,7 @@ class CountingConfig:
         """Materialize the configured RMAT graph (randomly relabeled)."""
         from repro.core.graphs import relabel_random, rmat
 
-        g = rmat(self.num_vertices, self.num_edges, skew=self.skew,
-                 seed=seed, name=self.name)
+        g = rmat(self.num_vertices, self.num_edges, skew=self.skew, seed=seed, name=self.name)
         return relabel_random(g, seed=seed + 1)
 
     def to_request(self, graph=None, *, backend: str = "auto",
@@ -171,6 +170,28 @@ COUNTING_CONFIGS = {
     "bench-family": CountingConfig("bench-family", 20_000, 200_000,
                                    template="u7-2", num_shards=8,
                                    templates=("u3-1", "u5-2", "u7-2")),
+    # treewidth-2 rows (DESIGN.md §19): apex-pinned bag programs.  The
+    # cycle row is the pure non-tree workload; the mixed row compiles
+    # trees and cycles into ONE shared DAG (tree nodes keep the classic
+    # chain path bit-identically, bag nodes run the pinned-apex strategy)
+    # bag-scale graphs: the pinned-apex axis multiplies every bag-table
+    # width by |V|, so treewidth-2 rows stay small (|V|^2 * W floats)
+    "bench-cycles": CountingConfig(
+        "bench-cycles",
+        256,
+        2_000,
+        template="cycle5",
+        num_shards=8,
+        templates=("cycle3", "cycle5", "diamond"),
+    ),
+    "bench-tw2-mixed": CountingConfig(
+        "bench-tw2-mixed",
+        256,
+        2_000,
+        template="cycle6",
+        num_shards=8,
+        templates=("u3-1", "cycle4", "u5-2", "cycle6", "diamond"),
+    ),
 }
 
 

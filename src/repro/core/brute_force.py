@@ -1,8 +1,13 @@
 """Exact (exponential) oracles for testing the color-coding DP.
 
-``count_embedding_maps`` counts injective maps of the template tree into the
-graph (rooted-anywhere, i.e. plain subgraph-isomorphism maps for trees);
-the number of subgraph *copies* is ``maps / |Aut(T)|``.
+``count_embedding_maps`` counts injective maps of the template into the
+graph (rooted-anywhere, i.e. plain subgraph-isomorphism maps); the number
+of subgraph *copies* is ``maps / |Aut(T)|``.  Templates may be trees or
+general connected :class:`~repro.core.templates.Template` graphs — the
+backtracking extends candidates along a BFS spanning tree and then checks
+every remaining template edge, so cycles/diamonds/chordal patterns are
+exact too (for trees the extra check is vacuous and the behavior is
+unchanged).
 
 ``count_colorful_maps`` counts only maps whose image uses pairwise-distinct
 colors under a fixed coloring — the quantity the DP computes exactly (for a
@@ -18,12 +23,11 @@ from typing import Optional
 import numpy as np
 
 from .graphs import Graph
-from .templates import Tree
 
 __all__ = ["count_embedding_maps", "count_colorful_maps", "count_copies"]
 
 
-def _bfs_order(tree: Tree):
+def _bfs_order(tree):
     """Template vertices in BFS order from 0, with parent pointers."""
     adj = tree.adjacency()
     order = [0]
@@ -39,7 +43,7 @@ def _bfs_order(tree: Tree):
     return order, parent
 
 
-def _count_maps(g: Graph, tree: Tree, coloring: Optional[np.ndarray]) -> int:
+def _count_maps(g: Graph, tree, coloring: Optional[np.ndarray]) -> int:
     order, parent = _bfs_order(tree)
     n = g.n
     k = tree.n
@@ -47,6 +51,9 @@ def _count_maps(g: Graph, tree: Tree, coloring: Optional[np.ndarray]) -> int:
     assignment = np.full(k, -1, np.int64)
     used_vertices = set()
     used_colors = set()
+    # host adjacency as sets, for the non-spanning-tree edge checks
+    gadj = [set(int(u) for u in g.neighbors(v)) for v in range(n)]
+    tadj = tree.adjacency()
 
     def rec(i: int) -> int:
         if i == len(order):
@@ -59,6 +66,18 @@ def _count_maps(g: Graph, tree: Tree, coloring: Optional[np.ndarray]) -> int:
             gv = int(gv)
             if gv in used_vertices:
                 continue
+            # every template edge whose other end is already placed must be
+            # a host edge too (trees: only tp is placed, already satisfied)
+            ok = True
+            for tu in tadj[tv]:
+                if tu == tp:
+                    continue
+                gu = assignment[tu]
+                if gu >= 0 and gv not in gadj[int(gu)]:
+                    ok = False
+                    break
+            if not ok:
+                continue
             if coloring is not None:
                 c = int(coloring[gv])
                 if c in used_colors:
@@ -67,6 +86,7 @@ def _count_maps(g: Graph, tree: Tree, coloring: Optional[np.ndarray]) -> int:
             used_vertices.add(gv)
             assignment[tv] = gv
             count += rec(i + 1)
+            assignment[tv] = -1
             used_vertices.discard(gv)
             if coloring is not None:
                 used_colors.discard(int(coloring[gv]))
@@ -76,18 +96,18 @@ def _count_maps(g: Graph, tree: Tree, coloring: Optional[np.ndarray]) -> int:
     return total
 
 
-def count_embedding_maps(g: Graph, tree: Tree) -> int:
-    """Number of injective maps (labeled embeddings) of the tree into g."""
+def count_embedding_maps(g: Graph, tree) -> int:
+    """Number of injective maps (labeled embeddings) of the template into g."""
     return _count_maps(g, tree, None)
 
 
-def count_colorful_maps(g: Graph, tree: Tree, coloring: np.ndarray) -> int:
+def count_colorful_maps(g: Graph, tree, coloring: np.ndarray) -> int:
     """Number of injective maps whose image is colorful under ``coloring``."""
     return _count_maps(g, tree, np.asarray(coloring))
 
 
-def count_copies(g: Graph, tree: Tree) -> float:
-    """Number of non-induced subgraph copies of the tree in g."""
+def count_copies(g: Graph, tree) -> float:
+    """Number of non-induced subgraph copies of the template in g."""
     from .templates import automorphism_count
 
     return count_embedding_maps(g, tree) / automorphism_count(tree)

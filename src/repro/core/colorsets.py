@@ -30,6 +30,7 @@ __all__ = [
     "split_tables",
     "full_set_rank",
     "singleton_ranks",
+    "excluded_color_mask",
 ]
 
 
@@ -93,6 +94,23 @@ def split_tables(k: int, t1: int, t2: int) -> Tuple[np.ndarray, np.ndarray]:
             idx1[s, j] = r1[m1]
             idx2[s, j] = r2[m2]
     return idx1, idx2
+
+
+@lru_cache(maxsize=None)
+def excluded_color_mask(k: int, t: int) -> np.ndarray:
+    """``[k, C(k, t)]`` float32 mask: 1.0 where color ``c`` is NOT in set ``S``.
+
+    The bag-table collapse of the treewidth-2 front-end pins the apex vertex's
+    color outside the forest's color set; row ``c`` of this mask filters the
+    size-``t`` table columns down to the sets that exclude ``c``.
+    """
+    masks = set_masks(k, t)
+    out = np.ones((k, len(masks)), np.float32)
+    for s, m in enumerate(masks):
+        for c in range(k):
+            if (m >> c) & 1:
+                out[c, s] = 0.0
+    return out
 
 
 def full_set_rank(k: int) -> int:

@@ -56,8 +56,10 @@ from .frontier import (
     make_frontier_fn,
     single_device_compaction,
 )
+from .colorsets import excluded_color_mask
 from .graphs import Graph, edge_list
 from .table_program import (
+    BagFns,
     leaf_table,
     local_node_fn,
     build_node_tables,
@@ -66,11 +68,14 @@ from .table_program import (
 )
 from .templates import (
     PartitionChain,
+    Template,
     TemplateDag,
     Tree,
     automorphism_count,
     compile_templates,
     partition_tree,
+    program_has_bags,
+    template_program,
 )
 
 __all__ = [
@@ -119,6 +124,9 @@ class CountingPlan:
     lane: int = 128
     #: active-frontier compaction spec (None = dense; DESIGN.md §15)
     compaction: Optional[CompactionSpec] = None
+    #: dense host adjacency ``[n_pad, n]`` for pinned bag leaves (treewidth-2
+    #: templates only; None for pure-tree programs — DESIGN.md §19)
+    pin_adj: Optional[jax.Array] = None
 
     @property
     def scale(self) -> float:
@@ -144,6 +152,7 @@ class MultiCountingPlan:
     fuse: bool = False
     lane: int = 128
     compaction: Optional[CompactionSpec] = None
+    pin_adj: Optional[jax.Array] = None
 
     @property
     def num_templates(self) -> int:
@@ -152,9 +161,7 @@ class MultiCountingPlan:
     @property
     def scales(self) -> Tuple[float, ...]:
         """Per-template copy-estimate scales (all against the shared k)."""
-        return tuple(
-            copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts)
-        )
+        return tuple(copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts))
 
 
 def _build_spmm(g, spmm_kind, tile_size, block_size):
@@ -171,11 +178,33 @@ def _resolve_lane(lane, impl):
     return lane
 
 
+def _build_pin_adj(g: Graph, n_pad: int) -> jax.Array:
+    """Dense ``[n_pad, n]`` float32 host adjacency for pinned bag leaves.
+
+    Pad rows stay zero, so a pinned leaf's pad rows are zero without extra
+    masking (the §15/§18 pad-row invariant holds for bag tables too)."""
+    rows, cols = edge_list(g)
+    a = np.zeros((n_pad, g.n), np.float32)
+    a[np.asarray(rows), np.asarray(cols)] = 1.0
+    return jnp.asarray(a)
+
+
 def _maybe_compaction(
-    g, program, combine, k, spmm_plan, compact, density_threshold,
-    capacity_factor, probes,
+    g,
+    program,
+    combine,
+    k,
+    spmm_plan,
+    compact,
+    density_threshold,
+    capacity_factor,
+    probes,
 ):
     if not compact:
+        return None
+    if program_has_bags(program):
+        # §15's boolean activity probe models tree combines only; bag-table
+        # programs run dense (DESIGN.md §19 documents the bypass)
         return None
     return single_device_compaction(
         g, program, combine, k,
@@ -213,17 +242,31 @@ def build_counting_plan(
     combines contract only active rows, the SpMM/fused kernels read sparse
     right tables through the compact row-index indirection, and the
     capacity headroom is ``capacity_factor`` (overflow falls back to the
-    dense program, bit-exactly)."""
-    chain = partition_tree(tree, root=root)
+    dense program, bit-exactly).
+
+    ``tree`` may be a :class:`Tree` or a :class:`Template`: tree-shaped
+    templates take the classic :func:`partition_tree` path bit-identically,
+    non-trees compile to an apex-pinned bag program (DESIGN.md §19)."""
+    if isinstance(tree, Template) and tree.is_tree:
+        tree = tree.as_tree()
+    chain = template_program(tree, root=root)
+    has_bags = program_has_bags(chain)
     k = n_colors if n_colors is not None else tree.n
     if k < tree.n:
         raise ValueError(f"n_colors={k} is smaller than the template ({tree.n})")
     plan = _build_spmm(g, spmm_kind, tile_size, block_size)
     lane = _resolve_lane(lane, impl)
-    combine, widths = build_node_tables(chain, k, lane=lane)
+    combine, widths = build_node_tables(chain, k, lane=lane, x_dim=g.n if has_bags else None)
     compaction = _maybe_compaction(
-        g, chain, combine, k, plan, compact, density_threshold,
-        capacity_factor, probes,
+        g,
+        chain,
+        combine,
+        k,
+        plan,
+        compact,
+        density_threshold,
+        capacity_factor,
+        probes,
     )
     return CountingPlan(
         tree=tree,
@@ -239,6 +282,7 @@ def build_counting_plan(
         fuse=fuse,
         lane=lane,
         compaction=compaction,
+        pin_adj=_build_pin_adj(g, plan.n_pad) if has_bags else None,
     )
 
 
@@ -262,12 +306,20 @@ def build_multi_counting_plan(
     """One plan for a whole template family: compile the set into a shared
     :class:`TemplateDag` and build each unique node's combine tables once."""
     dag = compile_templates(templates, n_colors=n_colors, roots=roots)
+    has_bags = program_has_bags(dag)
     plan = _build_spmm(g, spmm_kind, tile_size, block_size)
     lane = _resolve_lane(lane, impl)
-    combine, widths = build_node_tables(dag, dag.k, lane=lane)
+    combine, widths = build_node_tables(dag, dag.k, lane=lane, x_dim=g.n if has_bags else None)
     compaction = _maybe_compaction(
-        g, dag, combine, dag.k, plan, compact, density_threshold,
-        capacity_factor, probes,
+        g,
+        dag,
+        combine,
+        dag.k,
+        plan,
+        compact,
+        density_threshold,
+        capacity_factor,
+        probes,
     )
     return MultiCountingPlan(
         templates=dag.templates,
@@ -283,6 +335,7 @@ def build_multi_counting_plan(
         fuse=fuse,
         lane=lane,
         compaction=compaction,
+        pin_adj=_build_pin_adj(g, plan.n_pad) if has_bags else None,
     )
 
 
@@ -296,28 +349,97 @@ def _program_counts(plan, program, coloring: jax.Array, *, checked=False):
     """
     n_pad = plan.n_pad
     row_mask = (jnp.arange(n_pad) < plan.n).astype(jnp.float32)[:, None]
-    leaf = leaf_table(coloring, ops.pad_to(plan.k, plan.lane), row_mask)
+    k_pad = ops.pad_to(plan.k, plan.lane)
+    leaf = leaf_table(coloring, k_pad, row_mask)
+    bag = _bag_fns(plan, program, coloring, leaf) if program_has_bags(program) else None
     spec = plan.compaction if checked else None
     if spec is not None and spec.enabled:
         flags: list = []
         frontier_fn = make_frontier_fn(spec.table_caps, plan.n, flags)
         node_fn = local_node_fn(
-            plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse,
-            compaction=spec, sentinel_row=plan.n, flags=flags,
+            plan.spmm_plan,
+            row_mask,
+            impl=plan.impl,
+            fuse=plan.fuse,
+            compaction=spec,
+            sentinel_row=plan.n,
+            flags=flags,
         )
         roots = run_table_program(
-            program, plan.combine, leaf, row_mask, node_fn,
-            root_fn=root_count, frontier_fn=frontier_fn,
+            program,
+            plan.combine,
+            leaf,
+            row_mask,
+            node_fn,
+            root_fn=root_count,
+            frontier_fn=frontier_fn,
         )
         ok = jnp.bool_(True)
         for f in flags:
             ok = jnp.logical_and(ok, f)
         return roots, ok
     node_fn = local_node_fn(plan.spmm_plan, row_mask, impl=plan.impl, fuse=plan.fuse)
+    if bag is not None:
+        node_fn = _bag_node_fn(plan, program, row_mask, node_fn)
     roots = run_table_program(
-        program, plan.combine, leaf, row_mask, node_fn, root_fn=root_count
+        program, plan.combine, leaf, row_mask, node_fn, root_fn=root_count, bag=bag
     )
     return (roots, jnp.bool_(True)) if checked else roots
+
+
+def _bag_node_fn(plan, program, row_mask, base_fn):
+    """Wrap the in-core neighbor-sum strategy for ``bag_combine`` nodes.
+
+    A bag table ``[rows, x * W]`` is, row-major, ``x`` contiguous blocks of
+    width ``W`` per vertex row — so the whole-graph SpMM applies unchanged
+    (it is width-agnostic), and the color convolution runs on the exact
+    ``[rows * x, W]`` reshape.  Fusion is bypassed per bag node (the fused
+    kernel contracts over vertex rows and cannot align the ``(v, x)`` pair
+    axis); tree nodes of a mixed program keep their fused path.
+    """
+    x_dim = plan.n
+
+    def node_fn(i, tbl, c_left, c_right, f_left, f_right):
+        if program.nodes[i].kind != "bag_combine":
+            return base_fn(i, tbl, c_left, c_right, f_left, f_right)
+        m = ops.spmm(plan.spmm_plan, c_right, impl=plan.impl) * row_mask
+        rows = c_left.shape[0]
+        lhs = c_left.reshape(rows * x_dim, -1)
+        rhs = m.reshape(rows * x_dim, -1)
+        out = ops.color_combine(lhs, rhs, tbl, impl=plan.impl)
+        return out.reshape(rows, x_dim * tbl.s_pad)
+
+    return node_fn
+
+
+def _bag_fns(plan, program, coloring: jax.Array, leaf: jax.Array) -> BagFns:
+    """In-core strategy for the bag-only node kinds (DESIGN.md §19)."""
+    n_pad, x_dim = plan.n_pad, plan.n
+    k_pad = leaf.shape[1]
+    pin_adj = plan.pin_adj  # [n_pad, n]; pad rows zero
+    coloring_x = coloring[: plan.n]  # the x axis is the real host vertices
+
+    def leaf_fn(i, nd):
+        if nd.pin:
+            t = leaf[:, None, :] * pin_adj[:, :, None]
+        else:
+            t = jnp.broadcast_to(leaf[:, None, :], (n_pad, x_dim, k_pad))
+        return t.reshape(n_pad, x_dim * k_pad)
+
+    def collapse_fn(i, child):
+        w = child.shape[1] // x_dim
+        r = child.reshape(n_pad, x_dim, w).sum(axis=0)  # pad v-rows are zero
+        t = program.nodes[i].size
+        filt = excluded_color_mask(plan.k, t)  # [k, C(k, t)]
+        filt_pad = np.zeros((plan.k, w), np.float32)
+        filt_pad[:, : filt.shape[1]] = filt
+        # keep only the color sets that exclude the apex color col(x)
+        return r * jnp.asarray(filt_pad)[coloring_x]
+
+    def join_fn(i, tbl, left, right):
+        return ops.color_combine(left, right, tbl, impl=plan.impl)
+
+    return BagFns(leaf_fn, collapse_fn, join_fn)
 
 
 def colorful_map_count(plan: CountingPlan, coloring: jax.Array) -> jax.Array:
@@ -348,9 +470,7 @@ def colorful_map_count_checked(
     return roots[0], ok
 
 
-def colorful_map_count_many(
-    plan: MultiCountingPlan, coloring: jax.Array
-) -> jax.Array:
+def colorful_map_count_many(plan: MultiCountingPlan, coloring: jax.Array) -> jax.Array:
     """Per-template colorful map counts ``[num_templates]`` for ONE coloring.
 
     One pass over the deduplicated DAG: shared subtree tables are computed
@@ -417,24 +537,16 @@ def count_fn(plan: CountingPlan, batch: Optional[int] = None):
     if batch is None:
 
         def f(key: jax.Array):
-            coloring = jax.random.randint(
-                key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
-            )
+            coloring = jax.random.randint(key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32)
             maps, ok = count1(plan, coloring)
-            return (maps, maps * plan.scale) if ok is None else (
-                maps, maps * plan.scale, ok
-            )
+            return (maps, maps * plan.scale) if ok is None else (maps, maps * plan.scale, ok)
 
     else:
 
         def f(key: jax.Array):
-            colorings = jax.random.randint(
-                key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
-            )
+            colorings = jax.random.randint(key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32)
             maps, ok = jax.vmap(lambda c: count1(plan, c))(colorings)
-            return (maps, maps * plan.scale) if not compact else (
-                maps, maps * plan.scale, ok
-            )
+            return (maps, maps * plan.scale) if not compact else (maps, maps * plan.scale, ok)
 
     if not compact:
         return jax.jit(f)
@@ -457,20 +569,14 @@ def count_fn_many(plan: MultiCountingPlan, batch: Optional[int] = None):
     if batch is None:
 
         def f(key: jax.Array):
-            coloring = jax.random.randint(
-                key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32
-            )
+            coloring = jax.random.randint(key, (plan.n_pad,), 0, plan.k, dtype=jnp.int32)
             maps, ok = count1(plan, coloring)
-            return (maps, maps * scales) if ok is None else (
-                maps, maps * scales, ok
-            )
+            return (maps, maps * scales) if ok is None else (maps, maps * scales, ok)
 
     else:
 
         def f(key: jax.Array):
-            colorings = jax.random.randint(
-                key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32
-            )
+            colorings = jax.random.randint(key, (batch, plan.n_pad), 0, plan.k, dtype=jnp.int32)
             maps, ok = jax.vmap(lambda c: count1(plan, c))(colorings)
             return (maps, maps * scales[None, :]) if not compact else (
                 maps, maps * scales[None, :], ok

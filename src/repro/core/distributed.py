@@ -127,19 +127,24 @@ from .frontier import (
     make_frontier_fn,
     node_exchange_bytes,
 )
+from .colorsets import excluded_color_mask
 from .graphs import Graph
 from .table_program import (
+    BagFns,
     build_node_tables,
     leaf_table,
     root_count,
     run_table_program,
 )
 from .templates import (
+    Template,
     TemplateDag,
     Tree,
     automorphism_count,
+    bag_program,
     compile_templates,
     partition_tree,
+    program_has_bags,
 )
 
 __all__ = [
@@ -185,6 +190,9 @@ class DistributedPlan:
     bucket_counts: np.ndarray  # [P, P] true bucket sizes (diagnostics)
     #: active-frontier compaction spec (None = dense; DESIGN.md §15)
     compaction: Optional[CompactionSpec] = None
+    #: sharded pinned-apex adjacency [P, n_loc_pad, n] (bag programs only;
+    #: DESIGN.md §19) — row v_loc, column x is A[global(v), x]
+    pin_adj: Optional[jax.Array] = None
 
     @property
     def tree(self) -> Tree:
@@ -210,14 +218,12 @@ class DistributedPlan:
 
     @property
     def scales(self) -> Tuple[float, ...]:
-        return tuple(
-            copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts)
-        )
+        return tuple(copy_scale(self.k, t.n, a) for t, a in zip(self.templates, self.auts))
 
     @property
     def device_arrays(self) -> Tuple[jax.Array, ...]:
         """The per-shard plan arrays, in ``make_count_fn`` argument order."""
-        return (
+        base = (
             self.tile_dst,
             self.tile_src_local,
             self.tile_src_compact,
@@ -226,6 +232,9 @@ class DistributedPlan:
             self.a2a_slab_dst,
             self.a2a_slab_cols,
         )
+        if self.pin_adj is not None:
+            base = base + (self.pin_adj,)
+        return base
 
 
 def _resolve_program(tree, root: int, n_colors: Optional[int]):
@@ -234,13 +243,16 @@ def _resolve_program(tree, root: int, n_colors: Optional[int]):
     Returns ``(program, templates, k)``; ``n_colors`` widens the color
     budget past the (largest) template size.
     """
+    if isinstance(tree, Template) and tree.is_tree:
+        tree = tree.as_tree()
     if isinstance(tree, Tree):
         k = n_colors if n_colors is not None else tree.n
         if k < tree.n:
-            raise ValueError(
-                f"n_colors={k} is smaller than the template ({tree.n})"
-            )
+            raise ValueError(f"n_colors={k} is smaller than the template ({tree.n})")
         return partition_tree(tree, root=root), (tree,), k
+    if isinstance(tree, Template):
+        prog = bag_program(tree, n_colors=n_colors)
+        return prog, (tree,), prog.k
     dag = compile_templates(tree, n_colors=n_colors)
     return dag, dag.templates, dag.k
 
@@ -356,12 +368,24 @@ def build_distributed_plan(
         )
         a2a_slab_dst[pp], a2a_slab_cols[pp] = sd, sc
 
-    combine, widths = build_node_tables(program, k, lane=128)
+    has_bags = program_has_bags(program)
+    combine, widths = build_node_tables(program, k, lane=128, x_dim=g.n if has_bags else None)
+
+    pin_adj = None
+    if has_bags:
+        # sharded dense apex adjacency [P, n_loc_pad, n]: for the local row
+        # holding global vertex v, column x is A[v, x] (pad rows all-zero)
+        pa = np.zeros((Pn, n_loc_pad, g.n), np.float32)
+        pa[p_of, rows - p_of * shard_size, cols] = 1.0
+        pin_adj = jnp.asarray(pa)
 
     compaction = None
-    if compact:
+    if compact and not has_bags:
         compaction = distributed_compaction(
-            g, program, combine, k,
+            g,
+            program,
+            combine,
+            k,
             num_shards=Pn,
             shard_size=shard_size,
             n_loc_pad=n_loc_pad,
@@ -396,6 +420,7 @@ def build_distributed_plan(
         a2a_slab_cols=jnp.asarray(a2a_slab_cols),
         bucket_counts=counts,
         compaction=compaction,
+        pin_adj=pin_adj,
     )
 
 
@@ -438,16 +463,17 @@ def abstract_plan(
     n_loc_pad = ops.pad_to(shard_size + 1, 128)
     e_dev = 2.0 * num_edges / Pn
     avg_bucket = e_dev / Pn
-    r_pad = ops.pad_to(
-        min(int(avg_bucket * skew_headroom) + 128, shard_size + 1), 128
-    )
+    r_pad = ops.pad_to(min(int(avg_bucket * skew_headroom) + 128, shard_size + 1), 128)
     num_tiles = Pn * (int(avg_bucket * skew_headroom / bucket_tile) + 1)
     nrb_loc = n_loc_pad // 128
     spb = int(e_dev * skew_headroom / (nrb_loc * bucket_tile)) + 1
 
-    combine, widths = build_node_tables(program, k, lane=128)
+    has_bags = program_has_bags(program)
+    combine, widths = build_node_tables(
+        program, k, lane=128, x_dim=num_vertices if has_bags else None
+    )
     compaction = None
-    if compact:
+    if compact and not has_bags:
         # densities from the exact boolean-DP probe on a sampled subgraph
         # (frontier.sampled_density) — the Markov bound saturated on dense
         # paper graphs, so dry-run capacities never engaged
@@ -500,6 +526,11 @@ def abstract_plan(
         a2a_slab_cols=sc,
         bucket_counts=np.zeros((Pn, Pn), np.int64),
         compaction=compaction,
+        pin_adj=(
+            jax.ShapeDtypeStruct((Pn, n_loc_pad, num_vertices), jnp.float32)
+            if has_bags
+            else None
+        ),
     )
 
 
@@ -543,7 +574,8 @@ def _node_flops(plan: DistributedPlan, node_index: int) -> float:
     if edges_dev <= 0:  # abstract plan: estimate from the tile capacity
         edges_dev = float(plan.num_tiles * plan.bucket_tile)
     spmm_flops = 2.0 * edges_dev * b_width
-    combine_flops = 2.0 * plan.n_loc_pad * tbl.s * tbl.j
+    x = plan.n if nd.kind == "bag_combine" else 1
+    combine_flops = 2.0 * plan.n_loc_pad * x * tbl.s * tbl.j
     return spmm_flops + combine_flops
 
 
@@ -599,7 +631,7 @@ def plan_route_report(
         calibrated = model is not hockney
     per_node = {}
     for i, nd in enumerate(plan.program.nodes):
-        if nd.is_leaf:
+        if nd.kind not in ("combine", "bag_combine"):
             continue
         _, a2a_bytes = node_exchange_bytes(plan, i, "alltoall", wire_dtype)
         _, ring_bytes = node_exchange_bytes(plan, i, "ring", wire_dtype)
@@ -706,13 +738,9 @@ def make_count_fn(
     """
     assert not (keyed and return_raw), "keyed and return_raw are exclusive"
     if wire_dtype not in WIRE_DTYPES:
-        raise ValueError(
-            f"wire_dtype={wire_dtype!r}; expected one of {sorted(WIRE_DTYPES)}"
-        )
+        raise ValueError(f"wire_dtype={wire_dtype!r}; expected one of {sorted(WIRE_DTYPES)}")
     if adaptive not in ("model", "measured"):
-        raise ValueError(
-            f"adaptive={adaptive!r}; expected 'model' or 'measured'"
-        )
+        raise ValueError(f"adaptive={adaptive!r}; expected 'model' or 'measured'")
     Pn = plan.num_shards
     n_loc_pad = plan.n_loc_pad
     r_pad = plan.r_pad
@@ -725,7 +753,7 @@ def make_count_fn(
     node_modes = {
         i: _node_mode(plan, i, mode, hockney, group_factor, wire_dtype)
         for i, nd in enumerate(plan.program.nodes)
-        if not nd.is_leaf
+        if nd.kind in ("combine", "bag_combine")
     }
 
     spec = plan.compaction
@@ -752,13 +780,20 @@ def make_count_fn(
                 mask_only.add(nd.left)
         keep = lambda j: not plan.program.nodes[j].is_leaf
         fr_caps = {j: c for j, c in fr_caps.items() if keep(j)}
-        mask_only = frozenset(
-            j for j in mask_only if keep(j) and j not in fr_caps
-        )
+        mask_only = frozenset(j for j in mask_only if keep(j) and j not in fr_caps)
+
+    has_bags = program_has_bags(plan.program)
 
     def local_count(
-        coloring, tile_dst, tile_src_loc, tile_src_cmp, tile_off, s_idx,
-        slab_dst, slab_cols,
+        coloring,
+        tile_dst,
+        tile_src_loc,
+        tile_src_cmp,
+        tile_off,
+        s_idx,
+        slab_dst,
+        slab_cols,
+        pin_adj=None,
     ):
         """One coloring iteration on this device's shard; returns partial sum.
 
@@ -772,6 +807,46 @@ def make_count_fn(
             make_frontier_fn(fr_caps, plan.shard_size, flags, mask_only=mask_only)
             if compact_on else None
         )
+
+        bag = None
+        if has_bags:
+            # treewidth-2 strategy (DESIGN.md §19), distributed form: bag
+            # tables keep the [v_loc, x * W] sharded layout through every
+            # exchange mode unchanged (the wire is width-agnostic); the
+            # collapse reduces the local vertex rows and psums the [x, W]
+            # result, so collapsed/joined tables are replicated — every
+            # shard holds the full x axis.
+            x_dim = plan.n
+            k_pad = ops.pad_to(plan.k, 128)
+
+            def bag_leaf_fn(i, nd):
+                if nd.pin:
+                    t = leaf[:, None, :] * pin_adj[:, :, None]
+                else:
+                    t = jnp.broadcast_to(leaf[:, None, :], (n_loc_pad, x_dim, k_pad))
+                return t.reshape(n_loc_pad, x_dim * k_pad)
+
+            def bag_collapse_fn(i, child):
+                w = child.shape[1] // x_dim
+                r = child.reshape(n_loc_pad, x_dim, w).sum(axis=0)
+                r = jax.lax.psum(r, data_axis)  # [x, w], replicated
+                t = plan.program.nodes[i].size
+                filt = excluded_color_mask(plan.k, t)
+                filt_pad = np.zeros((plan.k, w), np.float32)
+                filt_pad[:, : filt.shape[1]] = filt
+                # the apex filter needs the GLOBAL coloring: reassemble it
+                # from the shards' true rows (ragged tail sliced off)
+                col_glob = jax.lax.all_gather(
+                    coloring[: plan.shard_size], data_axis, tiled=True
+                )[: plan.n]
+                return r * jnp.asarray(filt_pad)[col_glob]
+
+            def bag_join_fn(i, tbl, left, right):
+                # both inputs are replicated [x, w] tables; the disjoint
+                # color convolution is pure local compute on aligned rows
+                return ops.color_combine(left, right, tbl, impl=impl)
+
+            bag = BagFns(bag_leaf_fn, bag_collapse_fn, bag_join_fn)
 
         def consume_into_m(tile_src):
             """Accumulate a chunk's bucket into the neighbor sum M.
@@ -789,9 +864,7 @@ def make_count_fn(
                     s = jax.lax.dynamic_index_in_dim(tile_src, t, 0, keepdims=False)
                     return a.at[d].add(jnp.take(chunk, s, axis=0))
 
-                return jax.lax.fori_loop(
-                    tile_off[src], tile_off[src + 1], tile_task, acc
-                )
+                return jax.lax.fori_loop(tile_off[src], tile_off[src + 1], tile_task, acc)
 
             return consume
 
@@ -809,17 +882,11 @@ def make_count_fn(
                     s = jax.lax.dynamic_index_in_dim(tile_src, t, 0, keepdims=False)
                     g1 = jnp.take(c_left, d, axis=0)  # [tile, A]
                     g2 = jnp.take(chunk, s, axis=0)  # [tile, B]
-                    contrib = jnp.einsum(
-                        "esj,esj->es", g1[:, tbl.idx1], g2[:, tbl.idx2]
-                    )
-                    contrib = jnp.pad(
-                        contrib, ((0, 0), (0, tbl.s_pad - tbl.s))
-                    )
+                    contrib = jnp.einsum("esj,esj->es", g1[:, tbl.idx1], g2[:, tbl.idx2])
+                    contrib = jnp.pad(contrib, ((0, 0), (0, tbl.s_pad - tbl.s)))
                     return a.at[d].add(contrib)
 
-                return jax.lax.fori_loop(
-                    tile_off[src], tile_off[src + 1], tile_task, acc
-                )
+                return jax.lax.fori_loop(tile_off[src], tile_off[src + 1], tile_task, acc)
 
             return consume
 
@@ -827,18 +894,35 @@ def make_count_fn(
             nm = node_modes[i]
             bw = c_right.shape[1]
             nd_i = plan.program.nodes[i]
+            # bag combines exchange/consume exactly like tree combines (the
+            # wire is width-agnostic over the [v_loc, x * W] layout) but the
+            # contraction must pair per-x blocks, which the fused kernels
+            # cannot address — force the two-step path for these nodes only
+            is_bag = nd_i.kind == "bag_combine"
+            node_fuse = fuse and not is_bag
             rc = spec.exchange_caps.get(nd_i.right) if compact_on else None
             ring_cap = spec.shard_caps.get(nd_i.right) if compact_on else None
-            ccap = (
-                spec.combine_caps.get(i) if compact_on and not fuse else None
-            )
+            ccap = spec.combine_caps.get(i) if compact_on and not fuse else None
 
             def final_combine(m):
                 if ccap is not None:
                     return compact_combine(
-                        c_left, m, tbl, ccap, plan.shard_size, impl, flags,
+                        c_left,
+                        m,
+                        tbl,
+                        ccap,
+                        plan.shard_size,
+                        impl,
+                        flags,
                         left_mask=f_left.mask if f_left is not None else None,
                     )
+                if is_bag:
+                    m = m * row_mask
+                    rows = c_left.shape[0]
+                    lhs = c_left.reshape(rows * plan.n, -1)
+                    rhs = m.reshape(rows * plan.n, -1)
+                    out = ops.color_combine(lhs, rhs, tbl, impl=impl)
+                    return out.reshape(rows, plan.n * tbl.s_pad)
                 return ops.color_combine(c_left, m * row_mask, tbl, impl=impl)
 
             def compact_chunks():
@@ -865,9 +949,7 @@ def make_count_fn(
                         ],
                         axis=-1,
                     )
-                return jnp.concatenate(
-                    [rows, encode_slots(slots)[..., None]], axis=-1
-                )
+                return jnp.concatenate([rows, encode_slots(slots)[..., None]], axis=-1)
 
             if nm == "alltoall":
                 # Naive mode: the whole exchange buffer is materialized
@@ -880,9 +962,7 @@ def make_count_fn(
                     # buffer — inactive slots stay exactly zero, which is
                     # what the dense exchange would have delivered there
                     payload = compact_chunks()
-                    received = jax.lax.all_to_all(
-                        payload, data_axis, split_axis=0, concat_axis=0
-                    )
+                    received = jax.lax.all_to_all(payload, data_axis, split_axis=0, concat_axis=0)
                     r_rows = widen(received[..., :bw]).reshape(Pn * rc, bw)
                     if wire_narrow:
                         masks = mask_from_columns(
@@ -891,9 +971,7 @@ def make_count_fn(
                         r_slots = chunk_slots(masks, rc, r_pad - 1)
                     else:
                         r_slots = decode_slots(received[..., bw])  # [P, rc]
-                    flat = r_slots + (
-                        jnp.arange(Pn, dtype=jnp.int32) * r_pad
-                    )[:, None]
+                    flat = r_slots + (jnp.arange(Pn, dtype=jnp.int32) * r_pad)[:, None]
                     remote = (
                         jnp.zeros((Pn * r_pad, bw), jnp.float32)
                         .at[flat.reshape(-1)]
@@ -910,25 +988,34 @@ def make_count_fn(
                     # the slab kernels widen narrow tables at entry, so the
                     # received buffer feeds them without a separate copy
                     remote = received.reshape(Pn * r_pad, bw)
-                if fuse:
+                if node_fuse:
                     return ops.fused_count_slabs(
-                        slab_dst, slab_cols, c_left, remote, tbl,
-                        slabs_per_block=plan.slabs_per_block, impl=impl,
+                        slab_dst,
+                        slab_cols,
+                        c_left,
+                        remote,
+                        tbl,
+                        slabs_per_block=plan.slabs_per_block,
+                        impl=impl,
                     )
                 m = ops.spmm_slabs(
-                    slab_dst, slab_cols, remote, out_rows=n_loc_pad,
-                    slabs_per_block=plan.slabs_per_block, impl=impl,
+                    slab_dst,
+                    slab_cols,
+                    remote,
+                    out_rows=n_loc_pad,
+                    slabs_per_block=plan.slabs_per_block,
+                    impl=impl,
                 )
                 return final_combine(m)
             # incremental modes: per-chunk tiled-bucket consume
-            if fuse:
+            if node_fuse:
                 init = jnp.zeros((n_loc_pad, tbl.s_pad), jnp.float32)
             else:
                 init = jnp.zeros((n_loc_pad, bw), c_right.dtype)
             if nm == "ring":
                 src_arr = tile_src_loc  # chunks are whole remote shards
                 consume_dense = (
-                    consume_into_out(src_arr, c_left, tbl) if fuse
+                    consume_into_out(src_arr, c_left, tbl) if node_fuse
                     else consume_into_m(src_arr)
                 )
 
@@ -961,9 +1048,7 @@ def make_count_fn(
 
                     def consume_compact(acc, chunk, src):
                         if wire_narrow:
-                            mask = mask_from_columns(
-                                chunk[:, bw:], n_loc_pad, wire_dtype
-                            )
+                            mask = mask_from_columns(chunk[:, bw:], n_loc_pad, wire_dtype)
                             idx = jnp.nonzero(
                                 mask, size=ring_cap,
                                 fill_value=plan.shard_size,
@@ -977,18 +1062,18 @@ def make_count_fn(
                         )
                         return consume_dense(acc, dense, src)
 
-                    out = ring_allgather_overlap(
-                        payload, data_axis, consume_compact, init
-                    )
+                    out = ring_allgather_overlap(payload, data_axis, consume_compact, init)
                 else:
                     out = ring_allgather_overlap(
                         narrow_cast(c_right, wire_dtype, flags),
-                        data_axis, consume, init,
+                        data_axis,
+                        consume,
+                        init,
                     )
             else:  # pipeline
                 src_arr = tile_src_cmp  # chunks are compact request lists
                 consume_dense = (
-                    consume_into_out(src_arr, c_left, tbl) if fuse
+                    consume_into_out(src_arr, c_left, tbl) if node_fuse
                     else consume_into_m(src_arr)
                 )
 
@@ -1000,9 +1085,7 @@ def make_count_fn(
 
                     def consume_compact(acc, chunk, src):
                         if wire_narrow:
-                            mask = mask_from_columns(
-                                chunk[:, bw:], r_pad, wire_dtype
-                            )
+                            mask = mask_from_columns(chunk[:, bw:], r_pad, wire_dtype)
                             slots = jnp.nonzero(
                                 mask, size=rc, fill_value=r_pad - 1
                             )[0].astype(jnp.int32)
@@ -1016,23 +1099,34 @@ def make_count_fn(
                         return consume_dense(acc, dense, src)
 
                     out = grouped_exchange(
-                        payload, data_axis, consume_compact, init,
+                        payload,
+                        data_axis,
+                        consume_compact,
+                        init,
                         group_factor=group_factor,
                     )
                 else:
                     chunks = jnp.take(c_right, s_idx, axis=0)  # [P, r_pad, B]
                     out = grouped_exchange(
                         narrow_cast(chunks, wire_dtype, flags),
-                        data_axis, consume, init,
+                        data_axis,
+                        consume,
+                        init,
                         group_factor=group_factor,
                     )
-            if fuse:
+            if node_fuse:
                 return out
             return final_combine(out)
 
         roots = run_table_program(
-            plan.program, plan.combine, leaf, row_mask, node_fn,
-            root_fn=root_count, frontier_fn=frontier_fn,
+            plan.program,
+            plan.combine,
+            leaf,
+            row_mask,
+            node_fn,
+            root_fn=root_count,
+            frontier_fn=frontier_fn,
+            bag=bag,
         )
         ok = jnp.bool_(True)
         for fl in flags:
@@ -1040,8 +1134,27 @@ def make_count_fn(
         # [R] per-template counts plus this coloring's no-overflow flag
         return jnp.stack(roots), ok
 
+    # bag roots (collapse/join) are psum'd inside local_count, so their
+    # per-shard partials are already the replicated global count — summing
+    # them again across shards would multiply by P.  Static 0/1 weights pick
+    # the right reduction per root without any per-root control flow.
+    w_root = np.array(
+        [
+            0.0
+            if plan.program.nodes[r].kind in ("bag_collapse", "bag_join")
+            else 1.0
+            for r in plan.program.roots
+        ],
+        np.float32,
+    )
+    mixed_roots = bool((w_root == 0.0).any())
+
     def _reduce(partials, oks):
-        counts = jax.lax.psum(partials, data_axis)  # [I_loc, R]
+        if mixed_roots:
+            w = jnp.asarray(w_root)
+            counts = jax.lax.psum(partials * w, data_axis) + partials * (1.0 - w)
+        else:
+            counts = jax.lax.psum(partials, data_axis)  # [I_loc, R]
         if not speculative:
             return counts
         # per-iteration overflow/saturation counts, replicated across shards
@@ -1105,7 +1218,7 @@ def make_count_fn(
         for ax in (iter_axis if isinstance(iter_axis, tuple) else (iter_axis,)):
             if ax:
                 iter_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
-        as_struct = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.int32)
+        as_struct = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
         structs = (
             jax.ShapeDtypeStruct((iter_size, Pn, n_loc_pad), jnp.int32),
         ) + tuple(as_struct(a) for a in plan.device_arrays)
@@ -1137,9 +1250,7 @@ def make_count_fn(
             forced = wire_narrow and (
                 faults.fire("compression.saturate") is not None
             )
-            forced = forced or (
-                compact_on and faults.fire("compaction.overflow") is not None
-            )
+            forced = forced or (compact_on and faults.fire("compaction.overflow") is not None)
             if not forced and int(np.asarray(bad).sum()) == 0:
                 return res
             ft = twin_state.get("fn")

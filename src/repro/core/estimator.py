@@ -164,9 +164,7 @@ class MultiCountEstimate:
     resumed_from: int = 0
 
 
-def run_signature(
-    n_iter: int, batch: int, delta: float, key: jax.Array, *, extra: str = ""
-) -> str:
+def run_signature(n_iter: int, batch: int, delta: float, key: jax.Array, *, extra: str = "") -> str:
     """The identity of one estimation run, for resume safety.
 
     Two runs with equal signatures draw the identical per-call key sequence
@@ -223,8 +221,7 @@ class EstimatorState:
         of the final estimate owns a contiguous slice of the sample stream,
         so its running sum/count is exact at any prefix.
         """
-        g = num_groups_for(self.delta, self.n_iter) if num_groups is None \
-            else num_groups
+        g = num_groups_for(self.delta, self.n_iter) if num_groups is None else num_groups
         per = max(1, self.n_iter // g)
         done = self.done
         sums, counts = [], []
@@ -238,14 +235,10 @@ class EstimatorState:
     def to_arrays(self) -> dict:
         """Flatten to named numpy arrays (the CheckpointManager payload)."""
         q = self.quarantined
-        keys = np.asarray(
-            [r.key_data for r in q], np.uint32
-        ) if q else np.zeros((0, 0), np.uint32)
+        keys = np.asarray([r.key_data for r in q], np.uint32) if q else np.zeros((0, 0), np.uint32)
         reasons = "\n".join(r.reason.replace("\n", " ") for r in q)
         return {
-            "signature": np.frombuffer(
-                self.signature.encode("utf-8"), np.uint8
-            ).copy(),
+            "signature": np.frombuffer(self.signature.encode("utf-8"), np.uint8).copy(),
             "n_iter": np.int64(self.n_iter),
             "batch": np.int64(self.batch),
             "delta": np.float64(self.delta),
@@ -254,9 +247,7 @@ class EstimatorState:
             "q_call": np.asarray([r.call_index for r in q], np.int64),
             "q_attempts": np.asarray([r.attempts for r in q], np.int64),
             "q_keys": keys,
-            "q_reasons": np.frombuffer(
-                reasons.encode("utf-8"), np.uint8
-            ).copy(),
+            "q_reasons": np.frombuffer(reasons.encode("utf-8"), np.uint8).copy(),
         }
 
     @classmethod
@@ -275,9 +266,7 @@ class EstimatorState:
             )
         )
         return cls(
-            signature=bytes(
-                np.asarray(flat["signature"], np.uint8)
-            ).decode("utf-8"),
+            signature=bytes(np.asarray(flat["signature"], np.uint8)).decode("utf-8"),
             n_iter=int(flat["n_iter"]),
             batch=int(flat["batch"]),
             delta=float(flat["delta"]),
@@ -366,9 +355,7 @@ def _collect_samples(
         else:
             out = np.asarray(sample(ki, b), np.float64)
         if isinstance(out, QuarantinedBatch):
-            state = dataclasses.replace(
-                state, cursor=i + 1, quarantined=state.quarantined + (out,)
-            )
+            state = dataclasses.replace(state, cursor=i + 1, quarantined=state.quarantined + (out,))
         else:
             if multi:
                 if out.ndim != 2:
@@ -378,14 +365,13 @@ def _collect_samples(
                     )
             else:
                 out = out.reshape(-1)
-            state = dataclasses.replace(
-                state, cursor=i + 1, samples=_append(state.samples, out)
-            )
+            state = dataclasses.replace(state, cursor=i + 1, samples=_append(state.samples, out))
         if progress and (i + 1) % stride == 0:
             cur = state.samples
             mean = np.array2string(
                 np.atleast_1d(cur.mean(axis=0)) if cur.size else np.zeros(1),
-                precision=6, separator=", ",
+                precision=6,
+                separator=", ",
             )
             print(f"  iter {min(state.done, n_iter)}/{n_iter}: "
                   f"running mean {mean}")
@@ -396,9 +382,7 @@ def _collect_samples(
             spec = faults.fire("estimator.kill")
             if spec is not None:
                 checkpoint.wait()
-                raise faults.InjectedCrash(
-                    f"injected kill after checkpoint at call {i + 1}"
-                )
+                raise faults.InjectedCrash(f"injected kill after checkpoint at call {i + 1}")
     if checkpoint is not None and state.cursor != last_saved:
         checkpoint.save(state.cursor, {"estimator": state.to_arrays()})
         checkpoint.wait()
@@ -426,14 +410,16 @@ def _prepare(
             )
         return resume
     return EstimatorState(
-        signature=sig, n_iter=n_iter, batch=b, delta=delta, cursor=0,
+        signature=sig,
+        n_iter=n_iter,
+        batch=b,
+        delta=delta,
+        cursor=0,
         samples=np.zeros((0,), np.float64),
     )
 
 
-def _supervise(
-    sample: SampleFn, retry: Optional[RetryPolicy]
-) -> Union[SampleFn, Supervisor]:
+def _supervise(sample: SampleFn, retry: Optional[RetryPolicy]) -> Union[SampleFn, Supervisor]:
     if isinstance(sample, Supervisor) or retry is None:
         return sample
     return Supervisor(sample, retry)
@@ -476,8 +462,12 @@ def estimate_counts(
     state = _prepare(n_iter, key, delta, batch, resume, signature_extra)
     resumed_from = state.done
     state = _collect_samples(
-        _supervise(sample, retry), key, state, progress=progress,
-        checkpoint=checkpoint, checkpoint_every=checkpoint_every,
+        _supervise(sample, retry),
+        key,
+        state,
+        progress=progress,
+        checkpoint=checkpoint,
+        checkpoint_every=checkpoint_every,
         target_rsd=target_rsd,
     )
     if state.samples.reshape(-1)[:n_iter].shape[0] == 0:
@@ -487,8 +477,13 @@ def estimate_counts(
         )
     mom, mean, rsd, used, ests = aggregate_single(state.samples, n_iter, delta)
     return CountEstimate(
-        mom, mean, rsd, ests, used,
-        quarantined=state.quarantined, resumed_from=resumed_from,
+        mom,
+        mean,
+        rsd,
+        ests,
+        used,
+        quarantined=state.quarantined,
+        resumed_from=resumed_from,
     )
 
 
@@ -519,9 +514,14 @@ def estimate_counts_many(
     state = _prepare(n_iter, key, delta, batch, resume, signature_extra)
     resumed_from = state.done
     state = _collect_samples(
-        _supervise(sample_fn, retry), key, state, progress=progress,
-        checkpoint=checkpoint, checkpoint_every=checkpoint_every,
-        target_rsd=target_rsd, multi=True,
+        _supervise(sample_fn, retry),
+        key,
+        state,
+        progress=progress,
+        checkpoint=checkpoint,
+        checkpoint_every=checkpoint_every,
+        target_rsd=target_rsd,
+        multi=True,
     )
     ests = state.samples[:n_iter]
     if ests.shape[0] == 0:
@@ -540,6 +540,11 @@ def estimate_counts_many(
     with np.errstate(divide="ignore", invalid="ignore"):
         rsds = np.where(means != 0, ests.std(axis=0) / np.abs(means), np.inf)
     return MultiCountEstimate(
-        mom, means, rsds, ests, used,
-        quarantined=state.quarantined, resumed_from=resumed_from,
+        mom,
+        means,
+        rsds,
+        ests,
+        used,
+        quarantined=state.quarantined,
+        resumed_from=resumed_from,
     )

@@ -128,10 +128,7 @@ class CompactionSpec:
 
     @property
     def enabled(self) -> bool:
-        return bool(
-            self.table_caps or self.combine_caps
-            or self.exchange_caps or self.shard_caps
-        )
+        return bool(self.table_caps or self.combine_caps or self.exchange_caps or self.shard_caps)
 
 
 def capacity_for(
@@ -217,9 +214,7 @@ def probe_activity(
                 for s0 in range(0, s, chunk):
                     i1 = idx1[s0 : s0 + chunk]
                     i2 = idx2[s0 : s0 + chunk]
-                    t[:, s0 : s0 + chunk] = np.any(
-                        left[:, i1] & m[:, i2], axis=2
-                    )
+                    t[:, s0 : s0 + chunk] = np.any(left[:, i1] & m[:, i2], axis=2)
                 out[i] = NodeActivity(
                     table=t.any(axis=1),
                     gather=left.any(axis=1) & m.any(axis=1),
@@ -274,9 +269,7 @@ def single_device_compaction(
         rights = set()
     max_act: Dict[int, int] = {}
     max_gath: Dict[int, int] = {}
-    for masks in probe_activity(
-        graph, program, combine, k, probes=probes, seed=seed
-    ):
+    for masks in probe_activity(graph, program, combine, k, probes=probes, seed=seed):
         for i, a in masks.items():
             max_act[i] = max(max_act.get(i, 0), int(a.table.sum()))
             max_gath[i] = max(max_gath.get(i, 0), int(a.gather.sum()))
@@ -285,18 +278,11 @@ def single_device_compaction(
     table_caps = {}
     combine_caps = {}
     for i in max_act:
-        if (
-            i in rights
-            and density[i] <= threshold
-            and combine[i].s >= MIN_TABLE_WIDTH
-        ):
+        if (i in rights and density[i] <= threshold and combine[i].s >= MIN_TABLE_WIDTH):
             cap = capacity_for(max_act[i], capacity_factor, n_pad)
             if cap is not None:
                 table_caps[i] = cap
-        if (
-            gather_density[i] <= threshold
-            and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS
-        ):
+        if (gather_density[i] <= threshold and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS):
             cap = capacity_for(max_gath[i], capacity_factor, n_pad)
             if cap is not None:
                 combine_caps[i] = cap
@@ -342,9 +328,7 @@ def distributed_compaction(
     max_chunk: Dict[int, int] = {}
     max_shard: Dict[int, int] = {}
     max_gath_shard: Dict[int, int] = {}
-    for masks in probe_activity(
-        graph, program, combine, k, probes=probes, seed=seed
-    ):
+    for masks in probe_activity(graph, program, combine, k, probes=probes, seed=seed):
         for i, a in masks.items():
             max_act[i] = max(max_act.get(i, 0), int(a.table.sum()))
             pad = np.zeros(Pn * ss + 1, bool)
@@ -364,9 +348,7 @@ def distributed_compaction(
                 counts = (pad[np.minimum(glob, Pn * ss)] & valid).sum(axis=2)
                 max_chunk[i] = max(max_chunk.get(i, 0), int(counts.max()))
     density = {i: c / max(n, 1) for i, c in max_act.items()}
-    gather_density = {
-        i: c / max(ss, 1) for i, c in max_gath_shard.items()
-    }
+    gather_density = {i: c / max(ss, 1) for i, c in max_gath_shard.items()}
     exchange_caps = {}
     shard_caps = {}
     combine_caps = {}
@@ -376,15 +358,10 @@ def distributed_compaction(
             cap = capacity_for(max_chunk[i], capacity_factor, r_pad, multiple=8)
             if cap is not None:
                 exchange_caps[i] = cap
-            cap = capacity_for(
-                max_shard[i], capacity_factor, n_loc_pad, multiple=8
-            )
+            cap = capacity_for(max_shard[i], capacity_factor, n_loc_pad, multiple=8)
             if cap is not None:
                 shard_caps[i] = cap
-        if (
-            gather_density[i] <= threshold
-            and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS
-        ):
+        if (gather_density[i] <= threshold and combine[i].s * combine[i].j >= MIN_COMBINE_ELEMENTS):
             cap = capacity_for(max_gath_shard[i], capacity_factor, n_loc_pad)
             if cap is not None:
                 combine_caps[i] = cap
@@ -429,9 +406,7 @@ def sampled_density(
     m_s = max(n_s // 2, int(round(n_s * avg_degree / 2.0)))
     g_s = relabel_random(rmat(n_s, m_s, skew=3, seed=seed), seed=seed + 1)
     density: Dict[int, float] = {}
-    for masks in probe_activity(
-        g_s, program, combine, k, probes=probes, seed=seed
-    ):
+    for masks in probe_activity(g_s, program, combine, k, probes=probes, seed=seed):
         for i, a in masks.items():
             rho = float(a.table.sum()) / max(n_s, 1)
             density[i] = max(density.get(i, 0.0), rho)
@@ -482,14 +457,10 @@ def abstract_compaction(
     for i, rho in density.items():
         if rho > threshold:
             continue
-        cap = capacity_for(
-            int(rho * r_pad), capacity_factor, r_pad, multiple=8
-        )
+        cap = capacity_for(int(rho * r_pad), capacity_factor, r_pad, multiple=8)
         if i in rights and cap is not None:
             exchange_caps[i] = cap
-        cap = capacity_for(
-            int(rho * n_loc_pad), capacity_factor, n_loc_pad, multiple=8
-        )
+        cap = capacity_for(int(rho * n_loc_pad), capacity_factor, n_loc_pad, multiple=8)
         if i in rights and cap is not None:
             shard_caps[i] = cap
         cap = capacity_for(int(rho * n_loc_pad), capacity_factor, n_loc_pad)
@@ -507,9 +478,7 @@ def abstract_compaction(
     )
 
 
-def node_exchange_bytes(
-    plan, i: int, mode: str, wire_dtype: str = "float32"
-) -> Tuple[int, int]:
+def node_exchange_bytes(plan, i: int, mode: str, wire_dtype: str = "float32") -> Tuple[int, int]:
     """``(dense, compact)`` per-device wire bytes node ``i``'s exchange
     moves each iteration under ``mode`` at ``wire_dtype`` width — THE
     formula for the compacted slab layout (``[cap, B+extra]`` active rows
@@ -533,11 +502,7 @@ def node_exchange_bytes(
     ebytes = wire_itemsize(wire_dtype)
     dense = (plan.num_shards - 1) * rows * b * ebytes
     if cap:
-        extra = (
-            1
-            if wire_dtype == "float32"
-            else mask_column_count(rows, cap, wire_dtype)
-        )
+        extra = 1 if wire_dtype == "float32" else mask_column_count(rows, cap, wire_dtype)
         compact = (plan.num_shards - 1) * cap * (b + extra) * ebytes
     else:
         compact = dense
@@ -570,9 +535,7 @@ def make_frontier_fn(
         mask = jnp.any(table != 0, axis=1)
         if cap is None:
             return Frontier(mask, None, None, None, None)
-        idx = jnp.nonzero(mask, size=cap, fill_value=sentinel_row)[0].astype(
-            jnp.int32
-        )
+        idx = jnp.nonzero(mask, size=cap, fill_value=sentinel_row)[0].astype(jnp.int32)
         count = jnp.sum(mask.astype(jnp.int32))
         ok = count <= cap - 1
         flags.append(ok)
@@ -615,9 +578,7 @@ def compact_combine(
 
     act = left_mask if left_mask is not None else jnp.any(c_left != 0, axis=1)
     act = act & jnp.any(m != 0, axis=1)
-    idx = jnp.nonzero(act, size=cap, fill_value=sentinel_row)[0].astype(
-        jnp.int32
-    )
+    idx = jnp.nonzero(act, size=cap, fill_value=sentinel_row)[0].astype(jnp.int32)
     flags.append(jnp.sum(act.astype(jnp.int32)) <= cap - 1)
     lc = jnp.take(c_left, idx, axis=0)
     mc = jnp.take(m, idx, axis=0)

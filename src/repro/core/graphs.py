@@ -184,16 +184,12 @@ def load_edge_file(
             f"file) — pass validate=False if an empty graph is intended"
         )
     if edges.size and edges.min() < 0:
-        raise GraphFormatError(
-            f"negative vertex id in {path} (zero_indexed wrong?)"
-        )
+        raise GraphFormatError(f"negative vertex id in {path} (zero_indexed wrong?)")
     n_found = int(edges.max(initial=-1)) + 1
     if n is None:
         n = n_found
     elif n < n_found:
-        raise GraphFormatError(
-            f"n={n} smaller than max vertex id + 1 = {n_found}"
-        )
+        raise GraphFormatError(f"n={n} smaller than max vertex id + 1 = {n_found}")
     return from_edges(n, edges, name or os.path.basename(path))
 
 
@@ -205,7 +201,10 @@ def save_npz(g: Graph, path: str) -> None:
     what makes repeat runs on real datasets practical.
     """
     np.savez_compressed(
-        path, n=np.int64(g.n), indptr=g.indptr, indices=g.indices,
+        path,
+        n=np.int64(g.n),
+        indptr=g.indptr,
+        indices=g.indices,
         name=np.str_(g.name),
     )
 
@@ -229,9 +228,7 @@ def load_npz(path: str, *, validate: bool = True) -> Graph:
     with z:
         for k in ("n", "indptr", "indices"):
             if k not in z:
-                raise GraphFormatError(
-                    f"{path}: missing npz key {k!r} — not a save_npz graph?"
-                )
+                raise GraphFormatError(f"{path}: missing npz key {k!r} — not a save_npz graph?")
         try:
             n = int(z["n"])
             indptr = z["indptr"].astype(np.int64)

@@ -98,9 +98,7 @@ class QuarantinedBatch:
 
 def key_fingerprint(key: jax.Array) -> Tuple[int, ...]:
     """The raw uint32 words of a PRNG key — a replayable, hashable id."""
-    if hasattr(key, "dtype") and jax.numpy.issubdtype(
-        key.dtype, jax.dtypes.prng_key
-    ):
+    if hasattr(key, "dtype") and jax.numpy.issubdtype(key.dtype, jax.dtypes.prng_key):
         key = jax.random.key_data(key)
     data = np.asarray(key, np.uint32).reshape(-1)
     return tuple(int(w) for w in data)
@@ -137,8 +135,7 @@ class Supervisor:
         spec = faults.fire("sample.timeout")
         if spec is not None:
             t = self.policy.timeout_s
-            time.sleep(spec.payload if spec.payload is not None
-                       else (4.0 * t if t else 0.5))
+            time.sleep(spec.payload if spec.payload is not None else (4.0 * t if t else 0.5))
         out = np.asarray(self.fn(key, batch), np.float64)
         spec = faults.fire("sample.nan")
         if spec is not None:

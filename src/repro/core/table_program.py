@@ -36,7 +36,7 @@ cannot drift.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,7 @@ __all__ = [
     "run_table_program",
     "root_count",
     "local_node_fn",
+    "BagFns",
 ]
 
 #: strategy signature: (node_index, combine_tables, c_left, c_right,
@@ -78,8 +79,29 @@ NodeFn = Callable[
 FrontierFn = Callable[[int, jax.Array], Optional[Frontier]]
 
 
+class BagFns(NamedTuple):
+    """Backend strategy for the three bag-only node kinds (DESIGN.md §19).
+
+    ``bag_combine`` nodes flow through the ordinary ``node_fn`` — the
+    backend's neighbor-sum strategy reshapes ``[rows, x*W]`` tables to
+    ``[rows*x, W]`` around its color convolution — so only the kinds with
+    no tree analogue need callbacks here:
+
+    * ``leaf_fn(i, nd)`` — build the bag leaf table ``[rows, x * k_pad]``
+      (``pin=True`` multiplies the one-hot by the apex adjacency).
+    * ``collapse_fn(i, child)`` — sum the finished forest-tree table over
+      its vertex rows and apply the apex-color filter; returns ``[x, W]``.
+    * ``join_fn(i, tbl, left, right)`` — disjoint color-set convolution of
+      two collapsed ``[x, W]`` tables on aligned rows.
+    """
+
+    leaf_fn: Callable[[int, object], jax.Array]
+    collapse_fn: Callable[[int, jax.Array], jax.Array]
+    join_fn: Callable[[int, ops.CombineTables, jax.Array, jax.Array], jax.Array]
+
+
 def build_node_tables(
-    program, k: int, *, lane: int = 128
+    program, k: int, *, lane: int = 128, x_dim: Optional[int] = None
 ) -> Tuple[Dict[int, ops.CombineTables], Dict[int, int]]:
     """Per-node split tables + padded widths for one table program.
 
@@ -87,24 +109,37 @@ def build_node_tables(
     object with ``.nodes`` of partition nodes).  ``lane`` is the
     column-padding multiple (128 for the Pallas kernels, 1 for true-width
     XLA tables).  Shared by both plan builders.
+
+    ``x_dim`` (the host vertex count) is required when the program carries
+    bag nodes: their stored tables are ``[rows, x_dim * W]`` row-major over
+    the pinned-apex axis, so the recorded width is the *stored* column
+    count — ``x_dim`` per-x blocks of the lane-padded block width ``W``.
+    Collapsed/joined tables live on the ``x`` axis itself (one block wide).
     """
     combine: Dict[int, ops.CombineTables] = {}
     widths: Dict[int, int] = {}
     for i, nd in enumerate(program.nodes):
-        if nd.is_leaf:
+        kind = nd.kind
+        if kind in ("bag_leaf", "bag_combine", "bag_collapse", "bag_join"):
+            if x_dim is None:
+                raise ValueError("bag-node programs need x_dim (host vertex count)")
+        if kind == "leaf":
             widths[i] = ops.pad_to(k, lane)
-        else:
+        elif kind == "bag_leaf":
+            widths[i] = ops.pad_to(k, lane) * x_dim
+        elif kind == "bag_collapse":
+            # per-x block of the child, on the x axis: one block wide
+            widths[i] = widths[nd.left] // x_dim
+        else:  # "combine" / "bag_combine" / "bag_join": a color convolution
             t1 = program.nodes[nd.left].size
             t2 = program.nodes[nd.right].size
             tables = ops.build_combine_tables(k, t1, t2, lane=lane)
             combine[i] = tables
-            widths[i] = tables.s_pad
+            widths[i] = tables.s_pad * (x_dim if kind == "bag_combine" else 1)
     return combine, widths
 
 
-def leaf_table(
-    coloring: jax.Array, k_pad: int, row_mask: jax.Array
-) -> jax.Array:
+def leaf_table(coloring: jax.Array, k_pad: int, row_mask: jax.Array) -> jax.Array:
     """Leaf tables: one-hot of the coloring, pad rows zeroed."""
     return jax.nn.one_hot(coloring, k_pad, dtype=jnp.float32) * row_mask
 
@@ -117,6 +152,7 @@ def run_table_program(
     node_fn: NodeFn,
     root_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
     frontier_fn: Optional[FrontierFn] = None,
+    bag: Optional[BagFns] = None,
 ) -> tuple:
     """Execute a table program; returns one value per ``program.roots`` entry.
 
@@ -144,6 +180,14 @@ def run_table_program(
     exactly as long as the table, and reaches every consumer via the
     ``f_left``/``f_right`` arguments of ``node_fn`` — a DAG table read by
     several parents never recomputes its activity.
+
+    ``bag`` supplies the backend strategy for the treewidth-2 node kinds
+    (:class:`BagFns`); required iff the program carries bag nodes.  A
+    ``bag_combine`` is the same neighbor-sum contraction as ``combine`` and
+    flows through ``node_fn`` (whose strategy handles the ``x`` axis), but
+    its column mask repeats per ``x`` block.  Collapse/join outputs live on
+    the ``x`` axis — every row is a real host vertex — so the vertex-row
+    ``row_mask`` does not apply to them.
     """
     reads = list(program.table_reads())
     want: Dict[int, int] = {}
@@ -153,29 +197,53 @@ def run_table_program(
     frontiers: Dict[int, Frontier] = {}
     delivered: Dict[int, jax.Array] = {}
     for i, nd in enumerate(program.nodes):
-        if nd.is_leaf:
+        kind = nd.kind
+        if kind.startswith("bag_") and bag is None:
+            raise ValueError("program has bag nodes but no BagFns strategy")
+        if kind == "leaf":
             out = leaf  # leaves are dense: every vertex has a color
-        else:
+        elif kind == "bag_leaf":
+            out = bag.leaf_fn(i, nd)
+        elif kind == "bag_collapse":
+            # strategy output is final (pad columns of the child are already
+            # zero and survive the sum as zero); rows are the x axis
+            out = bag.collapse_fn(i, tables[nd.left])
+        elif kind == "bag_join":
+            tbl = combine[i]
+            raw = bag.join_fn(i, tbl, tables[nd.left], tables[nd.right])
+            col_mask = (jnp.arange(raw.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
+            out = raw * col_mask
+        else:  # "combine" / "bag_combine": the neighbor-sum contraction
             tbl = combine[i]
             raw = node_fn(
-                i, tbl, tables[nd.left], tables[nd.right],
-                frontiers.get(nd.left), frontiers.get(nd.right),
+                i,
+                tbl,
+                tables[nd.left],
+                tables[nd.right],
+                frontiers.get(nd.left),
+                frontiers.get(nd.right),
             )
-            col_mask = (jnp.arange(raw.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
+            if kind == "bag_combine":
+                # one true-width block per x: mask repeats every s_pad cols
+                col_mask = (jnp.arange(raw.shape[1]) % tbl.s_pad < tbl.s).astype(
+                    jnp.float32
+                )[None, :]
+            else:
+                col_mask = (jnp.arange(raw.shape[1]) < tbl.s).astype(jnp.float32)[None, :]
             out = raw * row_mask * col_mask
-            # the children just had one read each consumed; free at zero
-            # (left may equal right for symmetric splits — counted twice)
-            for c in (nd.right, nd.left):
-                reads[c] -= 1
-                if reads[c] == 0:
-                    tables.pop(c, None)
-                    frontiers.pop(c, None)
+        # the children just had one read each consumed; free at zero
+        # (left may equal right for symmetric splits — counted twice)
+        for c in nd.children[::-1]:
+            reads[c] -= 1
+            if reads[c] == 0:
+                tables.pop(c, None)
+                frontiers.pop(c, None)
         if i in want:
             delivered[i] = root_fn(out) if root_fn is not None else out
             reads[i] -= want[i]
         if reads[i] > 0:
             tables[i] = out
-            if frontier_fn is not None and not nd.is_leaf:
+            if frontier_fn is not None and kind == "combine":
                 fr = frontier_fn(i, out)
                 if fr is not None:
                     frontiers[i] = fr
@@ -242,15 +310,19 @@ def local_node_fn(
         if cap is not None:
             m = neighbor_sum(c_right, f_right)
             return compact_combine(
-                c_left, m, tbl, cap, sentinel_row, impl, flags,
+                c_left,
+                m,
+                tbl,
+                cap,
+                sentinel_row,
+                impl,
+                flags,
                 left_mask=f_left.mask if f_left is not None else None,
             )
         if fuse:
             right_c, inv = compact_right(c_right, f_right)
             if right_c is not None:
-                return ops.fused_count_compact(
-                    spmm_plan, c_left, right_c, inv, tbl, impl=impl
-                )
+                return ops.fused_count_compact(spmm_plan, c_left, right_c, inv, tbl, impl=impl)
             return ops.fused_count(spmm_plan, c_left, c_right, tbl, impl=impl)
         m = neighbor_sum(c_right, f_right)
         # mask pad rows of the neighbor sum before the combine

@@ -52,9 +52,7 @@ def _combine_kernel(idx1_ref, idx2_ref, left_ref, m_ref, out_ref, *, num_splits:
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile_v", "tile_s", "num_splits", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("tile_v", "tile_s", "num_splits", "interpret"))
 def color_combine_pallas(
     left: jax.Array,  # [n, A]   (n % tile_v == 0, A % 128 == 0)
     m: jax.Array,  # [n, B]

@@ -64,9 +64,7 @@ def _flash_kernel(
     if causal:
         relevant = jnp.logical_and(relevant, k_start <= q_start + block_q - 1)
     if window > 0:
-        relevant = jnp.logical_and(
-            relevant, k_start + block_k - 1 > q_start - window
-        )
+        relevant = jnp.logical_and(relevant, k_start + block_k - 1 > q_start - window)
 
     @pl.when(relevant)
     def _compute():

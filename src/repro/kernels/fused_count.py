@@ -122,9 +122,7 @@ def fused_count_pallas(
     spb = slabs_per_block
     num_slabs, tile = slab_dst.shape
     assert num_slabs == nrb * spb, (num_slabs, nrb, spb)
-    kernel = functools.partial(
-        _fused_kernel, num_splits=num_splits, slabs_per_block=spb
-    )
+    kernel = functools.partial(_fused_kernel, num_splits=num_splits, slabs_per_block=spb)
     return pl.pallas_call(
         kernel,
         grid=(nrb, spb),
@@ -171,9 +169,7 @@ def fused_count_xla(
         d, c, lblk = xs
         gathered = jnp.take(right, c, axis=0)  # [spb * tile, B]
         seg = jnp.where(d < 0, row_tile, d)  # pads -> discarded segment
-        m_blk = jax.ops.segment_sum(gathered, seg, num_segments=row_tile + 1)[
-            :row_tile
-        ]
+        m_blk = jax.ops.segment_sum(gathered, seg, num_segments=row_tile + 1)[:row_tile]
         g1 = lblk[:, idx1]  # [row_tile, S, J]
         g2 = m_blk[:, idx2]
         return jnp.einsum("vsj,vsj->vs", g1, g2)

@@ -208,9 +208,7 @@ def build_bucket_tiles(
     t = t_need if num_tiles is None else num_tiles
     assert t >= t_need, (t, t_need)
     tile_dst = np.full((t, tile_size), dst_sentinel, np.int32)
-    tile_srcs = tuple(
-        np.full((t, tile_size), s, np.int32) for s in src_sentinels
-    )
+    tile_srcs = tuple(np.full((t, tile_size), s, np.int32) for s in src_sentinels)
     starts = np.zeros(num_buckets, np.int64)
     np.cumsum(counts[:-1], out=starts[1:])
     # in-bucket rank -> (tile, slot); buckets own disjoint tile ranges
@@ -231,9 +229,7 @@ def _build_slabs(
     tile_size: int,
     row_tile: int,
 ) -> Tuple[np.ndarray, np.ndarray, int]:
-    return build_slab_layout(
-        rows, cols, n_pad, tile_size, row_tile, sentinel_col=n
-    )
+    return build_slab_layout(rows, cols, n_pad, tile_size, row_tile, sentinel_col=n)
 
 
 def build_spmm_plan(
@@ -354,9 +350,7 @@ def spmm(plan: SpmmPlan, table: jax.Array, impl: str = "auto") -> jax.Array:
     assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
     if plan.kind == "edges":
         if impl == "xla":
-            out = jax.ops.segment_sum(
-                table[plan.cols], plan.rows, num_segments=plan.n_pad
-            )
+            out = jax.ops.segment_sum(table[plan.cols], plan.rows, num_segments=plan.n_pad)
             return out
         # edge-tiled kernel writes every output block (pad slabs contribute
         # zeros), so zero-degree rows come out correctly zeroed
@@ -410,9 +404,7 @@ def spmm_compact(
     assert plan.kind == "edges", "spmm_compact needs the edge-slab layout"
     if impl == "xla":
         gathered = jnp.take(table_c, jnp.take(inv, plan.cols), axis=0)
-        return jax.ops.segment_sum(
-            gathered, plan.rows, num_segments=plan.n_pad
-        )
+        return jax.ops.segment_sum(gathered, plan.rows, num_segments=plan.n_pad)
     return spmm_edge_tile_pallas(
         plan.slab_dst,
         jnp.take(inv, plan.slab_cols),
@@ -645,8 +637,13 @@ def fused_count_compact(
     cols_c = jnp.take(inv, plan.slab_cols)
     if impl == "xla":
         out = fused_count_xla(
-            plan.slab_dst, cols_c, left, right_c,
-            tables.idx1, tables.idx2, row_tile=plan.row_tile,
+            plan.slab_dst,
+            cols_c,
+            left,
+            right_c,
+            tables.idx1,
+            tables.idx2,
+            row_tile=plan.row_tile,
         )
         if out.shape[1] < tables.s_pad:
             out = jnp.pad(out, ((0, 0), (0, tables.s_pad - out.shape[1])))
@@ -693,7 +690,12 @@ def fused_count_slabs(
         right = right.astype(jnp.float32)
     if impl == "xla":
         out = fused_count_xla(
-            slab_dst, slab_cols, left, right, tables.idx1, tables.idx2,
+            slab_dst,
+            slab_cols,
+            left,
+            right,
+            tables.idx1,
+            tables.idx2,
             row_tile=row_tile,
         )
         if out.shape[1] < tables.s_pad:

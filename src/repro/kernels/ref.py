@@ -39,9 +39,7 @@ def spmm_segment_ref(
     return jax.ops.segment_sum(gathered, rows, num_segments=num_rows + 1)
 
 
-def color_combine_ref(
-    left: jax.Array, m: jax.Array, idx1: jax.Array, idx2: jax.Array
-) -> jax.Array:
+def color_combine_ref(left: jax.Array, m: jax.Array, idx1: jax.Array, idx2: jax.Array) -> jax.Array:
     """``out[v, s] = sum_j left[v, idx1[s, j]] * m[v, idx2[s, j]]``.
 
     ``idx1``/``idx2``: int32 [S, J] split tables (see core.colorsets).

@@ -32,6 +32,7 @@ from repro.api import Counter
 from repro.configs import COUNTING_CONFIGS
 from repro.core import load_edge_file, load_npz
 from repro.core.estimator import num_groups_for
+from repro.core.templates import TEMPLATES
 
 
 def _plan_report(plan):
@@ -45,9 +46,7 @@ def _plan_report(plan):
     spec = getattr(plan, "compaction", None)
     if spec is None:
         return
-    dens = " ".join(
-        f"n{i}={spec.density[i]:.3f}" for i in sorted(spec.density)
-    )
+    dens = " ".join(f"n{i}={spec.density[i]:.3f}" for i in sorted(spec.density))
     caps = {}
     for tag, m in (("combine", spec.combine_caps),
                    ("table", spec.table_caps),
@@ -117,9 +116,11 @@ def main():
                     choices=["alltoall", "pipeline", "adaptive", "ring",
                              "single"])
     ap.add_argument("--templates", default=None, metavar="A,B,C",
-                    help="comma-separated template family: count them all in "
-                         "ONE pass over the shared subtree DAG "
-                         "(Counter.estimate_many); default: the config's "
+                    help="comma-separated template family (trees AND "
+                         "treewidth-2 names like cycle5,diamond): count them "
+                         "all in ONE pass over the shared subtree DAG "
+                         "(Counter.estimate_many); names are validated "
+                         "against the registry; default: the config's "
                          "family, else its single template")
     ap.add_argument("--iters", type=int, default=16)
     ap.add_argument("--delta", type=float, default=0.1)
@@ -132,8 +133,7 @@ def main():
     ap.add_argument("--impl", default=None, choices=["auto", "xla", "pallas"],
                     help="kernel routing (both backends; default: "
                          "backend-appropriate)")
-    ap.add_argument("--spmm-kind", default="auto",
-                    choices=["auto", "edges", "blocks"])
+    ap.add_argument("--spmm-kind", default="auto", choices=["auto", "edges", "blocks"])
     ap.add_argument("--bucket-tile", type=int, default=128,
                     help="distributed §3.3 task size: edges per bucket tile")
     ap.add_argument("--compact", action="store_true", default=None,
@@ -182,15 +182,32 @@ def main():
     ckpt_dir = args.resume or args.checkpoint_dir
     ckpt_every = args.checkpoint_every or (args.batch if ckpt_dir else 0)
     robust_kw = dict(
-        checkpoint=ckpt_dir, checkpoint_every=ckpt_every,
-        resume=bool(args.resume), max_retries=args.max_retries,
+        checkpoint=ckpt_dir,
+        checkpoint_every=ckpt_every,
+        resume=bool(args.resume),
+        max_retries=args.max_retries,
         target_rsd=args.target_rsd,
     )
 
     ccfg = COUNTING_CONFIGS[args.config]
+    _family_arg = None
+    if args.templates:
+        # fail fast, before any graph is synthesized or plan compiled:
+        # unknown/duplicate names are a typo, not a workload
+        _family_arg = [s.strip() for s in args.templates.split(",") if s.strip()]
+        unknown = [s for s in _family_arg if s not in TEMPLATES]
+        if unknown:
+            ap.error(
+                f"unknown template(s) {', '.join(sorted(set(unknown)))}; "
+                f"registry has: {', '.join(sorted(TEMPLATES))}"
+            )
+        dups = sorted({s for s in _family_arg if _family_arg.count(s) > 1})
+        if dups:
+            ap.error(f"duplicate template(s) in --templates: {', '.join(dups)}")
+        if not _family_arg:
+            ap.error("--templates is empty after parsing")
     if args.graph:
-        g = load_npz(args.graph) if args.graph.endswith(".npz") \
-            else load_edge_file(args.graph)
+        g = load_npz(args.graph) if args.graph.endswith(".npz") else load_edge_file(args.graph)
         print(f"loaded {g.name}: V={g.n} E={g.num_edges} skew={g.skewness():.0f}")
     else:
         print(f"synthesizing RMAT: V={ccfg.num_vertices} E={ccfg.num_edges} "
@@ -213,19 +230,31 @@ def main():
         if args.fuse and spmm_kind == "auto":
             spmm_kind = "edges"
         request = ccfg.to_request(
-            g, backend="single", n_iter=args.iters, delta=args.delta,
-            batch=args.batch, spmm_kind=spmm_kind, fuse=args.fuse, **impl_opt,
+            g,
+            backend="single",
+            n_iter=args.iters,
+            delta=args.delta,
+            batch=args.batch,
+            spmm_kind=spmm_kind,
+            fuse=args.fuse,
+            **impl_opt,
         )
     else:
         request = ccfg.to_request(
-            g, backend="distributed", n_iter=args.iters, delta=args.delta,
-            batch=args.batch, mode=args.mode or ccfg.mode,
-            group_factor=args.group_factor, fuse=args.fuse,
-            bucket_tile=args.bucket_tile, **impl_opt,
+            g,
+            backend="distributed",
+            n_iter=args.iters,
+            delta=args.delta,
+            batch=args.batch,
+            mode=args.mode or ccfg.mode,
+            group_factor=args.group_factor,
+            fuse=args.fuse,
+            bucket_tile=args.bucket_tile,
+            **impl_opt,
         )
     counter = Counter.from_request(request)
     key = jax.random.key(args.seed)
-    family = args.templates.split(",") if args.templates else list(ccfg.templates)
+    family = _family_arg if args.templates else list(ccfg.templates)
     ran = -(-args.iters // args.batch) * args.batch
     if family:
         # family mode never builds the single-template plan (the label comes
@@ -244,8 +273,12 @@ def main():
         counter.estimate_many(family, n_iter=b, key=key, batch=b)
         t0 = time.perf_counter()
         res = counter.estimate_many(
-            family, n_iter=request.n_iter, delta=request.delta, key=key,
-            batch=request.batch, **robust_kw,
+            family,
+            n_iter=request.n_iter,
+            delta=request.delta,
+            key=key,
+            batch=request.batch,
+            **robust_kw,
         )
         dt = time.perf_counter() - t0
         _robust_report(res)
@@ -276,8 +309,11 @@ def main():
     counter.sample_fn(key, args.batch)  # compile outside the timer
     t0 = time.perf_counter()
     res = counter.estimate(
-        n_iter=request.n_iter, delta=request.delta, key=key,
-        batch=request.batch, **robust_kw,
+        n_iter=request.n_iter,
+        delta=request.delta,
+        key=key,
+        batch=request.batch,
+        **robust_kw,
     )
     dt = time.perf_counter() - t0
     _robust_report(res)

@@ -144,9 +144,7 @@ def lower_cell(
 
     cfg = get_arch(arch_name)
     if depth_groups:
-        cfg = _dc.replace(
-            cfg, num_layers=depth_groups * len(cfg.block_pattern)
-        )
+        cfg = _dc.replace(cfg, num_layers=depth_groups * len(cfg.block_pattern))
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     sh = sharding_for(arch_name, shape_name, multi_pod)
@@ -171,9 +169,7 @@ def lower_cell(
         step_raw, _ = make_train_step(model, tcfg, jit=False)
         opt_shapes = jax.eval_shape(init_opt_state, params_shapes)
         data_size = 16
-        ospecs = opt_state_pspecs(
-            pspecs, params_shapes, zero1=sh.zero1, data_size=data_size
-        )
+        ospecs = opt_state_pspecs(pspecs, params_shapes, zero1=sh.zero1, data_size=data_size)
         oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
         fn = jax.jit(
             step_raw,
@@ -250,16 +246,14 @@ def _corrected(real: dict, p1: dict, p2: dict, n_full: int) -> dict:
     for k in ("flops", "bytes_accessed", "transcendentals"):
         body = max(p2["cost"][k] - p1["cost"][k], 0.0)
         out["cost"][k] = real["cost"][k] + extra * body
-    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-              "collective-permute"):
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
         body = max(p2["collectives"][k] - p1["collectives"][k], 0.0)
         out["collectives"][k] = real["collectives"][k] + extra * body
     out["collectives"]["ops"] = real["collectives"]["ops"]
     return out
 
 
-def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
-             probes: bool = True):
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None, probes: bool = True):
     reason = skip_reason(arch_name, shape_name)
     mesh_tag = "2x16x16" if multi_pod else "16x16"
     if reason:
@@ -281,10 +275,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
                    compile_s=round(t_compile, 1), **real)
         rec["cost_raw"] = dict(real["cost"])
         if probes and n_full > 1:
-            p1, _, _ = lower_cell(arch_name, shape_name, multi_pod,
-                                  depth_groups=1, unroll=True)
-            p2, _, _ = lower_cell(arch_name, shape_name, multi_pod,
-                                  depth_groups=2, unroll=True)
+            p1, _, _ = lower_cell(arch_name, shape_name, multi_pod, depth_groups=1, unroll=True)
+            p2, _, _ = lower_cell(arch_name, shape_name, multi_pod, depth_groups=2, unroll=True)
             m1, m2 = _measure(p1), _measure(p2)
             corr = _corrected(real, m1, m2, n_full)
             rec["cost"] = corr["cost"]
@@ -294,8 +286,11 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir=None,
             rec["probe_s"] = round(time.time() - t0 - t_lower - t_compile, 1)
     except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
         rec = {
-            "arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
-            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "arch": arch_name,
+            "shape": shape_name,
+            "mesh": mesh_tag,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
             "traceback": traceback.format_exc()[-2000:],
         }
     _emit(rec, out_dir)
@@ -315,8 +310,7 @@ def _compaction_report(plan, mode: str, wire_dtype: str = "float32"):
     for i, nd in enumerate(plan.program.nodes):
         if nd.is_leaf:
             continue
-        nb_dense, nb_compact = node_exchange_bytes(plan, i, mode,
-                                                   wire_dtype=wire_dtype)
+        nb_dense, nb_compact = node_exchange_bytes(plan, i, mode, wire_dtype=wire_dtype)
         caps = spec.shard_caps if mode == "ring" else spec.exchange_caps
         bytes_dense += nb_dense
         bytes_compact += nb_compact
@@ -332,9 +326,7 @@ def _compaction_report(plan, mode: str, wire_dtype: str = "float32"):
         "per_node": per_node,
         "exchange_bytes_dense": bytes_dense,
         "exchange_bytes_compact": bytes_compact,
-        "exchange_bytes_saved_frac": round(
-            1.0 - bytes_compact / max(bytes_dense, 1), 4
-        ),
+        "exchange_bytes_saved_frac": round(1.0 - bytes_compact / max(bytes_dense, 1), 4),
     }
 
 
@@ -359,9 +351,7 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
         mesh = make_production_mesh(multi_pod=multi_pod)
         num_shards = ccfg.num_shards
         iter_axis = ("pod", "model") if multi_pod else "model"
-    mesh_tag = ("flat" if ccfg.mesh_kind == "flat" else "") + (
-        "2x16x16" if multi_pod else "16x16"
-    )
+    mesh_tag = ("flat" if ccfg.mesh_kind == "flat" else "") + ("2x16x16" if multi_pod else "16x16")
     # a family row lowers the multi-template shared-DAG counter
     tmpl = (
         [template(t) for t in ccfg.templates]
@@ -381,7 +371,8 @@ def run_counting_cell(name: str, multi_pod: bool, out_dir=None, mode=None):
             capacity_factor=ccfg.capacity_factor,
         )
         fn, structs, in_shard = make_count_fn(
-            plan, mesh,
+            plan,
+            mesh,
             mode=mode,
             iter_axis=iter_axis,
             group_factor=ccfg.group_factor,

@@ -39,8 +39,7 @@ def run_workload(
         graph,
         n_colors=wl.k,
         backend=backend,
-        plan_opts={"num_shards": cfg.num_shards} if backend == "distributed"
-        else None,
+        plan_opts={"num_shards": cfg.num_shards} if backend == "distributed" else None,
         config=ServiceConfig(batch=batch or wl.batch),
     )
     tickets = []
@@ -64,16 +63,12 @@ def run_workload(
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--workload", default="bench-service",
-                    choices=sorted(SERVICE_WORKLOADS))
-    ap.add_argument("--backend", default="auto",
-                    choices=("auto", "single", "distributed"))
+    ap.add_argument("--workload", default="bench-service", choices=sorted(SERVICE_WORKLOADS))
+    ap.add_argument("--backend", default="auto", choices=("auto", "single", "distributed"))
     ap.add_argument("--repeats", type=int, default=None,
                     help="override the workload's request-stream repeats")
-    ap.add_argument("--batch", type=int, default=None,
-                    help="override the per-call coloring batch")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="graph synthesis seed")
+    ap.add_argument("--batch", type=int, default=None, help="override the per-call coloring batch")
+    ap.add_argument("--seed", type=int, default=0, help="graph synthesis seed")
     ap.add_argument("--json", action="store_true",
                     help="print the stats dict as JSON (for scripting)")
     args = ap.parse_args()
@@ -82,7 +77,10 @@ def main():
     print(f"workload {wl.name}: graph={wl.graph} k={wl.k} "
           f"{len(wl.requests)} requests x {args.repeats or wl.repeats}")
     tickets, svc = run_workload(
-        wl, backend=args.backend, repeats=args.repeats, batch=args.batch,
+        wl,
+        backend=args.backend,
+        repeats=args.repeats,
+        batch=args.batch,
         seed=args.seed,
     )
     stats = svc.stats()

@@ -116,17 +116,13 @@ def chunked_attention(
             p = jnp.where(mask[None, None, None], p, 0.0)
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + p.sum(-1, keepdims=True)
-            acc_new = acc * alpha + jnp.einsum(
-                "bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32)
-            )
+            acc_new = acc * alpha + jnp.einsum("bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32))
             return (acc_new, m_new, l_new), None
 
         acc0 = constrain(jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32))
         m0 = constrain(jnp.full((b, hkv, g, q_chunk, 1), _NEG, jnp.float32))
         l0 = constrain(jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32))
-        (acc, m, l), _ = jax.lax.scan(
-            kv_step, (acc0, m0, l0), (jnp.arange(nk), ks, vs)
-        )
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (jnp.arange(nk), ks, vs))
         l = jnp.where(l == 0.0, 1.0, l)
         return None, (acc / l).astype(q.dtype)
 
@@ -197,12 +193,7 @@ def attention_block(
     kv_src = context if context is not None else x
     k = _project(p["wk"], kv_src, kv, hd, dtype)
     v = _project(p["wv"], kv_src, kv, hd, dtype)
-    if (
-        getattr(shard, "attn_repeat_kv", False)
-        and context is None
-        and cache is None
-        and kv != h
-    ):
+    if (getattr(shard, "attn_repeat_kv", False) and context is None and cache is None and kv != h):
         # repeat KV to the q-head count so the head dim shards over the
         # model axis (memory cost is per-chunk; partitioner-thrash cost of
         # NOT doing it is replicated [b,h,qc,kc] logits)

@@ -120,7 +120,8 @@ def param_pspecs(params, cfg: ArchConfig, sh: ShardingConfig):
         if pathstr.endswith("wo/w") or pathstr.endswith("w_out/w"):
             return pad([mdl, fsdp])
         if pathstr.endswith("/w") and any(
-            f"/{n}/" in pathstr for n in ("wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "lru_a", "lru_x")
+            f"/{n}/" in pathstr
+            for n in ("wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "lru_a", "lru_x")
         ):
             # [D_in, D_out]: TP on the output dim
             return pad([fsdp, mdl])
@@ -216,9 +217,7 @@ def _act_shard_fn(cfg: ArchConfig, sh: ShardingConfig, mesh):
 
         def fix(spec, leaf):
             sub = P(*list(spec)[1:]) if len(spec) > len(leaf.shape) else spec
-            return jax.lax.with_sharding_constraint(
-                leaf, jax.sharding.NamedSharding(mesh, sub)
-            )
+            return jax.lax.with_sharding_constraint(leaf, jax.sharding.NamedSharding(mesh, sub))
 
         return jax.tree.map(lambda s_, l: fix(s_, l), full_specs, group_params)
 

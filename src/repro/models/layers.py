@@ -67,9 +67,7 @@ def layernorm_params(init: Initializer, d: int):
     return {"scale": init.ones((d,))}
 
 
-def rope(
-    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
-) -> jax.Array:
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
     """Rotary embeddings.  x: [..., L, D] (D even); positions: [L] or [..., L]."""
     d = x.shape[-1]
     half = d // 2

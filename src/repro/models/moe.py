@@ -96,18 +96,12 @@ def _combine(out_buf, e_flat, pos_c, keep, tok, top_w, t, dtype):
     slot_out = out_buf[e_flat, pos_c]
     slot_out = jnp.where(keep[:, None], slot_out, 0)
     w_flat = top_w.reshape(-1).astype(dtype)
-    return (
-        jnp.zeros((t, out_buf.shape[-1]), dtype)
-        .at[tok]
-        .add(slot_out * w_flat[:, None])
-    )
+    return jnp.zeros((t, out_buf.shape[-1]), dtype).at[tok].add(slot_out * w_flat[:, None])
 
 
 def _expert_ffn(buf, wg, wu, wd):
     """buf [E, C, D] x per-expert weights -> [E, C, D_out]."""
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
-        "ecd,edf->ecf", buf, wu
-    )
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum("ecd,edf->ecf", buf, wu)
     return jnp.einsum("ecf,efd->ecd", h, wd)
 
 
@@ -133,9 +127,7 @@ def moe_block(
     t = b * l
     xt = x.reshape(t, d)
     top_w, top_e, aux = _route(xt, p["router"], cfg.experts_per_token)
-    buf, e_flat, pos_c, keep, tok = _dispatch(
-        xt, top_e, _capacity(cfg, t), cfg.num_experts, dtype
-    )
+    buf, e_flat, pos_c, keep, tok = _dispatch(xt, top_e, _capacity(cfg, t), cfg.num_experts, dtype)
     out_buf = _expert_ffn(
         buf,
         p["w_gate"].astype(dtype),
@@ -219,9 +211,7 @@ def moe_block_manual(
     xt_m = jax.lax.dynamic_slice_in_dim(xt, m * tm, tm, 0)  # my token slice
     top_w, top_e, aux = _route(xt_m, router, cfg.experts_per_token)
     cap = _capacity(cfg, tm)
-    buf, e_flat, pos_c, keep, tok = _dispatch(
-        xt_m, top_e, cap, cfg.num_experts, dtype
-    )
+    buf, e_flat, pos_c, keep, tok = _dispatch(xt_m, top_e, cap, cfg.num_experts, dtype)
     chunks = buf.reshape(pm, e_loc, cap, d)  # chunk q -> member q's experts
 
     if pipeline:
@@ -234,9 +224,7 @@ def moe_block_manual(
             return jax.lax.dynamic_update_index_in_dim(acc, out, src, 0)
 
         acc0 = jnp.zeros((pm, e_loc, cap, d), dtype)
-        out_chunks = grouped_exchange(
-            chunks, model_axis, consume, acc0, group_factor=group_factor
-        )
+        out_chunks = grouped_exchange(chunks, model_axis, consume, acc0, group_factor=group_factor)
     else:
         recv = jax.lax.all_to_all(
             chunks, model_axis, split_axis=0, concat_axis=0
@@ -244,9 +232,7 @@ def moe_block_manual(
         # batch all received chunks through the local experts at once
         recv_flat = recv.transpose(1, 0, 2, 3).reshape(e_loc, pm * cap, d)
         out_flat = _expert_ffn(recv_flat, wg, wu, wd)
-        out_chunks = (
-            out_flat.reshape(e_loc, pm, cap, d).transpose(1, 0, 2, 3)
-        )
+        out_chunks = out_flat.reshape(e_loc, pm, cap, d).transpose(1, 0, 2, 3)
 
     # reverse exchange: results of chunk q go back to member q
     back = jax.lax.all_to_all(out_chunks, model_axis, split_axis=0, concat_axis=0)

@@ -26,7 +26,14 @@ import jax.numpy as jnp
 
 from .layers import Initializer, dense_init
 
-__all__ = ["rwkv_init", "rwkv_block", "rwkv_decode", "wkv_chunked", "wkv_scan_ref", "init_rwkv_state"]
+__all__ = [
+    "rwkv_init",
+    "rwkv_block",
+    "rwkv_decode",
+    "wkv_chunked",
+    "wkv_scan_ref",
+    "init_rwkv_state",
+]
 
 
 def rwkv_init(init: Initializer, cfg):
@@ -124,9 +131,7 @@ def wkv_chunked(r, k, v, logw, u, s0, *, chunk: int = 32):
         # state update: S' = diag(exp(lw_total)) S + sum_j exp(lw_total - lw_cum_j) k_j v_j^T
         lw_tot = lw_cum[:, :, -1:, :]  # [b,h,1,d]
         k_dec = kk * jnp.exp(lw_tot - lw_cum)
-        s = jnp.exp(lw_tot[:, :, 0, :, None]) * s + jnp.einsum(
-            "bhcd,bhce->bhde", k_dec, vv
-        )
+        s = jnp.exp(lw_tot[:, :, 0, :, None]) * s + jnp.einsum("bhcd,bhce->bhde", k_dec, vv)
         return s, o
 
     sT, oc = jax.lax.scan(chunk_step, s0.astype(jnp.float32), (rc, kc, vc, lwc))
@@ -174,24 +179,16 @@ def rwkv_block(p, x: jax.Array, cfg, *, state=None, dtype=jnp.bfloat16):
     g = proj("wg", "mix_g").reshape(b, l, d)
 
     xw = _mix(x, xx, t["mix_w"]).astype(jnp.float32)
-    lora = jnp.tanh(xw @ t["w_lora_a"].astype(jnp.float32)) @ t["w_lora_b"].astype(
-        jnp.float32
-    )
+    lora = jnp.tanh(xw @ t["w_lora_a"].astype(jnp.float32)) @ t["w_lora_b"].astype(jnp.float32)
     logw = -jnp.exp(t["w_base"].astype(jnp.float32)[None, None] + lora)  # < 0
     logw = logw.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
 
-    s0 = (
-        state["wkv"]
-        if state is not None
-        else jnp.zeros((b, h, hd, hd), jnp.float32)
-    )
+    s0 = state["wkv"] if state is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
     o, sT = wkv_chunked(r, k, v, logw, t["u_bonus"].astype(jnp.float32), s0)
     o = o.transpose(0, 2, 1, 3).reshape(b, l, d)
     # per-head group norm
     oh = o.reshape(b, l, h, hd)
-    oh = (oh - oh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
-        oh.var(-1, keepdims=True) + 1e-5
-    )
+    oh = (oh - oh.mean(-1, keepdims=True)) * jax.lax.rsqrt(oh.var(-1, keepdims=True) + 1e-5)
     o = (oh.reshape(b, l, d) * t["ln_x"][None, None]).astype(dtype)
     o = o * jax.nn.silu(g.astype(dtype))
     out = o @ t["wo"]["w"].astype(dtype)

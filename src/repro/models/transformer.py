@@ -300,14 +300,17 @@ def _apply_block(
             mix, _ = attention_block(
                 p["xattn"], rmsnorm(p["ln1"], h, eps), cfg, context=context, dtype=dtype
             )
-            new_cache = _project_context(p["xattn"], cfg, context, dtype) if mode == "prefill" else None
+            new_cache = _project_context(
+                p["xattn"],
+                cfg,
+                context,
+                dtype,
+            ) if mode == "prefill" else None
         h = shard(h + jnp.tanh(p["xgate"]).astype(h.dtype) * mix, "act")
         ff, aux = _ffn_apply(p["ffn"], rmsnorm(p["ln2"], h, eps), cfg, shard, dtype)
         h = shard(h + ff, "act")
     elif kind == "attn_cross":
-        sub_cache = (
-            {k: cache[k] for k in ("k", "v", "slot_pos")} if mode == "decode" else None
-        )
+        sub_cache = ({k: cache[k] for k in ("k", "v", "slot_pos")} if mode == "decode" else None)
         mix, new_kv = attention_block(
             p["attn"],
             rmsnorm(p["ln1"], h, eps),
@@ -341,9 +344,7 @@ def _apply_block(
         state = cache if mode in ("decode", "prefill") else None
         if state is None and mode in ("decode", "prefill"):
             raise ValueError("rwkv needs state in cache modes")
-        mix, new_state = rwkv_block(
-            p, rmsnorm(p["ln1"], h, eps), cfg, state=state, dtype=dtype
-        )
+        mix, new_state = rwkv_block(p, rmsnorm(p["ln1"], h, eps), cfg, state=state, dtype=dtype)
         h = shard(h + mix, "act")
         cm, new_state2 = rwkv_channel_mix(
             p, rmsnorm(p["ln2"], h, eps), state=new_state, dtype=dtype
@@ -572,9 +573,7 @@ def forward(
     else:
         logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab_size:
-        pad_mask = jnp.where(
-            jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30
-        )
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
         logits = logits + pad_mask
     logits = shard(logits, "logits")
     return logits, (new_caches if use_cache else None), aux_total

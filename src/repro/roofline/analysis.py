@@ -83,9 +83,7 @@ def analyze_record(rec: dict, hbm_gib: float = 16.0) -> Optional[RooflineTerms]:
     bytes_dev = rec["cost"]["bytes_accessed"]
     coll = rec.get("collectives", {})
     multi_pod = "2x16x16" in rec.get("mesh", "")
-    coll_bytes = sum(
-        v for k, v in coll.items() if k != "ops" and isinstance(v, (int, float))
-    )
+    coll_bytes = sum(v for k, v in coll.items() if k != "ops" and isinstance(v, (int, float)))
     link_bw = DCI_BW if multi_pod else ICI_BW
     compute_s = flops_dev / PEAK_FLOPS
     memory_s = bytes_dev / HBM_BW

@@ -150,9 +150,7 @@ class PlanCache:
 
     def __init__(self, capacity: int, on_evict=None):
         self.capacity = max(1, int(capacity))
-        self._entries: "collections.OrderedDict[tuple, dict]" = (
-            collections.OrderedDict()
-        )
+        self._entries: "collections.OrderedDict[tuple, dict]" = collections.OrderedDict()
         self._on_evict = on_evict
         self.hits = 0
         self.misses = 0
@@ -292,8 +290,7 @@ class _Pass:
         self.history: List[dict] = []  # per call: {"cols": {sig: [b]}, "quarantine": ...}
 
     def active(self) -> List[_Request]:
-        return [r for r in self.requests
-                if not r.satisfied and r.cursor < r.n_calls]
+        return [r for r in self.requests if not r.satisfied and r.cursor < r.n_calls]
 
 
 class ServiceClient:
@@ -402,8 +399,7 @@ class CountingService:
         return st
 
     def _pending(self) -> int:
-        return sum(len(t["queue"]) + len(t["active"])
-                   for t in self._tenants.values())
+        return sum(len(t["queue"]) + len(t["active"]) for t in self._tenants.values())
 
     def submit(
         self,
@@ -426,9 +422,7 @@ class CountingService:
         """
         if isinstance(templates, (str, Tree)):
             templates = (templates,)
-        trees_raw = tuple(
-            resolve_template(t) if isinstance(t, str) else t for t in templates
-        )
+        trees_raw = tuple(resolve_template(t) if isinstance(t, str) else t for t in templates)
         if not trees_raw:
             raise ValueError("submit needs at least one template")
         for t in trees_raw:
@@ -478,9 +472,16 @@ class CountingService:
         ticket = Ticket(self._next_id, tenant, names)
         self._next_id += 1
         req = _Request(
-            ticket=ticket, tenant=tenant, trees=trees, sigs=sigs,
-            n_iter=int(n_iter), delta=float(delta), eps=eps,
-            target_rsd=target_rsd, key=key, key_fp=key_fingerprint(key),
+            ticket=ticket,
+            tenant=tenant,
+            trees=trees,
+            sigs=sigs,
+            n_iter=int(n_iter),
+            delta=float(delta),
+            eps=eps,
+            target_rsd=target_rsd,
+            key=key,
+            key_fp=key_fingerprint(key),
             batch=self.config.batch,
             samples=np.zeros((0, len(trees)), np.float64),
         )
@@ -572,9 +573,7 @@ class CountingService:
         """
         fn = entry["sample_fn"]
         if self._retry is not None:
-            out = Supervisor(fn, self._retry, sleep=self._sleep)(
-                key, batch, call_index=call_index
-            )
+            out = Supervisor(fn, self._retry, sleep=self._sleep)(key, batch, call_index=call_index)
             if isinstance(out, QuarantinedBatch):
                 self._stats["quarantined"] += 1
                 return {}, out
@@ -582,9 +581,7 @@ class CountingService:
         else:
             out = np.asarray(fn(key, batch), np.float64)
         if out.ndim != 2:
-            raise ValueError(
-                f"family sample_fn must return [batch, T]; got {out.shape}"
-            )
+            raise ValueError(f"family sample_fn must return [batch, T]; got {out.shape}")
         cols = {s: out[:, entry["columns"][s]] for s in entry["sigs"]}
         return cols, None
 
@@ -616,8 +613,7 @@ class CountingService:
 
     def _stop_now(self, req: _Request) -> bool:
         """The solo loop's pre-call early-stop predicate, verbatim."""
-        return (req.target_rsd is not None
-                and relative_se(req.samples) <= req.target_rsd)
+        return req.target_rsd is not None and relative_se(req.samples) <= req.target_rsd
 
     # ------------------------------------------------------------ lifecycle
     def _attach(self, req: _Request) -> None:
@@ -627,9 +623,7 @@ class CountingService:
         req.ticket.status = "active"
         pa = self._passes.get(req.key_fp)
         if pa is None:
-            pa = self._passes[req.key_fp] = _Pass(
-                req.key, req.key_fp, req.batch
-            )
+            pa = self._passes[req.key_fp] = _Pass(req.key, req.key_fp, req.batch)
         # ---- backfill the already-consumed prefix (mid-stream join)
         own_entry = None
         while req.cursor < min(pa.cursor, req.n_calls):
@@ -650,9 +644,7 @@ class CountingService:
             # prefix-stable keys make the values the solo values
             if own_entry is None:
                 own_entry = self._entry_for(req.sigs)
-            cols, q = self._call(
-                own_entry, call_key(pa.key, i), pa.batch, call_index=i
-            )
+            cols, q = self._call(own_entry, call_key(pa.key, i), pa.batch, call_index=i)
             self._stats["backfill_calls"] += 1
             have.update(cols)  # future joiners ride free
             self._consume(req, cols, q)
@@ -689,42 +681,49 @@ class CountingService:
             return
         elapsed = time.perf_counter() - t.submitted_at
         if not req.is_multi:
-            mom, mean, rsd, used, ests = aggregate_single(
-                req.samples, req.n_iter, req.delta
-            )
+            mom, mean, rsd, used, ests = aggregate_single(req.samples, req.n_iter, req.delta)
             t._result = CountResult(
-                estimate=mom, mean=mean, relative_sd=rsd, niter=used,
-                samples=ests, backend=self.backend,
-                template=t.templates[0], graph=self.graph.name,
-                delta=req.delta, eps=req.eps, elapsed_s=elapsed,
+                estimate=mom,
+                mean=mean,
+                relative_sd=rsd,
+                niter=used,
+                samples=ests,
+                backend=self.backend,
+                template=t.templates[0],
+                graph=self.graph.name,
+                delta=req.delta,
+                eps=req.eps,
+                elapsed_s=elapsed,
                 quarantined=req.quarantined,
             )
         else:
-            from repro.core.templates import partition_tree
+            from repro.core.templates import template_program
 
             ests = req.samples[: req.n_iter]
             used = int(ests.shape[0])
-            mom = np.atleast_1d(
-                median_of_means(ests, num_groups_for(req.delta, used))
-            )
+            mom = np.atleast_1d(median_of_means(ests, num_groups_for(req.delta, used)))
             means = ests.mean(axis=0)
             with np.errstate(divide="ignore", invalid="ignore"):
-                rsds = np.where(
-                    means != 0, ests.std(axis=0) / np.abs(means), np.inf
-                )
+                rsds = np.where(means != 0, ests.std(axis=0) / np.abs(means), np.inf)
             entry = self._entry_for(req.sigs)  # cache hit: already compiled
             plan = self._counter._families[entry["trees"]]["plan"]
             dag = plan.dag if self.backend == "single" else plan.program
             t._result = MultiCountResult(
-                templates=t.templates, estimates=mom, means=means,
-                relative_sds=rsds, samples=ests, niter=used,
-                backend=self.backend, graph=self.graph.name, k=self.k,
+                templates=t.templates,
+                estimates=mom,
+                means=means,
+                relative_sds=rsds,
+                samples=ests,
+                niter=used,
+                backend=self.backend,
+                graph=self.graph.name,
+                k=self.k,
                 unique_tables=len(dag.nodes),
-                chain_tables=sum(
-                    len(partition_tree(tr).nodes) for tr in plan.templates
-                ),
+                chain_tables=sum(len(template_program(tr).nodes) for tr in plan.templates),
                 delta=req.delta,
-                eps=req.eps, elapsed_s=elapsed, quarantined=req.quarantined,
+                eps=req.eps,
+                elapsed_s=elapsed,
+                quarantined=req.quarantined,
             )
         t.status = "done"
         t.finished_at = time.perf_counter()
@@ -832,8 +831,7 @@ class CountingService:
         union = tuple(sorted(set(s for r in active for s in r.sigs)))
         entry = self._entry_for(union)
         i = pa.cursor
-        cols, q = self._call(entry, call_key(pa.key, i), pa.batch,
-                             call_index=i)
+        cols, q = self._call(entry, call_key(pa.key, i), pa.batch, call_index=i)
         pa.history.append({"cols": dict(cols), "quarantine": q})
         pa.cursor += 1
         self._stats["pass_calls"] += 1
@@ -878,11 +876,12 @@ class CountingService:
                      f"{req.ticket.templates[0]}|{self.backend}|k={self.k}")
         samples = req.samples if req.is_multi else req.samples.reshape(-1)
         return EstimatorState(
-            signature=run_signature(
-                req.n_iter, req.batch, req.delta, req.key, extra=extra
-            ),
-            n_iter=req.n_iter, batch=req.batch, delta=req.delta,
-            cursor=req.cursor, samples=samples.copy(),
+            signature=run_signature(req.n_iter, req.batch, req.delta, req.key, extra=extra),
+            n_iter=req.n_iter,
+            batch=req.batch,
+            delta=req.delta,
+            cursor=req.cursor,
+            samples=samples.copy(),
             quarantined=req.quarantined,
         )
 
@@ -890,9 +889,7 @@ class CountingService:
         """Service counters: cache behavior, coalescing, fairness, volume."""
         s = dict(self._stats)
         pass_calls = s.get("pass_calls", 0)
-        s["coalescing_factor"] = (
-            s.get("request_calls", 0) / pass_calls if pass_calls else 0.0
-        )
+        s["coalescing_factor"] = s.get("request_calls", 0) / pass_calls if pass_calls else 0.0
         s["cache"] = {
             "hits": self.plan_cache.hits,
             "misses": self.plan_cache.misses,

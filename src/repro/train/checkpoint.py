@@ -39,9 +39,7 @@ __all__ = ["CheckpointManager"]
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(e, "key", getattr(e, "idx", e))) for e in path
-        )
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -63,9 +61,7 @@ class CheckpointManager:
         host = {name: _flatten(jax.device_get(t)) for name, t in trees.items()}
         self.wait()
         if self.async_save and not block:
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True
-            )
+            self._thread = threading.Thread(target=self._write, args=(step, host), daemon=True)
             self._thread.start()
         else:
             self._write(step, host)
@@ -216,19 +212,13 @@ class CheckpointManager:
             leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
             treedef = jax.tree_util.tree_structure(template)
             shard_tree = shardings.get(name) if shardings else None
-            shard_leaves = (
-                jax.tree_util.tree_flatten(shard_tree)[0] if shard_tree else None
-            )
+            shard_leaves = jax.tree_util.tree_flatten(shard_tree)[0] if shard_tree else None
             new_leaves = []
             for i, (pth, leaf) in enumerate(leaves_with_path):
-                key = "/".join(
-                    str(getattr(e, "key", getattr(e, "idx", e))) for e in pth
-                )
+                key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in pth)
                 arr = loaded[key]
                 if tuple(arr.shape) != tuple(leaf.shape):
-                    raise ValueError(
-                        f"{name}:{key} shape {arr.shape} != template {leaf.shape}"
-                    )
+                    raise ValueError(f"{name}:{key} shape {arr.shape} != template {leaf.shape}")
                 if shard_leaves is not None:
                     new_leaves.append(jax.device_put(arr, shard_leaves[i]))
                 else:

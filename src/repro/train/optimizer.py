@@ -15,7 +15,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "cosine_schedule", "opt_state_pspecs", "clip_by_global_norm"]
+__all__ = [
+    "AdamWConfig",
+    "init_opt_state",
+    "adamw_update",
+    "cosine_schedule",
+    "opt_state_pspecs",
+    "clip_by_global_norm",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,9 +76,7 @@ def adamw_update(cfg: AdamWConfig, params, grads, state):
         v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
         mhat = m / b1c
         vhat = v / b2c
-        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
-            jnp.float32
-        )
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
     out = jax.tree.map(upd, params, grads, state["m"], state["v"])

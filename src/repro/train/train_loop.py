@@ -73,10 +73,7 @@ def make_train_step(
             tokens = batch["tokens"]
             gb = tokens.shape[0]
             mb = gb // tcfg.microbatches
-            micro = {
-                k: v.reshape((tcfg.microbatches, mb) + v.shape[1:])
-                for k, v in batch.items()
-            }
+            micro = {k: v.reshape((tcfg.microbatches, mb) + v.shape[1:]) for k, v in batch.items()}
 
             def accum(carry, mb_batch):
                 loss_sum, grad_sum = carry
@@ -90,9 +87,7 @@ def make_train_step(
             zero_grads = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (loss_sum, grads), _ = jax.lax.scan(
-                accum, (jnp.zeros(()), zero_grads), micro
-            )
+            (loss_sum, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zero_grads), micro)
             loss = loss_sum / tcfg.microbatches
             grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
         else:

@@ -60,9 +60,7 @@ def test_ring_collectives():
         def combine(acc, chunk, src):
             return acc + chunk * (src + 1).astype(jnp.float32)
 
-        return ring_allgather_overlap(
-            a[0], "x", combine, jnp.zeros_like(a[0])
-        )[None]
+        return ring_allgather_overlap(a[0], "x", combine, jnp.zeros_like(a[0]))[None]
 
     f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(x))
@@ -81,7 +79,11 @@ def test_ring_collectives():
     f = jax.jit(shard_map(rs, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(xs))
     want = xs.sum(axis=0)  # [chunk, 4, 16]; device p gets chunk p
-    check("ring_reduce_scatter", np.allclose(got, want, atol=1e-4), f"max err {np.abs(got - want).max():.2e}")
+    check(
+        "ring_reduce_scatter",
+        np.allclose(got, want, atol=1e-4),
+        f"max err {np.abs(got - want).max():.2e}",
+    )
 
     def crs(a):
         return compressed_ring_reduce_scatter(a[0], "x")[None]
@@ -114,9 +116,7 @@ def test_grouped_exchange():
         f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         return np.asarray(f(chunks))
 
-    want = np.stack(
-        [sum((q + 1) * chunks[q, p] for q in range(8)) for p in range(8)]
-    )
+    want = np.stack([sum((q + 1) * chunks[q, p] for q in range(8)) for p in range(8)])
     got_f = run("fused")
     check("fused_exchange", np.allclose(got_f, want, atol=1e-5))
     for g in (1, 2, 3, 7):
@@ -218,8 +218,7 @@ def test_tiled_skew_parity():
         f = make_count_fn(plan, mesh, mode=mode, fuse=fuse, impl="pallas")
         got = np.asarray(f(cols))
         ok = np.allclose(got, want, rtol=1e-6)
-        check(f"skew8_{mode}_fuse{int(fuse)}_pallas", ok,
-              f"got {got[0]} want {want}")
+        check(f"skew8_{mode}_fuse{int(fuse)}_pallas", ok, f"got {got[0]} want {want}")
 
     # structural: no traced value in the count program has the seed's
     # [P, P, max_e] global-max bucket shape (or anything at least as wide)
@@ -258,9 +257,7 @@ def test_unified_api():
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
         want = count_colorful_maps(g, tree, coloring)
         single = Counter.from_graph(g, tree, backend="single")
-        dist = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=8, mode="adaptive"
-        )
+        dist = Counter.from_graph(g, tree, backend="distributed", num_shards=8, mode="adaptive")
         got_s = single.count_coloring(coloring)
         got_d = dist.count_coloring(coloring)
         ok = np.allclose([got_s, got_d], want, rtol=1e-6)
@@ -269,9 +266,7 @@ def test_unified_api():
     # keyed estimate: on-device coloring sampling, estimator vs oracle
     tree = path_tree(3)
     truth = count_copies(g, tree)
-    dist = Counter.from_graph(
-        g, tree, backend="distributed", num_shards=8, mode="pipeline"
-    )
+    dist = Counter.from_graph(g, tree, backend="distributed", num_shards=8, mode="pipeline")
     res = dist.estimate(n_iter=192, key=jax.random.key(0), batch=32)
     rel = abs(res.mean - truth) / truth
     check("api_keyed_estimate_P8", rel < 0.25,
@@ -330,8 +325,12 @@ def test_multi_template():
     for mode in ("alltoall", "pipeline", "adaptive", "ring"):
         for fuse in (False, True):
             c = Counter.from_graph(
-                g, family[-1], backend="distributed", num_shards=8,
-                mode=mode, fuse=fuse,
+                g,
+                family[-1],
+                backend="distributed",
+                num_shards=8,
+                mode=mode,
+                fuse=fuse,
             )
             got = c.count_coloring_many(family, coloring)
             ok = np.allclose(got, want, rtol=1e-6)
@@ -346,13 +345,16 @@ def test_multi_template():
     parity = True
     for i, t in enumerate(family):
         ci = Counter.from_graph(
-            g, t, backend="distributed", num_shards=8, mode="pipeline",
+            g,
+            t,
+            backend="distributed",
+            num_shards=8,
+            mode="pipeline",
             n_colors=res.k,
         )
         ri = ci.estimate(n_iter=12, key=jax.random.key(3), batch=6)
         parity = parity and np.allclose(ri.samples, res.samples[:, i], rtol=1e-6)
-    check("multi_keyed_estimate_parity_P8", ok_shape and parity,
-          f"shape {res.samples.shape}")
+    check("multi_keyed_estimate_parity_P8", ok_shape and parity, f"shape {res.samples.shape}")
 
 
 def test_compaction():
@@ -399,7 +401,11 @@ def _run_compaction_checks():
     mesh = make_mesh((8,), ("data",))
     dense_plan = build_distributed_plan(g, tree, 8)
     plan = build_distributed_plan(
-        g, tree, 8, compact=True, density_threshold=0.5,
+        g,
+        tree,
+        8,
+        compact=True,
+        density_threshold=0.5,
         capacity_factor=1.25,
     )
     spec = plan.compaction
@@ -433,7 +439,8 @@ def _run_compaction_checks():
         c = np.asarray(fc(cols))
         ok = np.array_equal(d, c)
         check(
-            f"compact_{mode}_fuse{int(fuse)}_{impl}_P8", ok,
+            f"compact_{mode}_fuse{int(fuse)}_{impl}_P8",
+            ok,
             f"dense {d[0]} compact {c[0]}",
         )
 
@@ -505,9 +512,7 @@ def _run_compressed_checks():
         ("adaptive", False), ("ring", False), ("ring", True),
     ]
     for mode, fuse in cases:
-        base = np.asarray(
-            make_count_fn(plan_d, mesh, mode=mode, fuse=fuse)(cols)
-        )
+        base = np.asarray(make_count_fn(plan_d, mesh, mode=mode, fuse=fuse)(cols))
         for wire in ("int16", "int8"):
             for plan, tag in ((plan_d, "dense"), (plan_c, "compact")):
                 got = np.asarray(make_count_fn(
@@ -527,8 +532,7 @@ def _run_compressed_checks():
         got = np.asarray(fn8(cols))
     check(
         "wire_saturation_storm_P8",
-        np.array_equal(base, got)
-        and [s for s, _ in fp.fired].count("compression.saturate") == 2,
+        np.array_equal(base, got) and [s for s, _ in fp.fired].count("compression.saturate") == 2,
         f"fired {fp.fired}",
     )
 
@@ -548,7 +552,8 @@ def _run_compressed_checks():
         plan_c, mesh, mode="adaptive", adaptive="measured", wire_dtype="int16"
     )(cols))
     check(
-        "wire_measured_counts_P8", np.array_equal(base, got),
+        "wire_measured_counts_P8",
+        np.array_equal(base, got),
         f"wide {base[0]} measured {got[0]}",
     )
 
@@ -575,22 +580,29 @@ def test_moe_manual_vs_dense():
         ("tp", False, 1, "tp"),
     ):
         cfg = dataclasses.replace(
-            base, num_experts=4, experts_per_token=2,
-            moe_sharding=moe_sharding, capacity_factor=64.0,
+            base,
+            num_experts=4,
+            experts_per_token=2,
+            moe_sharding=moe_sharding,
+            capacity_factor=64.0,
         )
         init = Initializer(jax.random.key(7))
         params = moe_init(init, cfg)
-        x = jnp.asarray(
-            rng.standard_normal((4, 8, cfg.d_model)).astype(np.float32) * 0.3
-        )
+        x = jnp.asarray(rng.standard_normal((4, 8, cfg.d_model)).astype(np.float32) * 0.3)
         want, _ = jax.jit(
             lambda p_, x_: moe_block(p_, x_, cfg, dtype=jnp.float32)
         )(params, x)
 
         def body(p_, x_):
             out, aux = moe_block_manual(
-                p_, x_, cfg, dp_axes=("data",), model_axis="model",
-                fsdp_axis=None, pipeline=pipeline, group_factor=gf,
+                p_,
+                x_,
+                cfg,
+                dp_axes=("data",),
+                model_axis="model",
+                fsdp_axis=None,
+                pipeline=pipeline,
+                group_factor=gf,
                 dtype=jnp.float32,
             )
             return out
@@ -611,8 +623,7 @@ def test_moe_manual_vs_dense():
         )
         got = np.asarray(f(params, x))
         ok = np.allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
-        check(f"moe_manual_{tname}", ok,
-              f"max err {np.abs(got - np.asarray(want)).max():.2e}")
+        check(f"moe_manual_{tname}", ok, f"max err {np.abs(got - np.asarray(want)).max():.2e}")
 
 
 def test_elastic_restore():
@@ -641,8 +652,7 @@ def test_elastic_restore():
             np.asarray(got["b"]), np.asarray(tree["b"])
         )
         resharded = got["w"].sharding.num_devices == 8
-        check("elastic_restore", ok and resharded,
-              f"devices={got['w'].sharding.num_devices}")
+        check("elastic_restore", ok and resharded, f"devices={got['w'].sharding.num_devices}")
 
 
 def test_robustness():
@@ -669,17 +679,14 @@ def test_robustness():
     key = jax.random.key(17)
 
     def counter():
-        return Counter.from_graph(
-            g, tree, backend="distributed", num_shards=8, mode="pipeline"
-        )
+        return Counter.from_graph(g, tree, backend="distributed", num_shards=8, mode="pipeline")
 
     base = counter().estimate(n_iter=12, key=key, batch=4)
 
     with tempfile.TemporaryDirectory() as d:
         with faults.active(faults.inject("estimator.kill", at=(0,))):
             try:
-                counter().estimate(n_iter=12, key=key, batch=4,
-                                   checkpoint=d, checkpoint_every=4)
+                counter().estimate(n_iter=12, key=key, batch=4, checkpoint=d, checkpoint_every=4)
                 crashed = False
             except faults.InjectedCrash:
                 crashed = True
@@ -739,9 +746,7 @@ def test_elastic_coloring():
     for shards in (1, 8):
         mesh = make_mesh((shards,), ("data",))
         plan = build_distributed_plan(g, tree, shards)
-        samples[shards] = np.asarray(
-            keyed_sample_fn(plan, mesh, mode="pipeline")(key, batch)
-        )
+        samples[shards] = np.asarray(keyed_sample_fn(plan, mesh, mode="pipeline")(key, batch))
     check(
         "elastic_coloring_P1_vs_P8",
         np.allclose(samples[1], samples[8], rtol=1e-6),
@@ -776,7 +781,9 @@ def test_service():
     k, batch = 4, 4
     p4 = path_tree(4)
     svc = CountingService(
-        g, n_colors=k, backend="distributed",
+        g,
+        n_colors=k,
+        backend="distributed",
         plan_opts={"num_shards": 8, "mode": "pipeline"},
         config=ServiceConfig(batch=batch),
     )
@@ -797,17 +804,77 @@ def test_service():
     ra, rb = ta.result(), tb.result()
     check(
         "service_solo_scalar_P8",
-        np.allclose(np.asarray(ra.samples), np.asarray(sa.samples),
-                    rtol=1e-6),
+        np.allclose(np.asarray(ra.samples), np.asarray(sa.samples), rtol=1e-6),
         f"svc {np.asarray(ra.samples)[:3]} solo {np.asarray(sa.samples)[:3]}",
     )
     check(
         "service_solo_family_P8",
-        np.allclose(np.asarray(rb.samples), np.asarray(sb.samples),
-                    rtol=1e-6),
+        np.allclose(np.asarray(rb.samples), np.asarray(sb.samples), rtol=1e-6),
         f"svc {np.asarray(rb.samples)[0]} solo {np.asarray(sb.samples)[0]}",
     )
     check("service_coalesced_P8", coalesced > 1.0, f"factor {coalesced:.2f}")
+
+
+def test_treewidth2():
+    """Treewidth-2 bag programs over 8 real shards (DESIGN.md §19).
+
+    Fixed-coloring oracle parity for cycle/diamond templates across the
+    exchange modes (the bag_combine exchange rides the same wire; collapse
+    psums the pinned-apex table), a mixed tree+cycle family through one
+    shared DAG, the narrow int16 wire, fuse-bypass parity, and 1-vs-8
+    shard parity on the single backend's exact counts.
+    """
+    from repro.api import Counter
+    from repro.core import erdos_renyi
+    from repro.core.brute_force import count_colorful_maps
+    from repro.core.templates import template
+
+    g = erdos_renyi(61, 6.0, seed=11)  # ragged last shard on purpose
+    fam = ["cycle5", "diamond"]
+    k = max(template(n).n for n in fam)
+    rng = np.random.default_rng(29)
+    coloring = rng.integers(0, k, g.n).astype(np.int32)
+    want = [count_colorful_maps(g, template(n), coloring) for n in fam]
+
+    for mode in ("alltoall", "pipeline", "ring", "adaptive"):
+        c = Counter.from_graph(
+            g,
+            fam[0],
+            backend="distributed",
+            num_shards=8,
+            mode=mode,
+        )
+        got = c.count_coloring_many(fam, coloring)
+        check(f"tw2_{mode}_P8", np.allclose(got, want, rtol=1e-6), f"got {got} want {want}")
+
+    # fuse is force-bypassed per bag node but must stay on for tree nodes
+    mixed = ["u3-1", "cycle4", "cycle5"]
+    km = max(template(n).n for n in mixed)
+    colm = rng.integers(0, km, g.n).astype(np.int32)
+    wantm = [count_colorful_maps(g, template(n), colm) for n in mixed]
+    c = Counter.from_graph(
+        g,
+        mixed[-1],
+        backend="distributed",
+        num_shards=8,
+        mode="pipeline",
+        fuse=True,
+    )
+    gotm = c.count_coloring_many(mixed, colm)
+    check("tw2_mixed_fuse_P8", np.allclose(gotm, wantm, rtol=1e-6), f"got {gotm} want {wantm}")
+
+    # narrow wire: int16 slabs round-trip the bag exchange bit-exactly
+    c16 = Counter.from_graph(
+        g, fam[0], backend="distributed", num_shards=8, mode="alltoall",
+        wire_dtype="int16",
+    )
+    got16 = c16.count_coloring_many(fam, coloring)
+    check("tw2_int16_P8", np.allclose(got16, want, rtol=1e-6), f"got {got16} want {want}")
+
+    # 1-vs-8 parity: the sharded bag strategy equals the in-core engine
+    cs = Counter.from_graph(g, fam[0], backend="single")
+    gots = cs.count_coloring_many(fam, coloring)
+    check("tw2_single_vs_P8", np.allclose(gots, want, rtol=1e-6), f"got {gots} want {want}")
 
 
 def main():
@@ -828,6 +895,7 @@ def main():
         test_service,
         test_moe_manual_vs_dense,
         test_elastic_restore,
+        test_treewidth2,
     ]
     wanted = sys.argv[1:]
     if wanted:

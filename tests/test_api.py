@@ -35,9 +35,7 @@ class TestBackendParity:
         want = count_colorful_maps(g, tree, coloring)
 
         single = Counter.from_graph(g, tree, backend="single")
-        dist = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="alltoall"
-        )
+        dist = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="alltoall")
         got_s = single.count_coloring(coloring)
         got_d = dist.count_coloring(coloring)
         assert got_s == pytest.approx(want)
@@ -99,9 +97,7 @@ class TestRequests:
         )
         with pytest.raises(ValueError, match="iter_axis"):
             _ = c.plan
-        base = Counter.from_graph(
-            g, path_tree(3), backend="distributed", num_shards=1
-        )
+        base = Counter.from_graph(g, path_tree(3), backend="distributed", num_shards=1)
         with pytest.raises(ValueError, match="iter_axis"):
             base.with_options(iter_axis="model")
         with pytest.raises(TypeError, match="only swaps"):
@@ -116,9 +112,7 @@ class TestRequests:
         rng = np.random.default_rng(2)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
         want = count_colorful_maps(g, tree, coloring)
-        base = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline"
-        )
+        base = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="pipeline")
         # exchange/kernel knobs share the built plan
         fused = base.with_options(mode="ring", fuse=True, impl="xla")
         assert fused.plan is base.plan
@@ -187,9 +181,7 @@ class TestGraphIO:
         c = Counter.from_graph(g2, tree, backend="single")
         rng = np.random.default_rng(1)
         coloring = rng.integers(0, tree.n, g2.n).astype(np.int32)
-        assert c.count_coloring(coloring) == pytest.approx(
-            count_colorful_maps(g, tree, coloring)
-        )
+        assert c.count_coloring(coloring) == pytest.approx(count_colorful_maps(g, tree, coloring))
 
 
 class TestShardColoring:

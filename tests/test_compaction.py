@@ -69,9 +69,7 @@ class TestProbe:
         g = _skewed_graph()
         tree = template("u7-2")
         plan = build_counting_plan(g, tree)
-        masks = next(
-            probe_activity(g, plan.chain, plan.combine, plan.k, probes=1, seed=5)
-        )
+        masks = next(probe_activity(g, plan.chain, plan.combine, plan.k, probes=1, seed=5))
         rng = np.random.default_rng(5)  # the probe's own coloring stream
         coloring = rng.integers(0, plan.k, g.n).astype(np.int32)
         col = np.zeros(plan.n_pad, np.int32)
@@ -133,9 +131,7 @@ class TestSingleDeviceParity:
         permissive threshold its table cap must engage, driving the
         SpMM through the compact row-index indirection."""
         g = _skewed_graph()
-        comp = build_counting_plan(
-            g, template("u7-2"), compact=True, density_threshold=0.7
-        )
+        comp = build_counting_plan(g, template("u7-2"), compact=True, density_threshold=0.7)
         spec = comp.compaction
         rights = {
             nd.right
@@ -190,14 +186,15 @@ class TestSingleDeviceParity:
         compacted plan (callers that cannot consume the flag)."""
         g = _skewed_graph()
         comp = build_counting_plan(
-            g, template("u5-2"), compact=True, density_threshold=1.0,
+            g,
+            template("u5-2"),
+            compact=True,
+            density_threshold=1.0,
             capacity_factor=1e-6,
         )
         dense = build_counting_plan(g, template("u5-2"))
         col = _coloring(dense, g, dense.k)
-        assert float(colorful_map_count(comp, col)) == float(
-            colorful_map_count(dense, col)
-        )
+        assert float(colorful_map_count(comp, col)) == float(colorful_map_count(dense, col))
 
 
 class TestFamilyParity:
@@ -205,9 +202,7 @@ class TestFamilyParity:
         g = _skewed_graph()
         family = ["u3-1", "u5-2", "u7-2"]
         dense = build_multi_counting_plan(g, family)
-        comp = build_multi_counting_plan(
-            g, family, compact=True, density_threshold=0.7
-        )
+        comp = build_multi_counting_plan(g, family, compact=True, density_threshold=0.7)
         assert comp.compaction.enabled
         fd = count_fn_many(dense, batch=3)
         fc = count_fn_many(comp, batch=3)
@@ -224,7 +219,10 @@ class TestFamilyParity:
         coloring = rng.integers(0, k, g.n).astype(np.int32)
         dense = Counter.from_graph(g, family[-1], backend="single")
         comp = Counter.from_graph(
-            g, family[-1], backend="single", compact=True,
+            g,
+            family[-1],
+            backend="single",
+            compact=True,
             density_threshold=0.9,
         )
         want = dense.count_coloring_many(family, coloring)
@@ -248,8 +246,14 @@ class TestOneShardDistributed:
             g, tree, backend="distributed", num_shards=1, mode=mode, fuse=fuse
         )
         comp = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode=mode,
-            fuse=fuse, compact=True, density_threshold=0.9,
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode=mode,
+            fuse=fuse,
+            compact=True,
+            density_threshold=0.9,
         )
         assert comp.plan.compaction is not None
         d = dense.count_coloring(coloring)
@@ -262,12 +266,16 @@ class TestOneShardDistributed:
         tree = spider_tree([2, 1])
         rng = np.random.default_rng(1)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
-        dense = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline"
-        )
+        dense = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="pipeline")
         tiny = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline",
-            compact=True, density_threshold=1.0, capacity_factor=1e-6,
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="pipeline",
+            compact=True,
+            density_threshold=1.0,
+            capacity_factor=1e-6,
         )
         assert tiny.plan.compaction.enabled
         assert dense.count_coloring(coloring) == tiny.count_coloring(coloring)
@@ -275,12 +283,15 @@ class TestOneShardDistributed:
     def test_keyed_estimate_samples_identical(self):
         g = _skewed_graph(512, 1500, seed=4)
         tree = path_tree(4)
-        dense = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="alltoall"
-        )
+        dense = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="alltoall")
         comp = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="alltoall",
-            compact=True, density_threshold=0.9,
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="alltoall",
+            compact=True,
+            density_threshold=0.9,
         )
         key = jax.random.key(6)
         rd = dense.estimate(n_iter=6, key=key, batch=3)
@@ -292,8 +303,13 @@ class TestPlanOpts:
     def test_api_accepts_compaction_opts(self):
         g = _skewed_graph(256, 800, seed=5)
         c = Counter.from_graph(
-            g, path_tree(3), backend="single", compact=True,
-            density_threshold=0.5, capacity_factor=2.0, probes=1,
+            g,
+            path_tree(3),
+            backend="single",
+            compact=True,
+            density_threshold=0.5,
+            capacity_factor=2.0,
+            probes=1,
         )
         plan = c.plan
         assert plan.compaction is not None
@@ -344,8 +360,12 @@ class TestPropertyParity:
             }[tname]
             dense = build_counting_plan(g, tree)
             comp = build_counting_plan(
-                g, tree, compact=True, density_threshold=1.0,
-                capacity_factor=cf, probes=1,
+                g,
+                tree,
+                compact=True,
+                density_threshold=1.0,
+                capacity_factor=cf,
+                probes=1,
             )
             fd = count_fn(dense, batch=2)
             fc = count_fn(comp, batch=2)

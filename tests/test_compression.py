@@ -127,8 +127,7 @@ class TestBytesModel:
             i for i, nd in enumerate(plan.program.nodes)
             if not nd.is_leaf and nd.right in spec.shard_caps
         )
-        dense, compact = node_exchange_bytes(plan, i, "ring",
-                                             wire_dtype="int16")
+        dense, compact = node_exchange_bytes(plan, i, "ring", wire_dtype="int16")
         assert 0 < compact < dense
         b = plan.widths[plan.program.nodes[i].right]
         cap = spec.shard_caps[plan.program.nodes[i].right]
@@ -162,8 +161,13 @@ class TestSampledDensity:
         g = _skewed_graph(1024, 3000, seed=2)
         plan = build_counting_plan(g, spider_tree([2, 1]))
         dens = sampled_density(
-            g.n, 2.0 * g.num_edges / g.n, plan.chain, plan.combine, plan.k,
-            sample_vertices=256, probes=1,
+            g.n,
+            2.0 * g.num_edges / g.n,
+            plan.chain,
+            plan.combine,
+            plan.k,
+            sample_vertices=256,
+            probes=1,
         )
         assert dens and all(0.0 <= d <= 1.0 for d in dens.values())
         # the probe is exact where the Markov model saturates: deep nodes
@@ -179,8 +183,7 @@ class TestOneShardParity:
     on the denser graph int16) genuinely saturates and the wider-wire
     redispatch carries the batch."""
 
-    @pytest.mark.parametrize("mode", ["alltoall", "pipeline", "adaptive",
-                                      "ring"])
+    @pytest.mark.parametrize("mode", ["alltoall", "pipeline", "adaptive", "ring"])
     @pytest.mark.parametrize("wire", WIRES)
     def test_wire_parity(self, mode, wire):
         g = _skewed_graph()
@@ -188,11 +191,13 @@ class TestOneShardParity:
         rng = np.random.default_rng(0)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
         want = count_colorful_maps(g, tree, coloring)
-        wide = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode=mode
-        )
+        wide = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode=mode)
         narrow = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode=mode,
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode=mode,
             wire_dtype=wire,
         )
         d = wide.count_coloring(coloring)
@@ -206,12 +211,16 @@ class TestOneShardParity:
         tree = spider_tree([2, 1])
         rng = np.random.default_rng(1)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
-        wide = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline"
-        )
+        wide = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="pipeline")
         narrow = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline",
-            wire_dtype=wire, compact=True, density_threshold=0.9,
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="pipeline",
+            wire_dtype=wire,
+            compact=True,
+            density_threshold=0.9,
         )
         assert narrow.plan.compaction is not None
         assert wide.count_coloring(coloring) == narrow.count_coloring(coloring)
@@ -224,11 +233,13 @@ class TestOneShardParity:
         tree = path_tree(4)
         rng = np.random.default_rng(2)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
-        wide = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="alltoall"
-        )
+        wide = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="alltoall")
         n8 = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="alltoall",
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="alltoall",
             wire_dtype="int8",
         )
         assert wide.count_coloring(coloring) == n8.count_coloring(coloring)
@@ -236,11 +247,13 @@ class TestOneShardParity:
     def test_keyed_estimate_samples_identical(self):
         g = _skewed_graph()
         tree = path_tree(4)
-        wide = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="ring"
-        )
+        wide = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="ring")
         narrow = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="ring",
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="ring",
             wire_dtype="int16",
         )
         key = jax.random.key(6)
@@ -256,17 +269,17 @@ class TestOneShardParity:
         tree = spider_tree([2, 1])
         rng = np.random.default_rng(5)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
-        wide = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline"
-        )
+        wide = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="pipeline")
         n8 = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline",
+            g,
+            tree,
+            backend="distributed",
+            num_shards=1,
+            mode="pipeline",
             wire_dtype="int8",
         )
         want = wide.count_coloring(coloring)
-        with faults.active(
-            faults.inject("compression.saturate", at=(0, 1))
-        ) as fp:
+        with faults.active(faults.inject("compression.saturate", at=(0, 1))) as fp:
             got = n8.count_coloring(coloring)
         assert got == want
         fired = [s for s, _ in fp.fired]
@@ -277,8 +290,12 @@ class TestPlanOpts:
     def test_api_accepts_wire_opts(self):
         g = _skewed_graph(256, 800, seed=5)
         c = Counter.from_graph(
-            g, path_tree(3), backend="distributed", num_shards=1,
-            wire_dtype="int16", adaptive="measured",
+            g,
+            path_tree(3),
+            backend="distributed",
+            num_shards=1,
+            wire_dtype="int16",
+            adaptive="measured",
         )
         assert c.plan_opts["wire_dtype"] == "int16"
         assert c.plan_opts["adaptive"] == "measured"
@@ -286,7 +303,10 @@ class TestPlanOpts:
     def test_with_options_swaps_wire(self):
         g = _skewed_graph(256, 800, seed=5)
         c = Counter.from_graph(
-            g, path_tree(3), backend="distributed", num_shards=1,
+            g,
+            path_tree(3),
+            backend="distributed",
+            num_shards=1,
             mode="pipeline",
         )
         rng = np.random.default_rng(3)
@@ -300,9 +320,7 @@ class TestPlanOpts:
         from repro.core.distributed import make_count_fn
 
         g = _skewed_graph(256, 800, seed=5)
-        c = Counter.from_graph(
-            g, path_tree(3), backend="distributed", num_shards=1
-        )
+        c = Counter.from_graph(g, path_tree(3), backend="distributed", num_shards=1)
         mesh = make_mesh((1,), ("data",))
         with pytest.raises(ValueError, match="wire_dtype"):
             make_count_fn(c.plan, mesh, wire_dtype="int4")

@@ -140,9 +140,7 @@ class TestEstimator:
         rng = np.random.default_rng(3)
         cols = rng.integers(0, tree.n, (5, plan.n_pad)).astype(np.int32)
         cols[:, g.n :] = 0
-        want = np.array(
-            [float(colorful_map_count(plan, jnp.asarray(c))) for c in cols]
-        )
+        want = np.array([float(colorful_map_count(plan, jnp.asarray(c))) for c in cols])
         got = np.asarray(
             jax.vmap(lambda c: colorful_map_count(plan, c))(jnp.asarray(cols))
         )
@@ -152,9 +150,7 @@ class TestEstimator:
 
         maps, ests = _count_fn(plan, batch=4)(jax.random.key(0))
         assert maps.shape == (4,) and ests.shape == (4,)
-        np.testing.assert_allclose(
-            np.asarray(ests), np.asarray(maps) * plan.scale, rtol=1e-6
-        )
+        np.testing.assert_allclose(np.asarray(ests), np.asarray(maps) * plan.scale, rtol=1e-6)
 
     def test_batched_estimator_unbiased(self):
         tree = path_tree(3)
@@ -200,10 +196,7 @@ class TestTemplates:
             chain = partition_tree(tr)
             for nd in chain.nodes:
                 if not nd.is_leaf:
-                    assert (
-                        chain.nodes[nd.left].size + chain.nodes[nd.right].size
-                        == nd.size
-                    )
+                    assert (chain.nodes[nd.left].size + chain.nodes[nd.right].size == nd.size)
             assert chain.nodes[chain.root_index].size == tr.n
 
 

@@ -43,9 +43,7 @@ class TestSpmmKernels:
             slabs_per_block=plan.slabs_per_block,
             interpret=True,
         )
-        want = ref.spmm_segment_ref(plan.rows, plan.cols, table, plan.n_pad - 1)[
-            : plan.n_pad
-        ]
+        want = ref.spmm_segment_ref(plan.rows, plan.cols, table, plan.n_pad - 1)[: plan.n_pad]
         np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-6)
         # zero-degree and pad rows come out exactly zero (pad slabs no-op)
         np.testing.assert_array_equal(np.asarray(got[g.n :]), 0.0)
@@ -106,9 +104,7 @@ class TestSpmmKernels:
         )[: plan.n_pad]
         got = jnp.where(plan.written_mask[:, None], got, 0)
         eplan = ops.build_spmm_plan(rows, cols, g.n, kind="edges")
-        want = ref.spmm_segment_ref(eplan.rows, eplan.cols, table, plan.n_pad - 1)[
-            : plan.n_pad
-        ]
+        want = ref.spmm_segment_ref(eplan.rows, eplan.cols, table, plan.n_pad - 1)[: plan.n_pad]
         np.testing.assert_allclose(got[: g.n], want[: g.n], rtol=1e-5)
 
     def test_xla_block_path_matches_edges_path(self):

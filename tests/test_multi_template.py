@@ -77,9 +77,7 @@ class TestCompiler:
         dag = compile_templates([tree])
         chain = partition_tree(tree)
         assert len(dag.nodes) < len(chain.nodes)
-        assert any(
-            nd.left == nd.right for nd in dag.nodes if not nd.is_leaf
-        )
+        assert any(nd.left == nd.right for nd in dag.nodes if not nd.is_leaf)
 
     def test_star_collapses_leaves(self):
         """All of a star's leaf children share one leaf node."""

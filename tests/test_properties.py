@@ -11,7 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)",
+)
 
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st

@@ -72,8 +72,7 @@ class TestResumeDeterminism:
 
     def _counter(self, backend, opts, **extra):
         g = erdos_renyi(40, 4.0, seed=5)
-        return Counter.from_graph(g, path_tree(3), backend=backend,
-                                  **opts, **extra)
+        return Counter.from_graph(g, path_tree(3), backend=backend, **opts, **extra)
 
     @pytest.mark.parametrize("backend,opts", BACKENDS)
     def test_kill_and_resume_every_boundary(self, backend, opts, tmp_path):
@@ -81,19 +80,14 @@ class TestResumeDeterminism:
         1 and 2.  Kill after each and resume: samples, estimate, and RSD
         must equal the uninterrupted run exactly (==, not approx)."""
         key = jax.random.key(0)
-        base = self._counter(backend, opts).estimate(
-            n_iter=12, key=key, batch=4
-        )
+        base = self._counter(backend, opts).estimate(n_iter=12, key=key, batch=4)
         for kill_at in (0, 1):
             d = tmp_path / f"{backend}-{kill_at}"
             c = self._counter(backend, opts)
             with faults.active(faults.inject("estimator.kill", at=(kill_at,))):
                 with pytest.raises(faults.InjectedCrash):
-                    c.estimate(n_iter=12, key=key, batch=4,
-                               checkpoint=str(d), checkpoint_every=4)
-            res = self._counter(backend, opts).estimate(
-                n_iter=12, key=key, batch=4, resume=str(d)
-            )
+                    c.estimate(n_iter=12, key=key, batch=4, checkpoint=str(d), checkpoint_every=4)
+            res = self._counter(backend, opts).estimate(n_iter=12, key=key, batch=4, resume=str(d))
             assert res.resumed_from == 4 * (kill_at + 1)
             np.testing.assert_array_equal(res.samples, base.samples)
             assert res.estimate == base.estimate
@@ -107,23 +101,18 @@ class TestResumeDeterminism:
         before the atomic rename.  The ``step_*.tmp`` residue must be
         skipped/GCed and the run resumes from the last *renamed* step."""
         key = jax.random.key(1)
-        base = self._counter(backend, opts).estimate(
-            n_iter=12, key=key, batch=4
-        )
+        base = self._counter(backend, opts).estimate(n_iter=12, key=key, batch=4)
         d = tmp_path / "midwrite"
         c = self._counter(backend, opts)
         # second checkpoint write (occurrence 1) dies mid-save: step 1 is
         # the newest *renamed* checkpoint, step 2 exists only as .tmp
         with faults.active(faults.inject("checkpoint.write_crash", at=(1,))):
             with pytest.raises(faults.InjectedCrash):
-                c.estimate(n_iter=12, key=key, batch=4,
-                           checkpoint=str(d), checkpoint_every=4)
+                c.estimate(n_iter=12, key=key, batch=4, checkpoint=str(d), checkpoint_every=4)
         left = sorted(os.listdir(d))
         assert "step_00000001" in left
         assert any(name.endswith(".tmp") for name in left)
-        res = self._counter(backend, opts).estimate(
-            n_iter=12, key=key, batch=4, resume=str(d)
-        )
+        res = self._counter(backend, opts).estimate(n_iter=12, key=key, batch=4, resume=str(d))
         assert res.resumed_from == 4  # resumed from step 1, not the tmp
         np.testing.assert_array_equal(res.samples, base.samples)
         assert res.estimate == base.estimate
@@ -144,12 +133,9 @@ class TestResumeDeterminism:
         c = Counter.from_graph(g, template("u5-2"), backend="single", **opts)
         with faults.active(faults.inject("estimator.kill", at=(0,))):
             with pytest.raises(faults.InjectedCrash):
-                c.estimate(n_iter=8, key=key, batch=4,
-                           checkpoint=str(d), checkpoint_every=4)
+                c.estimate(n_iter=8, key=key, batch=4, checkpoint=str(d), checkpoint_every=4)
         c2 = Counter.from_graph(g, template("u5-2"), backend="single", **opts)
-        with faults.active(
-            faults.inject("compaction.overflow", at=None)
-        ) as plan:
+        with faults.active(faults.inject("compaction.overflow", at=None)) as plan:
             res = c2.estimate(n_iter=8, key=key, batch=4, resume=str(d))
             assert plan.fired  # the storm actually hit the fallback path
         assert res.resumed_from == 4
@@ -190,8 +176,7 @@ class TestResumeDeterminism:
 
         key = jax.random.key(4)
         mgr = _mgr(tmp_path)
-        est = estimate_counts(fn, 12, key, batch=4, checkpoint=mgr,
-                              checkpoint_every=4)
+        est = estimate_counts(fn, 12, key, batch=4, checkpoint=mgr, checkpoint_every=4)
         assert len(calls) == 3
         latest = mgr.load_latest()
         assert latest is not None and latest[0] == 3
@@ -209,8 +194,7 @@ class TestResumeDeterminism:
         g = erdos_renyi(40, 4.0, seed=5)
         d = tmp_path / "sig"
         c = Counter.from_graph(g, path_tree(3), backend="single")
-        c.estimate(n_iter=12, key=jax.random.key(0), batch=4,
-                   checkpoint=str(d), checkpoint_every=4)
+        c.estimate(n_iter=12, key=jax.random.key(0), batch=4, checkpoint=str(d), checkpoint_every=4)
         fresh = Counter.from_graph(g, path_tree(3), backend="single")
         for kw in (dict(n_iter=16, key=jax.random.key(0), batch=4),
                    dict(n_iter=12, key=jax.random.key(9), batch=4),
@@ -222,8 +206,7 @@ class TestResumeDeterminism:
         # different template: also fatal (signature_extra carries it)
         other = Counter.from_graph(g, path_tree(4), backend="single")
         with pytest.raises(ResumeMismatchError):
-            other.estimate(n_iter=12, key=jax.random.key(0), batch=4,
-                           resume=str(d))
+            other.estimate(n_iter=12, key=jax.random.key(0), batch=4, resume=str(d))
 
     def test_resume_without_checkpoint_dir_raises(self):
         g = erdos_renyi(30, 4.0, seed=1)
@@ -245,13 +228,11 @@ class TestResumeDeterminism:
         mgr = _mgr(tmp_path)
         with faults.active(faults.inject("estimator.kill", at=(0,))):
             with pytest.raises(faults.InjectedCrash):
-                estimate_counts(fn, 12, key, batch=4, checkpoint=mgr,
-                                checkpoint_every=4)
+                estimate_counts(fn, 12, key, batch=4, checkpoint=mgr, checkpoint_every=4)
         assert len(calls) == 1
         state = EstimatorState.from_arrays(mgr.load_latest()[1]["estimator"])
         assert state.done == 4
-        res = estimate_counts(fn, 12, key, batch=4, resume=state,
-                              target_rsd=0.5)
+        res = estimate_counts(fn, 12, key, batch=4, resume=state, target_rsd=0.5)
         assert len(calls) == 1  # banked samples alone met the target
         assert res.niter == 4 and res.resumed_from == 4
         assert res.mean == 7.0
@@ -290,7 +271,8 @@ class TestSupervisor:
     def test_persistent_fault_quarantines_with_bounded_attempts(self):
         sleeps = []
         sup = Supervisor(
-            self._fn(), RetryPolicy(max_retries=2, backoff_s=0.01),
+            self._fn(),
+            RetryPolicy(max_retries=2, backoff_s=0.01),
             sleep=sleeps.append,
         )
         with faults.active(faults.inject("sample.raise", at=None)):
@@ -311,8 +293,7 @@ class TestSupervisor:
         """NaN/negative payloads are data corruption, not noise: exactly
         one attempt, no retry, immediate quarantine."""
         sleeps = []
-        sup = Supervisor(self._fn(), RetryPolicy(max_retries=5),
-                         sleep=sleeps.append)
+        sup = Supervisor(self._fn(), RetryPolicy(max_retries=5), sleep=sleeps.append)
         with faults.active(faults.inject(site, at=None)):
             out = sup(jax.random.key(0), 4)
         assert isinstance(out, QuarantinedBatch)
@@ -336,9 +317,7 @@ class TestSupervisor:
             RetryPolicy(max_retries=1, timeout_s=0.1, backoff_s=0.0),
             sleep=_noop_sleep,
         )
-        with faults.active(
-            faults.inject("sample.timeout", at=(0,), payload=0.5)
-        ):
+        with faults.active(faults.inject("sample.timeout", at=(0,), payload=0.5)):
             out = sup(jax.random.key(0), 4)
         np.testing.assert_array_equal(out, np.full(4, 9.0))
         assert sup.quarantined == []
@@ -351,8 +330,7 @@ class TestSupervisor:
         key = jax.random.key(0)
         c = Counter.from_graph(g, path_tree(3), backend="single")
         base = c.estimate(n_iter=12, key=key, batch=4)
-        sup = Supervisor(c.sample_fn, RetryPolicy(max_retries=2),
-                         sleep=_noop_sleep)
+        sup = Supervisor(c.sample_fn, RetryPolicy(max_retries=2), sleep=_noop_sleep)
         # the second batch fails on every attempt (occurrences count
         # attempts: batch 0 is occurrence 0, batch 1's three tries are 1-3)
         with faults.active(faults.inject("sample.raise", at=(1, 2, 3))):
@@ -367,8 +345,7 @@ class TestSupervisor:
         assert np.isfinite(est.estimate)
 
     def test_all_quarantined_aborts(self):
-        sup = Supervisor(self._fn(), RetryPolicy(max_retries=0),
-                         sleep=_noop_sleep)
+        sup = Supervisor(self._fn(), RetryPolicy(max_retries=0), sleep=_noop_sleep)
         with faults.active(faults.inject("sample.raise", at=None)):
             with pytest.raises(EstimationAborted, match="quarantined"):
                 estimate_counts(sup, 8, jax.random.key(0), batch=4)
@@ -437,8 +414,7 @@ class TestCheckpointManager:
     def test_keep_pruning_spares_restored_step(self, tmp_path):
         """The checkpoint a live run restored from is never pruned, even
         when ``keep`` new checkpoints land on top of it."""
-        mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2,
-                                async_save=False)
+        mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2, async_save=False)
         self._save(mgr, 1, 1.0)
         assert mgr.load_latest()[0] == 1  # a resume pins step 1
         for s in range(2, 6):
@@ -452,14 +428,16 @@ class TestCheckpointManager:
         )
         state = EstimatorState(
             signature="g|V=10|E=20|p3|single|n_iter=12|batch=4|delta=0.1|key=1,2",
-            n_iter=12, batch=4, delta=0.1, cursor=6,
+            n_iter=12,
+            batch=4,
+            delta=0.1,
+            cursor=6,
             samples=np.arange(20, dtype=np.float64).reshape(10, 2),
             quarantined=q,
         )
         back = EstimatorState.from_arrays(state.to_arrays())
         assert back.signature == state.signature
-        assert (back.n_iter, back.batch, back.delta, back.cursor) == \
-            (12, 4, 0.1, 6)
+        assert (back.n_iter, back.batch, back.delta, back.cursor) == (12, 4, 0.1, 6)
         np.testing.assert_array_equal(back.samples, state.samples)
         assert back.quarantined == q
 
@@ -467,7 +445,11 @@ class TestCheckpointManager:
         """The associative per-group sums at a prefix agree with slicing
         the final sample array the way median_of_means groups it."""
         state = EstimatorState(
-            signature="s", n_iter=12, batch=4, delta=0.1, cursor=2,
+            signature="s",
+            n_iter=12,
+            batch=4,
+            delta=0.1,
+            cursor=2,
             samples=np.arange(8, dtype=np.float64),
         )
         g = num_groups_for(0.1, 12)
@@ -568,8 +550,7 @@ class TestGraphIngestion:
     def test_npz_inconsistent_csr(self, tmp_path):
         p = tmp_path / "g.npz"
         indptr = np.array([0, 1, 2, 5], np.int64)  # claims 5, has 2
-        np.savez(p, n=np.int64(3), indptr=indptr,
-                 indices=np.array([1, 0], np.int32))
+        np.savez(p, n=np.int64(3), indptr=indptr, indices=np.array([1, 0], np.int32))
         with pytest.raises(GraphFormatError, match="truncated arrays"):
             load_npz(str(p))
         g = load_npz(str(p), validate=False)  # trusted load still works

@@ -50,8 +50,7 @@ def solo(graph, template, n_iter, **kw):
 
 def solo_many(graph, templates, n_iter, **kw):
     c = Counter.from_graph(graph, templates[0], backend="single", n_colors=K)
-    return c.estimate_many(templates, n_iter, key=jax.random.key(0),
-                           batch=BATCH, **kw)
+    return c.estimate_many(templates, n_iter, key=jax.random.key(0), batch=BATCH, **kw)
 
 
 class TestSoloEquivalence:
@@ -69,12 +68,9 @@ class TestSoloEquivalence:
         sa = solo(graph, "u3-1", 24)
         sb = solo_many(graph, ("u3-1", "u5-2"), 16)
         sc = solo(graph, "u5-2", 20)
-        np.testing.assert_array_equal(np.asarray(ra.samples),
-                                      np.asarray(sa.samples))
-        np.testing.assert_array_equal(np.asarray(rb.samples),
-                                      np.asarray(sb.samples))
-        np.testing.assert_array_equal(np.asarray(rc.samples),
-                                      np.asarray(sc.samples))
+        np.testing.assert_array_equal(np.asarray(ra.samples), np.asarray(sa.samples))
+        np.testing.assert_array_equal(np.asarray(rb.samples), np.asarray(sb.samples))
+        np.testing.assert_array_equal(np.asarray(rc.samples), np.asarray(sc.samples))
         assert ra.estimate == sa.estimate
         assert np.array_equal(rb.estimates, sb.estimates)
         assert rc.estimate == sc.estimate
@@ -94,14 +90,12 @@ class TestSoloEquivalence:
         s1 = solo(graph, "u3-1", 60, target_rsd=0.25)
         r1 = t1.result()
         assert r1.niter == s1.niter  # stopped at the same call boundary
-        np.testing.assert_array_equal(np.asarray(r1.samples),
-                                      np.asarray(s1.samples))
+        np.testing.assert_array_equal(np.asarray(r1.samples), np.asarray(s1.samples))
         assert r1.estimate == s1.estimate
         # the co-tenant keeps running to its own budget, unperturbed
         r2 = t2.result()
         s2 = solo(graph, "u5-2", 60)
-        np.testing.assert_array_equal(np.asarray(r2.samples),
-                                      np.asarray(s2.samples))
+        np.testing.assert_array_equal(np.asarray(r2.samples), np.asarray(s2.samples))
 
     def test_distinct_keys_distinct_streams(self, graph):
         """Requests with different keys get different passes and still
@@ -110,12 +104,10 @@ class TestSoloEquivalence:
         t1 = svc.client("a").submit("u3-1", n_iter=12)
         t2 = svc.client("a").submit("u3-1", n_iter=12, key=jax.random.key(9))
         svc.run_until_idle()
-        assert not np.array_equal(np.asarray(t1.result().samples),
-                                  np.asarray(t2.result().samples))
+        assert not np.array_equal(np.asarray(t1.result().samples), np.asarray(t2.result().samples))
         c = Counter.from_graph(graph, "u3-1", backend="single", n_colors=K)
         s2 = c.estimate(12, key=jax.random.key(9), batch=BATCH)
-        np.testing.assert_array_equal(np.asarray(t2.result().samples),
-                                      np.asarray(s2.samples))
+        np.testing.assert_array_equal(np.asarray(t2.result().samples), np.asarray(s2.samples))
 
 
 class TestMidStreamJoin:
@@ -168,8 +160,7 @@ class TestMidStreamJoin:
         sb = solo(graph, "u3-1", 80, target_rsd=0.25)
         rb = tb.result()
         assert rb.niter == sb.niter
-        np.testing.assert_array_equal(np.asarray(rb.samples),
-                                      np.asarray(sb.samples))
+        np.testing.assert_array_equal(np.asarray(rb.samples), np.asarray(sb.samples))
         assert rb.estimate == sb.estimate
 
 
@@ -220,8 +211,7 @@ class TestResultMemo:
         assert t2.done  # no scheduling round needed
         assert svc.stats().get("pass_calls", 0) == calls_before
         r1, r2 = t1.result(), t2.result()
-        np.testing.assert_array_equal(np.asarray(r1.samples),
-                                      np.asarray(r2.samples))
+        np.testing.assert_array_equal(np.asarray(r1.samples), np.asarray(r2.samples))
         assert r2.estimate == r1.estimate
         s = svc.stats()["results"]
         assert s["hits"] == 1 and s["entries"] == 1
@@ -271,10 +261,8 @@ class TestScheduling:
         the backend calls over any window."""
         svc = service(graph)
         svc.set_weight("heavy", 3.0)
-        svc.client("light").submit("u3-1", n_iter=96,
-                                   key=jax.random.key(1))
-        svc.client("heavy").submit("u3-1", n_iter=96,
-                                   key=jax.random.key(2))
+        svc.client("light").submit("u3-1", n_iter=96, key=jax.random.key(1))
+        svc.client("heavy").submit("u3-1", n_iter=96, key=jax.random.key(2))
         for _ in range(17):  # partial window: both still running
             svc.step()
         ts = svc.stats()["tenants"]
@@ -380,8 +368,7 @@ class TestQuarantine:
         assert r.niter == 8  # 12 budgeted minus the quarantined batch
         # healthy samples are the solo run's calls 1..2 (same keys)
         s = solo(graph, "u3-1", 12)
-        np.testing.assert_array_equal(np.asarray(r.samples),
-                                      np.asarray(s.samples)[BATCH:])
+        np.testing.assert_array_equal(np.asarray(r.samples), np.asarray(s.samples)[BATCH:])
 
     def test_all_quarantined_fails_clearly(self, graph):
         svc = service(graph, max_retries=0)

@@ -181,9 +181,7 @@ class TestOneShardParity:
         rng = np.random.default_rng(0)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
         want = count_colorful_maps(g, tree, coloring)
-        c = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode=mode, fuse=fuse
-        )
+        c = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode=mode, fuse=fuse)
         assert c.count_coloring(coloring) == pytest.approx(want, rel=1e-6)
 
     def test_bucket_tile_sweep_parity(self):
@@ -192,9 +190,7 @@ class TestOneShardParity:
         rng = np.random.default_rng(5)
         coloring = rng.integers(0, tree.n, g.n).astype(np.int32)
         want = count_colorful_maps(g, tree, coloring)
-        base = Counter.from_graph(
-            g, tree, backend="distributed", num_shards=1, mode="pipeline"
-        )
+        base = Counter.from_graph(g, tree, backend="distributed", num_shards=1, mode="pipeline")
         for tile in (32, 64, 256):
             c = base.with_options(bucket_tile=tile)
             assert c.plan.bucket_tile == tile

@@ -154,5 +154,3 @@ class TestEndToEnd:
             p2,
         )
         assert max(jax.tree.leaves(d)) < 5e-3
-
-

@@ -1,0 +1,268 @@
+"""Treewidth-2 templates (DESIGN.md §19): the apex-pinned bag-table programs.
+
+Correctness is anchored to the exponential brute-force oracle: for a FIXED
+coloring the DP is deterministic, so ``colorful_map_count`` must equal
+``count_colorful_maps`` exactly — on cycles, the diamond, the bowtie, the
+house, with widened color budgets, under ``fuse``, and inside mixed
+tree+cycle families compiled into one shared DAG.  Tree-shaped ``Template``
+objects must lower to the *identical* ``PartitionChain`` as their ``Tree``
+twin (the front-end is a strict superset, bit-identically).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import Counter
+from repro.core import build_counting_plan, colorful_map_count, erdos_renyi
+from repro.core.brute_force import (
+    count_colorful_maps,
+    count_copies,
+    count_embedding_maps,
+)
+from repro.core.count_engine import (
+    build_multi_counting_plan,
+    colorful_map_count_many,
+)
+from repro.core.templates import (
+    TEMPLATES,
+    BagNode,
+    Template,
+    Tree,
+    automorphism_count,
+    bag_program,
+    compile_templates,
+    cycle_template,
+    partition_tree,
+    program_has_bags,
+    template,
+    template_program,
+)
+
+BAG_NAMES = ["cycle3", "cycle4", "cycle5", "cycle6", "diamond", "bowtie", "house"]
+
+
+def _dp(g, t, coloring, **kw):
+    plan = build_counting_plan(g, t, **kw)
+    col = np.zeros(plan.n_pad, np.int32)
+    col[: g.n] = coloring
+    return float(colorful_map_count(plan, jnp.asarray(col)))
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(22, 7.0, seed=5)
+
+
+class TestTemplateType:
+    def test_registry_has_nontrees(self):
+        for name in BAG_NAMES:
+            t = template(name)
+            assert isinstance(t, Template) and not t.is_tree
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Template(3, ((0, 0), (0, 1)))  # self loop
+        with pytest.raises(ValueError):
+            Template(3, ((0, 1), (0, 1), (1, 2)))  # duplicate edge
+        with pytest.raises(ValueError):
+            Template(4, ((0, 1), (2, 3)))  # disconnected
+        with pytest.raises(ValueError):
+            Template(3, ((0, 1), (1, 7)))  # out of range
+
+    def test_automorphism_counts_by_hand(self):
+        # |Aut(C_n)| = 2n (dihedral); diamond 4; bowtie 8; house 2
+        want = {"cycle3": 6, "cycle4": 8, "cycle5": 10, "cycle6": 12,
+                "diamond": 4, "bowtie": 8, "house": 2}
+        for name, aut in want.items():
+            assert automorphism_count(template(name)) == aut, name
+
+    def test_non_apex_reducible_rejected(self):
+        # K4 minus nothing: removing any one vertex leaves a triangle
+        k4 = [(a, b) for a in range(4) for b in range(a + 1, 4)]
+        with pytest.raises(ValueError, match="apex-reducible"):
+            bag_program(Template(4, tuple(k4)))
+
+    def test_tree_shaped_template_is_a_tree(self):
+        t = Template(4, ((0, 1), (1, 2), (2, 3)))
+        assert t.is_tree
+        tr = t.as_tree()
+        assert isinstance(tr, Tree) and tr.edges == t.edges
+
+
+class TestFrontEnd:
+    def test_secret_tree_identical_chain(self):
+        # a tree disguised as a Template lowers to the IDENTICAL chain
+        edges = ((0, 1), (1, 2), (1, 3), (3, 4))
+        a = template_program(Template(5, edges))
+        b = partition_tree(Tree(5, edges))
+        assert a.nodes == b.nodes and a.k == b.k
+
+    def test_bag_program_shape(self):
+        p = bag_program(template("cycle5"))
+        assert program_has_bags(p)
+        kinds = [nd.kind for nd in p.nodes]
+        assert kinds.count("bag_collapse") == 1
+        assert p.nodes[p.root_index].kind == "bag_collapse"
+        # forest = path on 4 vertices -> collapse covers size n-1
+        assert p.nodes[p.root_index].size == 4
+
+    def test_bowtie_joins_forest_trees(self):
+        p = bag_program(template("bowtie"))
+        kinds = [nd.kind for nd in p.nodes]
+        assert "bag_join" in kinds  # two triangles share only the apex
+
+    def test_family_interning_shares_bag_nodes(self):
+        solo = len(bag_program(template("cycle5")).nodes) + len(
+            bag_program(template("cycle6")).nodes
+        )
+        dag = compile_templates(["cycle5", "cycle6"])
+        assert len(dag.nodes) < solo  # shared bag-leaf/combine prefixes
+
+    def test_mixed_family_keeps_tree_nodes_untagged(self):
+        dag = compile_templates(["u3-1", "cycle4"])
+        assert program_has_bags(dag)
+        assert any(not isinstance(nd, BagNode) for nd in dag.nodes)
+
+
+class TestOracleParity:
+    @pytest.mark.parametrize("name", BAG_NAMES)
+    def test_fixed_coloring_exact(self, graph, name):
+        t = template(name)
+        rng = np.random.default_rng(hash(name) % 2**31)
+        for trial in range(2):
+            coloring = rng.integers(0, t.n, graph.n).astype(np.int32)
+            want = count_colorful_maps(graph, t, coloring)
+            got = _dp(graph, t, coloring)
+            assert got == pytest.approx(want), (name, trial, got, want)
+
+    def test_triangle_by_hand(self):
+        from repro.core import from_edges
+
+        g = from_edges(3, np.array([[0, 1], [1, 2], [2, 0]]))
+        t = template("cycle3")
+        got = _dp(g, t, np.array([0, 1, 2], np.int32))
+        # one triangle, all 3! vertex orders colorful
+        assert got == count_colorful_maps(g, t, np.array([0, 1, 2])) == 6
+        assert count_embedding_maps(g, t) == 6
+        assert count_copies(g, t) == 1.0
+
+    @pytest.mark.parametrize("name", ["cycle4", "diamond"])
+    def test_widened_colors_exact(self, graph, name):
+        t = template(name)
+        rng = np.random.default_rng(11)
+        k = t.n + 2
+        coloring = rng.integers(0, k, graph.n).astype(np.int32)
+        want = count_colorful_maps(graph, t, coloring)
+        got = _dp(graph, t, coloring, n_colors=k)
+        assert got == pytest.approx(want), (got, want)
+
+    def test_fuse_parity(self, graph):
+        t = template("cycle5")
+        rng = np.random.default_rng(3)
+        coloring = rng.integers(0, t.n, graph.n).astype(np.int32)
+        base = _dp(graph, t, coloring)
+        fused = _dp(graph, t, coloring, fuse=True)
+        assert base == pytest.approx(fused)
+
+    def test_compaction_request_bypassed(self, graph):
+        # §15 probes cannot model bag nodes: compact=True must degrade to
+        # the dense plan, bit-exactly, not crash
+        t = template("diamond")
+        rng = np.random.default_rng(4)
+        coloring = rng.integers(0, t.n, graph.n).astype(np.int32)
+        plan = build_counting_plan(graph, t, compact=True)
+        assert plan.compaction is None
+        want = count_colorful_maps(graph, t, coloring)
+        col = np.zeros(plan.n_pad, np.int32)
+        col[: graph.n] = coloring
+        assert float(colorful_map_count(plan, jnp.asarray(col))) == pytest.approx(want)
+
+    def test_mixed_family_one_dag_exact(self, graph):
+        fam = ["u3-1", "cycle4", "u5-2", "cycle5"]
+        plan = build_multi_counting_plan(graph, fam, n_colors=6)
+        rng = np.random.default_rng(9)
+        coloring = rng.integers(0, plan.k, graph.n).astype(np.int32)
+        col = np.zeros(plan.n_pad, np.int32)
+        col[: graph.n] = coloring
+        got = np.asarray(colorful_map_count_many(plan, jnp.asarray(col)))
+        want = [count_colorful_maps(graph, template(n), coloring) for n in fam]
+        assert np.allclose(got, want), (got, want)
+
+
+class TestEstimates:
+    def test_estimate_converges_to_copies(self, graph):
+        t = template("diamond")
+        c = Counter.from_graph(graph, t, backend="single")
+        res = c.estimate(400, key=jax.random.key(2), batch=50)
+        truth = count_copies(graph, t)
+        assert truth > 0
+        assert res.estimate == pytest.approx(truth, rel=0.2), (
+            res.estimate, truth,
+        )
+
+    def test_family_estimate_by_name(self, graph):
+        c = Counter.from_graph(graph, "cycle5", backend="single")
+        res = c.estimate_many(["cycle3", "cycle5"], 64, key=jax.random.key(0))
+        assert res.templates == ("cycle3", "cycle5")
+        assert all(np.asarray(res.estimates) >= 0)
+
+
+class TestLauncherValidation:
+    def _argv(self, extra):
+        return ["--config", "bench-small", "--iters", "1"] + extra
+
+    def test_unknown_template_rejected(self, monkeypatch, capsys):
+        import sys
+
+        from repro.launch import count as launch_count
+
+        monkeypatch.setattr(
+            sys,
+            "argv",
+            ["count"] + self._argv(["--templates", "cycle5,notatmpl"]),
+        )
+        with pytest.raises(SystemExit):
+            launch_count.main()
+        err = capsys.readouterr().err
+        assert "notatmpl" in err and "registry" in err
+
+    def test_duplicate_template_rejected(self, monkeypatch, capsys):
+        import sys
+
+        from repro.launch import count as launch_count
+
+        monkeypatch.setattr(
+            sys,
+            "argv",
+            ["count"] + self._argv(["--templates", "cycle5,cycle5"]),
+        )
+        with pytest.raises(SystemExit):
+            launch_count.main()
+        assert "duplicate" in capsys.readouterr().err
+
+    def test_registry_sorted_in_message(self):
+        assert "cycle5" in TEMPLATES and "diamond" in TEMPLATES
+
+
+def test_cycle_template_helper():
+    c4 = cycle_template(4)
+    assert c4.n == 4 and len(c4.edges) == 4
+    with pytest.raises(ValueError):
+        cycle_template(2)
+
+
+def test_grep_guard_single_recursion_source():
+    """The node recursion lives in table_program.py ONLY (one-recursion
+    invariant): the bag kinds must not have grown a second executor."""
+    import pathlib
+    import re
+
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    hits = set()
+    for p in src.rglob("*.py"):
+        if re.search(r"tables\[nd\.(left|right)\]", p.read_text()):
+            hits.add(p.name)
+    assert hits == {"table_program.py"}, hits

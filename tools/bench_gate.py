@@ -66,6 +66,12 @@ STRUCTURAL_KEYS = (
     # sparsity signals (bench_sparsity / spmm auto): measured from seeded
     # graph structure, so they are machine-independent like the layouts
     "density",
+    # treewidth-2 bag-program metrics (bench_multi_template's bags
+    # section, DESIGN.md §19): interning counts and pinned-apex table
+    # widths are pure compile-time math — any growth is a front-end or
+    # layout regression (timing keys like bag_shared_us still classify
+    # as timing via the _us suffix, which is checked first)
+    "bag_",
     # §18 narrow-wire volume (bench_load_balance / bench_sparsity): the
     # per-wire exchange-bytes and wire-ratio keys ride the "bytes"/"ratio"
     # substrings above — deterministic plan math, held lower-is-better so
@@ -145,9 +151,7 @@ def compare_file(name, base, fresh, *, struct_rtol: float, timing_factor: float)
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument(
-        "--baseline", required=True, help="directory holding the tracked BENCH_*.json"
-    )
+    ap.add_argument("--baseline", required=True, help="directory holding the tracked BENCH_*.json")
     ap.add_argument(
         "--fresh", default=".", help="directory holding the freshly-emitted BENCH_*.json"
     )

@@ -1,0 +1,375 @@
+"""Offline approximation of ``ruff format`` used for the mechanical pass.
+
+The CI format gate runs the real ``ruff format --check src tests benchmarks
+examples tools`` (lint job); this tool exists because the dev container has
+no network and no ruff wheel, yet the tree still needs to be *brought to*
+ruff style in a mechanical, reviewable commit.  It implements the subset of
+rules that account for every deviation found in the tree:
+
+  * collapse a multi-line bracketed statement to one line when it fits in
+    the configured ``line-length`` (100, from pyproject) and carries no
+    magic trailing comma — dropping a now-redundant ``= (...)`` /
+    ``return (...)`` paren pair;
+  * explode a construct whose outermost bracket carries a magic trailing
+    comma to one element per line (ruff's magic-trailing-comma contract),
+    and explode single-line statements that overflow the limit, adding the
+    trailing comma ruff adds;
+  * normalize simple single-quoted strings to double quotes, strip
+    trailing whitespace, and end files with exactly one newline.
+
+Anything it cannot prove safe it leaves untouched: logical lines holding
+comments, multi-line or implicitly-concatenated strings, lambdas (their
+argument commas are unbracketed), or more than one top-level bracket
+group.  After rewriting, the tool refuses to save any file whose
+``ast.dump`` changed — the pass is formatting-only by construction.
+
+Usage::
+
+    python tools/pyfmt.py --check src tests     # list files needing work
+    python tools/pyfmt.py src tests benchmarks  # rewrite in place
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import keyword
+import pathlib
+import sys
+import tokenize
+
+LINE_LENGTH = 100
+INDENT = "    "
+
+OPENERS = "([{"
+CLOSERS = ")]}"
+SKIP_TOKENS = (tokenize.NL, tokenize.INDENT, tokenize.DEDENT, tokenize.ENCODING, tokenize.ENDMARKER)
+
+
+def logical_lines(src: str):
+    """Group tokens into logical lines (terminated by NEWLINE)."""
+    toks = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    cur = []
+    for t in toks:
+        if t.type in SKIP_TOKENS:
+            if t.type == tokenize.NL and cur:
+                cur.append(t)
+            continue
+        cur.append(t)
+        if t.type == tokenize.NEWLINE:
+            yield cur
+            cur = []
+
+
+def join_fragments(fragments) -> str:
+    """Collapse stripped physical-line fragments into one line, preserving
+    the original intra-line spacing and inserting separators only where the
+    line break was."""
+    out = ""
+    for i, frag in enumerate(fragments):
+        frag = frag.rstrip() if i == 0 else frag.strip()
+        if frag.endswith("\\"):  # melt backslash continuations on join
+            frag = frag[:-1].rstrip()
+        if not frag:
+            continue
+        if not out:
+            out = frag
+            continue
+        if out.endswith(",") and frag[0] in CLOSERS:
+            out = out[:-1]  # magic comma melts when the bracket collapses
+        if out[-1] in OPENERS + "." or frag[0] in CLOSERS + ",:.":
+            out += frag
+        else:
+            out += " " + frag
+    return out
+
+
+def drop_redundant_parens(line: str) -> str:
+    """``x = (expr)`` / ``return (expr)`` -> drop the wrapping pair when it
+    is a single matched group spanning the whole tail."""
+    for marker in ("= (", "return ("):
+        i = line.find(marker)
+        if i < 0 or not line.endswith(")"):
+            continue
+        start = i + len(marker) - 1
+        depth = 0
+        for j in range(start, len(line)):
+            if line[j] in OPENERS:
+                depth += 1
+            elif line[j] in CLOSERS:
+                depth -= 1
+                if depth == 0:
+                    if j == len(line) - 1 and not line[start + 1 :].strip().startswith(
+                        ("yield", "await")
+                    ):
+                        inner = line[start + 1 : -1].strip()
+                        # keep parens around tuples / generator expressions
+                        d = 0
+                        bare_comma = False
+                        for ch_i, ch in enumerate(inner):
+                            if ch in OPENERS:
+                                d += 1
+                            elif ch in CLOSERS:
+                                d -= 1
+                            elif ch == "," and d == 0:
+                                bare_comma = True
+                        if not bare_comma and " for " not in inner:
+                            return line[: i + len(marker) - 1] + inner
+                    break
+    return line
+
+
+class Logical:
+    """One logical line plus the structural facts the rewrites need."""
+
+    def __init__(self, tokens, lines):
+        self.tokens = [t for t in tokens if t.type not in (tokenize.NL, tokenize.NEWLINE)]
+        self.rows = sorted({t.start[0] for t in self.tokens})
+        self.first_row = self.rows[0]
+        self.last_row = max(t.end[0] for t in self.tokens)
+        first_line = lines[self.first_row - 1]
+        self.indent = first_line[: len(first_line) - len(first_line.lstrip())]
+        self.has_comment = any(t.type == tokenize.COMMENT for t in tokens)
+        self.has_multiline_string = any(
+            t.type == tokenize.STRING and t.end[0] > t.start[0] for t in self.tokens
+        )
+        self.has_implicit_concat = any(
+            a.type == tokenize.STRING and b.type == tokenize.STRING
+            for a, b in zip(self.tokens, self.tokens[1:])
+        )
+        self.has_lambda = any(t.type == tokenize.NAME and t.string == "lambda" for t in self.tokens)
+        self.magic_outer, self.magic_nested = self._magic_commas()
+
+    def _magic_commas(self):
+        """(outer_has_magic, nested_has_magic) — a 1-tuple's syntactic
+        trailing comma (paren group, one element, opener not a call) does
+        not count as magic."""
+        stack = []  # (open_idx, depth_when_opened, n_commas, last_idx)
+        outer = nested = False
+        toks = self.tokens
+        for i, t in enumerate(toks):
+            if t.type != tokenize.OP:
+                continue
+            if t.string in OPENERS:
+                stack.append([i, len(stack), 0])
+            elif t.string == "," and stack:
+                stack[-1][2] += 1
+            elif t.string in CLOSERS and stack:
+                open_idx, depth, n_commas = stack.pop()
+                if i == open_idx + 1 or toks[i - 1].string != ",":
+                    continue
+                if toks[open_idx].string == "(" and n_commas == 1:
+                    prev = toks[open_idx - 1] if open_idx else None
+                    is_call = prev is not None and (
+                        (prev.type == tokenize.NAME and not keyword.iskeyword(prev.string))
+                        or (prev.type == tokenize.OP and prev.string in CLOSERS + "]")
+                    )
+                    if not is_call:
+                        continue  # 1-tuple: comma is syntax, not magic
+                if depth == 0:
+                    outer = True
+                else:
+                    nested = True
+        return outer, nested
+
+    @property
+    def untouchable(self) -> bool:
+        return (
+            self.has_comment
+            or self.has_multiline_string
+            or self.has_implicit_concat
+            or self.has_lambda
+        )
+
+    def outer_bracket(self):
+        """(open_idx, close_idx) of the single outermost bracket group, or
+        None when there are zero or several top-level groups."""
+        depth = 0
+        open_idx = close_idx = None
+        groups = 0
+        for i, t in enumerate(self.tokens):
+            if t.type != tokenize.OP:
+                continue
+            if t.string in OPENERS:
+                if depth == 0:
+                    groups += 1
+                    if groups > 1:
+                        return None
+                    open_idx = i
+                depth += 1
+            elif t.string in CLOSERS:
+                depth -= 1
+                if depth == 0:
+                    close_idx = i
+        if open_idx is None or close_idx is None:
+            return None
+        return open_idx, close_idx
+
+    def collapsed(self, lines) -> str:
+        frags = [
+            lines[r - 1] if r == self.first_row else lines[r - 1].strip()
+            for r in range(self.first_row, self.last_row + 1)
+        ]
+        return drop_redundant_parens(join_fragments(frags))
+
+    def explode(self, lines):
+        """Render the outermost bracket one element per line (with trailing
+        commas), or None when any element resists a single-line render."""
+        ob = self.outer_bracket()
+        if ob is None:
+            return None
+        open_idx, close_idx = ob
+        toks = self.tokens
+
+        def span_text(a, b):
+            """Source text covering tokens[a..b], collapsed to one line."""
+            r0, c0 = toks[a].start
+            r1, c1 = toks[b].end
+            if r0 == r1:
+                return lines[r0 - 1][c0:c1]
+            frags = [lines[r0 - 1][c0:]]
+            frags += [lines[r - 1] for r in range(r0 + 1, r1)]
+            frags.append(lines[r1 - 1][:c1])
+            return join_fragments(frags)
+
+        # split tokens inside the bracket at depth-1 commas
+        elems, start, depth = [], open_idx + 1, 0
+        for i in range(open_idx + 1, close_idx):
+            t = toks[i]
+            if t.type != tokenize.OP:
+                continue
+            if t.string in OPENERS:
+                depth += 1
+            elif t.string in CLOSERS:
+                depth -= 1
+            elif t.string == "," and depth == 0:
+                if i > start:
+                    elems.append((start, i - 1))
+                start = i + 1
+        if start < close_idx:
+            elems.append((start, close_idx - 1))
+        if not elems:
+            return None
+        if toks[open_idx].string == "(" and len(elems) == 1:
+            # a single-element paren group: the trailing comma may be a
+            # 1-tuple's syntactic comma, not a magic one — only a call
+            # (opener preceded by a name/closer that is not a keyword)
+            # is safe to explode
+            prev = toks[open_idx - 1] if open_idx else None
+            is_call = prev is not None and (
+                (prev.type == tokenize.NAME and not keyword.iskeyword(prev.string))
+                or (prev.type == tokenize.OP and prev.string in CLOSERS)
+            )
+            if not is_call:
+                return None
+
+        head = span_text(0, open_idx)
+        tail = span_text(close_idx, len(toks) - 1)
+        body = []
+        for a, b in elems:
+            text = span_text(a, b)
+            line = self.indent + INDENT + text + ","
+            if len(line) > LINE_LENGTH:
+                return None  # element needs a recursive split: leave for hand work
+            body.append(line)
+        out = [self.indent + head] + body + [self.indent + tail]
+        if any(len(ln) > LINE_LENGTH for ln in (out[0], out[-1])):
+            return None
+        return out
+
+
+def normalize_strings(src: str) -> str:
+    """Simple single-quoted strings -> double quotes (ruff default)."""
+    out = []
+    toks = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    lines = src.splitlines(keepends=True)
+    repl = []  # (row, col_start, col_end, new_text)
+    for t in toks:
+        if t.type != tokenize.STRING or t.start[0] != t.end[0]:
+            continue
+        s = t.string
+        body_at = 0
+        while body_at < len(s) and s[body_at] in "rRbBuUfF":
+            body_at += 1
+        quote = s[body_at:]
+        if not quote.startswith("'") or quote.startswith("'''"):
+            continue
+        inner = quote[1:-1]
+        if '"' in inner or "\\" in inner:
+            continue
+        repl.append((t.start[0], t.start[1], t.end[1], s[:body_at] + '"' + inner + '"'))
+    if not repl:
+        return src
+    for row, c0, c1, new in sorted(repl, reverse=True):
+        ln = lines[row - 1]
+        lines[row - 1] = ln[:c0] + new + ln[c1:]
+    return "".join(lines)
+
+
+def format_source(src: str) -> str:
+    src = normalize_strings(src)
+    lines = src.splitlines()
+    try:
+        lls = [Logical(toks, lines) for toks in logical_lines(src)]
+    except (tokenize.TokenError, IndentationError):
+        return src
+    for ll in reversed(lls):  # bottom-up keeps earlier row numbers valid
+        if ll.untouchable:
+            continue
+        multi = ll.last_row > ll.first_row
+        if multi and not (ll.magic_outer or ll.magic_nested):
+            one = ll.collapsed(lines)
+            if len(one) <= LINE_LENGTH:
+                lines[ll.first_row - 1 : ll.last_row] = [one]
+                continue
+        overflow = not multi and len(lines[ll.first_row - 1]) > LINE_LENGTH
+        if (ll.magic_outer or overflow) and not ll.magic_nested:
+            exploded = ll.explode(lines)
+            if exploded is not None:
+                current = lines[ll.first_row - 1 : ll.last_row]
+                if current != exploded:
+                    lines[ll.first_row - 1 : ll.last_row] = exploded
+    out = "\n".join(ln.rstrip() for ln in lines)
+    return out.rstrip("\n") + "\n"
+
+
+def run(paths, *, check: bool, verbose: bool) -> int:
+    changed = []
+    for root in paths:
+        p = pathlib.Path(root)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            src = f.read_text()
+            new = format_source(src)
+            if new == src:
+                continue
+            try:
+                same = ast.dump(ast.parse(new)) == ast.dump(ast.parse(src))
+            except SyntaxError:
+                same = False
+            if not same:  # formatting-only guarantee
+                print(f"pyfmt: SKIP {f} (AST changed — bug guard)", file=sys.stderr)
+                continue
+            changed.append(str(f))
+            if verbose:
+                print(f"pyfmt: {'would reformat' if check else 'reformatted'} {f}")
+            if not check:
+                f.write_text(new)
+    n = len(changed)
+    mode = "would reformat" if check else "reformatted"
+    print(f"pyfmt: {n} file{'s' * (n != 1)} {mode}")
+    return 1 if (check and changed) else 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="files or directories to format")
+    ap.add_argument("--check", action="store_true", help="report, do not rewrite")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    return run(args.paths, check=args.check, verbose=args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

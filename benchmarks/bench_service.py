@@ -11,11 +11,19 @@ quantities the tentpole claims:
   * ``coalescing_factor`` — request-calls served per backend call
     (must be > 1: overlapping requests share coloring passes);
   * ``latency_p50_us`` / ``latency_p95_us`` — submit-to-result wall
-    clock per request under fair scheduling.
+    clock per request under fair scheduling;
+  * ``svc_cancel_latency_us`` — how fast a mid-stream ``ticket.cancel()``
+    turns terminal with the §20 driver thread running (the lock is
+    released across backend dispatches, so this must stay far below one
+    pass-call duration);
+  * ``svc_shed_rate`` — deterministic shed-oldest admission math
+    (bounded queue of 4, 12 scripted submits -> 8/12 shed), gated
+    structurally: it must never drift.
 
 ``main()`` writes ``BENCH_service.json`` at the repo root; the CI bench
 gate holds the line on it (hit rate and coalescing gate as
-higher-is-better, latencies as timings).
+higher-is-better, latencies as timings, the hardening section under its
+own ``svc_*`` classes).
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import json
 import os
 import time
 
+import jax
 import numpy as np
 
 from repro.configs import SERVICE_WORKLOADS
@@ -34,6 +43,45 @@ from repro.serve import CountingService, ServiceConfig
 from .common import ROOT, emit
 
 JSON_PATH = os.path.join(ROOT, "BENCH_service.json")
+
+
+def run_hardening(g, wl) -> dict:
+    """The §20 serving-robustness metrics (cancel latency, shed rate)."""
+    # deterministic shed-oldest math: queue bound 4, 12 back-to-back
+    # submits with nothing draining -> exactly 8 shed
+    svc = CountingService(
+        g, n_colors=wl.k, backend="single",
+        config=ServiceConfig(batch=wl.batch, max_pending=4, shed_oldest=True),
+    )
+    subs = [svc.submit("bench", "u3-1", n_iter=wl.batch) for _ in range(12)]
+    shed = sum(t.status == "shed" for t in subs)
+    svc.run_until_idle()
+    assert all(t.done for t in subs), "shed workload left non-terminal tickets"
+    assert shed == 8, f"shed-oldest admission drifted: {shed}/12"
+
+    # cancel responsiveness under the running driver: submit a long
+    # request, wait until it is mid-stream, cancel, time to terminal
+    svc2 = CountingService(
+        g, n_colors=wl.k, backend="single",
+        config=ServiceConfig(batch=wl.batch),
+    )
+    svc2.start()
+    lats = []
+    try:
+        for i in range(5):
+            t = svc2.submit("bench", "u3-1", n_iter=wl.batch * 50, key=jax.random.key(1000 + i))
+            while not t.updates and not t.done:
+                time.sleep(0.001)
+            t0 = time.perf_counter()
+            t.cancel()
+            t.wait(30)
+            lats.append(time.perf_counter() - t0)
+    finally:
+        svc2.stop()
+    return {
+        "svc_shed_rate": shed / len(subs),
+        "svc_cancel_latency_us": float(np.median(lats)) * 1e6,
+    }
 
 
 def run(smoke: bool = False) -> dict:
@@ -91,6 +139,12 @@ def run(smoke: bool = False) -> dict:
         rec["latency_p50_us"],
         f"p95 {rec['latency_p95_us'] / 1e3:.1f}ms",
     )
+    hard = run_hardening(g, wl)
+    rec.update(hard)
+    emit("service_shed_rate", hard["svc_shed_rate"] * 100,
+         f"{hard['svc_shed_rate']:.0%} shed under overload")
+    emit("service_cancel_latency", hard["svc_cancel_latency_us"],
+         f"{hard['svc_cancel_latency_us'] / 1e3:.2f}ms to terminal")
     return {
         "backend": "cpu",
         "smoke": smoke,

@@ -777,34 +777,48 @@ class Counter:
             yield self.sample_fn(sub, batch)
 
     # ---------------------------------------------------------------- serving
-    def serve(self, *, n_colors: Optional[int] = None, config=None):
+    def serve(self, *, n_colors: Optional[int] = None, config=None,
+              start: bool = False, **config_kw):
         """A resident :class:`~repro.serve.CountingService` on this graph.
 
         The service loads the graph once and serves a multi-tenant request
         stream: plan-cache reuse across requests, coalesced coloring
-        passes, per-tenant fair scheduling (see DESIGN.md §17).  It runs
-        with a fixed shared color budget — ``n_colors`` defaults to this
-        Counter's own (``plan_opts['n_colors']`` or the template size), and
-        every request's results are bit-identical to a solo
+        passes, per-tenant fair scheduling (see DESIGN.md §17), and the §20
+        hardening — driver thread, deadlines/cancellation, backpressure,
+        supervised passes.  It runs with a fixed shared color budget —
+        ``n_colors`` defaults to this Counter's own
+        (``plan_opts['n_colors']`` or the template size), and every
+        request's results are bit-identical to a solo
         ``Counter.estimate``/``estimate_many`` at that budget.
-        """
-        from repro.serve import CountingService
 
+        ``start=True`` launches the background driver thread before
+        returning; any extra keyword (``max_pending=...``,
+        ``shed_oldest=True``, ``timeout_s=...``) builds the
+        :class:`~repro.serve.ServiceConfig` in place of ``config``.
+        """
+        from repro.serve import CountingService, ServiceConfig
+
+        if config_kw:
+            if config is not None:
+                raise ValueError("pass config= or ServiceConfig kwargs, not both")
+            config = ServiceConfig(**config_kw)
         k = n_colors or self.plan_opts.get("n_colors") or self.k
         opts = {key: v for key, v in self.plan_opts.items() if key != "n_colors"}
-        return CountingService(
+        svc = CountingService(
             self.graph,
             n_colors=k,
             backend=self.backend,
             plan_opts=opts,
             config=config,
         )
+        return svc.start() if start else svc
 
 
 def __getattr__(name):
     # lazy serving re-exports: repro.serve imports repro.api at module
     # scope, so the reverse edge must resolve at attribute time
-    if name in ("CountingService", "ServiceClient", "ServiceConfig", "Ticket"):
+    if name in ("CountingService", "ServiceClient", "ServiceConfig", "Ticket",
+                "QueueFullError", "UnsatisfiableRequestError"):
         import repro.serve as _serve
 
         return getattr(_serve, name)

@@ -111,8 +111,16 @@ class Supervisor:
     ``supervisor(key, batch, call_index=i)`` returns the float64 samples on
     success, or the :class:`QuarantinedBatch` record when the batch was
     given up on.  All quarantine records also accumulate on
-    :attr:`quarantined`.  ``sleep`` is injectable so tests retry without
-    real waiting.
+    :attr:`quarantined`.
+
+    ``sleep`` and ``clock`` are injectable seams so retry- and timeout-path
+    tests never wait on the wall clock: with the default ``clock``
+    (``time.monotonic``) a timeout attempt runs on a worker thread and a
+    genuinely hung dispatch is detected in real time; with an injected
+    clock the attempt runs inline and "exceeded the timeout" is judged by
+    comparing injected-clock readings around it (fault-site sleeps route
+    through ``sleep``, so a virtual clock whose ``sleep`` advances it
+    exercises the full timeout->retry path in zero wall time).
     """
 
     def __init__(
@@ -121,11 +129,14 @@ class Supervisor:
         policy: Optional[RetryPolicy] = None,
         *,
         sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.fn = sample_fn
         self.policy = policy or RetryPolicy()
         self.quarantined: List[QuarantinedBatch] = []
         self._sleep = sleep
+        self._clock = clock
+        self._virtual_clock = clock is not time.monotonic
 
     # ---------------------------------------------------------- one attempt
     def _raw_attempt(self, key: jax.Array, batch: int) -> np.ndarray:
@@ -135,7 +146,7 @@ class Supervisor:
         spec = faults.fire("sample.timeout")
         if spec is not None:
             t = self.policy.timeout_s
-            time.sleep(spec.payload if spec.payload is not None else (4.0 * t if t else 0.5))
+            self._sleep(spec.payload if spec.payload is not None else (4.0 * t if t else 0.5))
         out = np.asarray(self.fn(key, batch), np.float64)
         spec = faults.fire("sample.nan")
         if spec is not None:
@@ -151,6 +162,15 @@ class Supervisor:
         t = self.policy.timeout_s
         if t is None:
             return self._raw_attempt(key, batch)
+        if self._virtual_clock:
+            # injected clock: run inline and judge the timeout from clock
+            # readings — the deterministic test path (no worker thread, no
+            # wall waiting); real hang detection needs the real clock below
+            t0 = self._clock()
+            out = self._raw_attempt(key, batch)
+            if self._clock() - t0 > t:
+                raise SampleTimeout(f"sample batch exceeded the {t}s timeout")
+            return out
         box: dict = {}
 
         def work():

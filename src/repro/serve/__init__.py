@@ -1,6 +1,10 @@
 """Serving layer: the resident multi-tenant counting service."""
 
 from .counting_service import (  # noqa: F401
+    CANCELLED,
+    DEADLINE_EXCEEDED,
+    SHED,
+    TERMINAL_STATUSES,
     CountingService,
     PlanCache,
     ProgressUpdate,
@@ -12,6 +16,10 @@ from .counting_service import (  # noqa: F401
 )
 
 __all__ = [
+    "CANCELLED",
+    "DEADLINE_EXCEEDED",
+    "SHED",
+    "TERMINAL_STATUSES",
     "CountingService",
     "PlanCache",
     "ProgressUpdate",

@@ -25,6 +25,15 @@ Instrumented sites (grep ``faults.fire`` for the authoritative list):
 ``compression.saturate``   the §18 narrow-wire wrapper treats the batch as
                            saturated and re-dispatches the wider-wire twin
                            (int8 -> int16 -> float32 escalation ladder)
+``service.step_crash``     :meth:`CountingService.step` raises
+                           :class:`InjectedFault` before scheduling anything
+                           (the §20 driver thread must record it and survive)
+``service.pass_poison``    one coalesced pass call's backend payload is
+                           poisoned with NaN — a §16 hard fault: the call
+                           quarantines without killing co-riding requests
+``service.slow_pass``      one coalesced pass call sleeps ``payload`` seconds
+                           (default 4x the service timeout) so the service
+                           supervisor's per-batch timeout fires and retries
 =========================  ====================================================
 
 Usage::

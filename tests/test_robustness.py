@@ -45,6 +45,21 @@ def _noop_sleep(_):
     pass
 
 
+class FakeClock:
+    """Virtual time: ``sleep`` advances the clock instead of waiting, so
+    timeout/backoff paths run in zero wall time (the Supervisor's
+    injected-clock mode judges timeouts from clock readings)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += s
+
+
 def _mgr(tmp_path, sub="ckpt"):
     return CheckpointManager(str(tmp_path / sub), async_save=False)
 
@@ -311,13 +326,30 @@ class TestSupervisor:
     @pytest.mark.timeout(60)
     def test_timeout_then_retry(self):
         """A hung attempt surfaces as a timeout and the retry (same key)
-        succeeds."""
+        succeeds — on a virtual clock, so the 0.5s "hang" and the backoff
+        cost zero wall time."""
+        clk = FakeClock()
         sup = Supervisor(
             self._fn(9.0),
             RetryPolicy(max_retries=1, timeout_s=0.1, backoff_s=0.0),
-            sleep=_noop_sleep,
+            sleep=clk.sleep,
+            clock=clk,
         )
-        with faults.active(faults.inject("sample.timeout", at=(0,), payload=0.5)):
+        with faults.active(faults.inject("sample.timeout", at=(0,), payload=0.5)) as plan:
+            out = sup(jax.random.key(0), 4)
+        np.testing.assert_array_equal(out, np.full(4, 9.0))
+        assert sup.quarantined == []
+        assert plan.fired == [("sample.timeout", 0)]  # the hang really happened
+
+    @pytest.mark.timeout(60)
+    def test_timeout_real_thread(self):
+        """With the default (real) clock the attempt runs on a worker
+        thread and a genuine hang is detected in real time."""
+        sup = Supervisor(
+            self._fn(9.0),
+            RetryPolicy(max_retries=1, timeout_s=0.05, backoff_s=0.0),
+        )
+        with faults.active(faults.inject("sample.timeout", at=(0,), payload=0.3)):
             out = sup(jax.random.key(0), 4)
         np.testing.assert_array_equal(out, np.full(4, 9.0))
         assert sup.quarantined == []

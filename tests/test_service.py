@@ -43,6 +43,28 @@ def service(graph, **cfg_kw):
     return CountingService(graph, n_colors=K, backend="single", config=cfg)
 
 
+class FakeClock:
+    """Virtual time shared by service deadlines and the pass supervisor:
+    ``sleep`` advances the clock instead of waiting, so timeout/expiry
+    paths run in zero wall time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += s
+
+
+def vservice(graph, clock, **cfg_kw):
+    """A service on a virtual clock (deadlines + supervisor timeouts)."""
+    cfg = ServiceConfig(batch=BATCH, **cfg_kw)
+    return CountingService(graph, n_colors=K, backend="single", config=cfg,
+                           clock=clock, sleep=clock.sleep)
+
+
 def solo(graph, template, n_iter, **kw):
     c = Counter.from_graph(graph, template, backend="single", n_colors=K)
     return c.estimate(n_iter, key=jax.random.key(0), batch=BATCH, **kw)
@@ -402,3 +424,358 @@ class TestFacade:
 
         assert api.CountingService is CountingService
         assert api.ServiceConfig is ServiceConfig
+
+    def test_counter_serve_config_kwargs_and_start(self, graph):
+        c = Counter.from_graph(graph, "u3-1", backend="single", n_colors=K)
+        svc = c.serve(batch=BATCH, max_pending=4, shed_oldest=True, start=True)
+        try:
+            assert svc.running
+            assert svc.config.max_pending == 4 and svc.config.shed_oldest
+            with pytest.raises(ValueError, match="not both"):
+                c.serve(config=ServiceConfig(), batch=2)
+        finally:
+            svc.stop()
+
+
+# --------------------------------------------------------------------------
+# §20 hardening: errors, driver thread, deadlines/cancellation, backpressure
+# --------------------------------------------------------------------------
+
+
+class TestErrorReprs:
+    def test_queue_full_fields_and_repr(self, graph):
+        svc = service(graph, max_pending=1)
+        svc.client("a").submit("u3-1", n_iter=8)
+        with pytest.raises(QueueFullError) as ei:
+            svc.client("b").submit("u5-2", n_iter=8)
+        e = ei.value
+        assert e.tenant == "b" and e.scope == "service"
+        assert e.depth == 1 and e.limit == 1 and e.retry_after_s > 0
+        assert "'b'" in str(e) and "limit 1" in str(e)
+        r = repr(e)
+        assert r.startswith("QueueFullError(") and "tenant='b'" in r and "limit=1" in r
+
+    def test_per_tenant_bound_scopes_error(self, graph):
+        svc = service(graph, max_pending=8, max_pending_per_tenant=1)
+        svc.client("a").submit("u3-1", n_iter=8)
+        with pytest.raises(QueueFullError) as ei:
+            svc.client("a").submit("u5-2", n_iter=8)
+        assert ei.value.scope == "tenant" and ei.value.tenant == "a"
+        # another tenant's budget is untouched
+        t = svc.client("b").submit("u5-2", n_iter=8)
+        assert t.status == "queued"
+
+    def test_unsatisfiable_fields_and_repr(self, graph):
+        svc = service(graph, max_iters=100)
+        with pytest.raises(UnsatisfiableRequestError) as ei:
+            svc.client("a").submit("u3-1", n_iter=101)
+        e = ei.value
+        assert (e.tenant, e.parameter, e.value, e.limit) == ("a", "n_iter", 101, 100)
+        assert "'a'" in str(e) and "n_iter=101" in str(e) and "max_iters=100" in str(e)
+        assert "parameter='n_iter'" in repr(e)
+        with pytest.raises(UnsatisfiableRequestError) as ei2:
+            svc.client("bob").submit("u5-2", eps=1e-9)
+        e2 = ei2.value
+        assert e2.tenant == "bob" and e2.parameter == "eps" and e2.value == 1e-9
+        assert "parameter='eps'" in repr(e2)
+
+
+class TestDriverThread:
+    def test_driver_drains_and_matches_solo(self, graph):
+        svc = service(graph).start()
+        try:
+            assert svc.running and svc.stats()["driver"]["running"]
+            t = svc.client("a").submit("u3-1", n_iter=8)
+            assert t.wait(60)
+            assert svc.join_idle(60)
+        finally:
+            svc.stop()
+        assert not svc.running
+        assert t.status == "done"
+        np.testing.assert_array_equal(np.asarray(t.result().samples),
+                                      np.asarray(solo(graph, "u3-1", 8).samples))
+
+    def test_concurrent_submits_all_solo_exact(self, graph):
+        svc = service(graph).start()
+        try:
+            tickets = [svc.client(f"t{i}").submit("u3-1", n_iter=16) for i in range(4)]
+            assert all(t.wait(60) for t in tickets)
+        finally:
+            svc.stop()
+        s = solo(graph, "u3-1", 16)
+        for t in tickets:
+            np.testing.assert_array_equal(np.asarray(t.result().samples), np.asarray(s.samples))
+
+    def test_run_until_idle_delegates_to_driver(self, graph):
+        svc = service(graph).start()
+        try:
+            t = svc.client("a").submit("u3-1", n_iter=8)
+            svc.run_until_idle()  # must wait for the driver, not co-step
+            assert t.status == "done"
+            svc.run_until(t)  # no-op on a done ticket
+        finally:
+            svc.stop()
+
+    def test_step_crash_recorded_and_survived(self, graph):
+        """The ``service.step_crash`` site: the driver records the fault
+        and keeps scheduling — the request still completes."""
+        svc = service(graph).start()
+        try:
+            with faults.active(faults.inject("service.step_crash", at=(0,))) as plan:
+                t = svc.client("a").submit("u3-1", n_iter=8)
+                assert t.wait(60)
+                assert plan.fired  # the crash really happened
+        finally:
+            svc.stop()
+        assert t.status == "done"
+        assert svc.stats()["driver"]["errors"] >= 1
+        assert any("InjectedFault" in e for e in svc.driver_errors)
+
+
+class TestDeadlinesCancellation:
+    def test_cancel_detaches_without_touching_corider(self, graph):
+        svc = service(graph)
+        ta = svc.client("a").submit("u3-1", n_iter=24)
+        tb = svc.client("b").submit("u3-1", n_iter=24)
+        for _ in range(3):
+            svc.step()
+        assert ta.cancel() is True
+        assert ta.status == "cancelled" and ta.done
+        assert ta.cancel() is False  # already terminal
+        svc.run_until_idle()
+        # the co-rider is untouched and solo-exact
+        np.testing.assert_array_equal(np.asarray(tb.result().samples),
+                                      np.asarray(solo(graph, "u3-1", 24).samples))
+        with pytest.raises(RuntimeError, match="cancelled"):
+            ta.result()
+        assert svc.stats()["cancelled"] == 1
+
+    def test_cancelled_state_resumes_solo(self, graph, tmp_path):
+        """The partial EstimatorState of a cancelled ticket finishes under
+        the stand-alone estimator bit-exactly — including through the
+        on-disk checkpoint path (``ticket.checkpoint`` -> ``resume=DIR``)."""
+        svc = service(graph)
+        t = svc.client("a").submit("u5-2", n_iter=32)
+        for _ in range(3):
+            svc.step()
+        t.cancel()
+        st = t.state()
+        assert st.status == "cancelled"
+        assert 0 < st.cursor < 32 // BATCH
+        c = Counter.from_graph(graph, "u5-2", backend="single", n_colors=K)
+        full = c.estimate(32, key=jax.random.key(0), batch=BATCH)
+        res = estimate_counts(c.sample_fn, 32, jax.random.key(0), batch=BATCH,
+                              resume=st, signature_extra=c._signature_extra())
+        np.testing.assert_array_equal(res.samples, np.asarray(full.samples))
+        assert res.estimate == full.estimate
+        # and via the persisted checkpoint directory (the --resume path)
+        st2 = t.checkpoint(str(tmp_path / "ck"))
+        assert st2.cursor == st.cursor
+        res2 = c.estimate(32, key=jax.random.key(0), batch=BATCH, resume=str(tmp_path / "ck"))
+        assert res2.resumed_from == st.cursor * BATCH
+        np.testing.assert_array_equal(np.asarray(res2.samples), np.asarray(full.samples))
+
+    def test_deadline_expires_mid_stream(self, graph):
+        clk = FakeClock()
+        svc = vservice(graph, clk)
+        t = svc.client("a").submit("u3-1", n_iter=40, timeout_s=10.0)
+        for _ in range(3):
+            svc.step()
+        assert t.status == "active"
+        clk.t += 11.0
+        svc.run_until_idle()
+        assert t.status == "deadline_exceeded"
+        assert "deadline" in t.error
+        st = t.state()
+        assert st.status == "deadline_exceeded"
+        assert 0 < st.cursor < 40 // BATCH
+        assert svc.stats()["deadline_exceeded"] == 1
+        with pytest.raises(RuntimeError, match="deadline_exceeded"):
+            t.result()
+
+    def test_dead_on_arrival_deadline(self, graph):
+        clk = FakeClock()
+        clk.t = 100.0
+        svc = vservice(graph, clk)
+        t = svc.client("a").submit("u3-1", n_iter=8, deadline_s=50.0)
+        assert t.status == "deadline_exceeded"
+        assert "at submit" in t.error
+        assert svc._pending() == 0  # never entered the queue
+
+
+class TestMemoInterplay:
+    """Result-memoization x quarantine x cancellation (ISSUE satellites)."""
+
+    def test_memo_hit_honors_expired_deadline(self, graph):
+        clk = FakeClock()
+        svc = vservice(graph, clk)
+        t1 = svc.client("a").submit("u3-1", n_iter=8)
+        svc.run_until_idle()
+        assert t1.status == "done"
+        t2 = svc.client("a").submit("u3-1", n_iter=8)
+        assert t2.status == "done"  # memo hit, served at submit
+        assert svc.stats()["results"]["hits"] == 1
+        clk.t = 100.0
+        t3 = svc.client("a").submit("u3-1", n_iter=8, deadline_s=50.0)
+        assert t3.status == "deadline_exceeded"  # expiry beats the memo
+        assert svc.stats()["results"]["hits"] == 1  # memo never consulted
+
+    def test_cancelled_never_seeds_memo(self, graph):
+        svc = service(graph)
+        t = svc.client("a").submit("u3-1", n_iter=24)
+        svc.step()
+        svc.step()
+        t.cancel()
+        svc.run_until_idle()
+        assert svc.stats()["results"]["entries"] == 0
+        # an identical resubmission recomputes from scratch...
+        t2 = svc.client("a").submit("u3-1", n_iter=24)
+        assert t2.status == "queued"
+        svc.run_until_idle()
+        assert t2.status == "done"
+        # ...and only the completed run seeds the memo
+        assert svc.stats()["results"]["entries"] == 1
+
+    def test_quarantined_never_seeds_memo(self, graph):
+        svc = service(graph, max_retries=0)
+        svc._sleep = lambda _: None
+        t = svc.client("a").submit("u3-1", n_iter=8)
+        with faults.active(faults.inject("sample.raise", at=(0,))):
+            svc.run_until_idle()
+        assert t.status == "done" and len(t.result().quarantined) == 1
+        assert svc.stats()["results"]["entries"] == 0
+
+
+class TestBackpressure:
+    def test_shed_oldest_policy(self, graph):
+        svc = service(graph, max_pending=2, shed_oldest=True)
+        t1 = svc.client("a").submit("u3-1", n_iter=8)
+        t2 = svc.client("a").submit("u5-2", n_iter=8)
+        t3 = svc.client("b").submit("u3-1", n_iter=8)  # sheds t1, admits t3
+        assert t1.status == "shed" and "shed" in t1.error
+        with pytest.raises(RuntimeError, match="shed"):
+            t1.result()
+        svc.run_until_idle()
+        assert t2.status == "done" and t3.status == "done"
+        assert svc.stats()["shed"] == 1
+
+    def test_backpressure_signals_in_stats(self, graph):
+        svc = service(graph, max_pending=8, max_pending_per_tenant=2)
+        svc.client("a").submit("u3-1", n_iter=8)
+        svc.client("a").submit("u5-2", n_iter=8)
+        ts = svc.stats()["tenants"]["a"]
+        assert ts["depth"] == 2 and ts["limit"] == 2
+        assert ts["saturation"] == pytest.approx(1.0)
+        assert ts["retry_after_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# chaos soak (CI runs these via `pytest -k chaos`)
+# --------------------------------------------------------------------------
+
+
+def _drop_quarantined(solo_samples, quarantined, batch):
+    """Solo samples with a request's quarantined call rows excluded — what
+    a surviving degraded result must equal bit for bit."""
+    arr = np.asarray(solo_samples)
+    drop = {q.call_index for q in quarantined}
+    keep = [arr[i * batch:(i + 1) * batch] for i in range(arr.shape[0] // batch) if i not in drop]
+    return np.concatenate(keep, axis=0) if keep else arr[:0]
+
+
+class TestServiceChaos:
+    @pytest.mark.timeout(120)
+    def test_chaos_soak_deterministic(self, graph):
+        """The acceptance soak: >= 50 injected events across five fault
+        sites (raise / supervisor timeout / slow pass / poisoned pass /
+        step crash) plus mid-soak cancellations, on the synchronous core
+        with a virtual clock — fully deterministic, zero wall-clock
+        sleeping.  Every request must reach a terminal state, and every
+        completing request's samples must equal the solo run's with its
+        own quarantined call rows excluded."""
+        clk = FakeClock()
+        svc = vservice(graph, clk, max_retries=1, timeout_s=0.1, max_active=6)
+        tickets = []
+        for i in range(8):
+            tickets.append(svc.client(f"t{i % 3}").submit(
+                "u3-1", n_iter=24, key=jax.random.key(10 + i)))
+        for i in range(4):
+            tickets.append(svc.client(f"t{i % 3}").submit(
+                ("u3-1", "u5-2"), n_iter=16, key=jax.random.key(50 + i)))
+        cancels = {15: tickets[2], 30: tickets[9]}
+        crashes = 0
+        with faults.active(
+            faults.inject("sample.raise", at=tuple(range(0, 400, 3))),
+            faults.inject("sample.timeout", at=tuple(range(3, 400, 7))),
+            faults.inject("service.slow_pass", at=tuple(range(2, 400, 5))),
+            faults.inject("service.pass_poison", at=tuple(range(1, 400, 4))),
+            faults.inject("service.step_crash", at=tuple(range(4, 400, 6))),
+        ) as plan:
+            for step_no in range(4000):
+                if step_no in cancels:
+                    cancels[step_no].cancel()
+                try:
+                    busy = svc.step()
+                except faults.InjectedFault:
+                    crashes += 1
+                    busy = True
+                if not busy:
+                    break
+            fired = len(plan.fired)
+        assert fired >= 50, f"only {fired} injected events"
+        assert crashes >= 1
+        # no request stuck in a non-terminal state
+        assert all(t.done for t in tickets), [t.status for t in tickets]
+        for key, t in cancels.items():
+            assert t.status in ("cancelled", "done")
+        # every survivor is solo-exact modulo its own quarantined calls
+        c1 = Counter.from_graph(graph, "u3-1", backend="single", n_colors=K)
+        for t in tickets:
+            if t.status != "done":
+                continue
+            r = t.result()
+            req = t._request
+            if len(req.trees) == 1:
+                s = c1.estimate(24, key=req.key, batch=BATCH)
+            else:
+                s = c1.estimate_many(("u3-1", "u5-2"), 16, key=req.key, batch=BATCH)
+            np.testing.assert_array_equal(
+                np.asarray(r.samples),
+                _drop_quarantined(s.samples, r.quarantined, BATCH))
+
+    @pytest.mark.timeout(120)
+    def test_chaos_threaded_driver_survives(self, graph):
+        """Driver-thread soak: step crashes, poisoned passes, a supervisor
+        timeout, and a mid-flight cancel — the driver must survive, drain
+        everything to a terminal state, and keep surviving results
+        solo-exact."""
+        clk = FakeClock()
+        svc = vservice(graph, clk, max_retries=1, timeout_s=0.1)
+        tickets = []
+        with faults.active(
+            faults.inject("service.step_crash", at=tuple(range(0, 60, 9))),
+            faults.inject("service.pass_poison", at=(1, 5)),
+            faults.inject("sample.timeout", at=(3,)),
+        ) as plan:
+            svc.start()
+            try:
+                for i in range(6):
+                    tickets.append(svc.client(f"c{i % 2}").submit(
+                        "u3-1", n_iter=16, key=jax.random.key(100 + i)))
+                tickets[3].cancel()
+                assert svc.join_idle(90), "driver failed to drain (deadlock?)"
+            finally:
+                svc.stop()
+            assert ("service.step_crash", 0) in plan.fired
+        assert all(t.done for t in tickets), [t.status for t in tickets]
+        assert tickets[3].status in ("cancelled", "done")
+        assert svc.stats()["driver"]["errors"] >= 1
+        c = Counter.from_graph(graph, "u3-1", backend="single", n_colors=K)
+        for t in tickets:
+            if t.status != "done":
+                continue
+            r = t.result()
+            s = c.estimate(16, key=t._request.key, batch=BATCH)
+            np.testing.assert_array_equal(
+                np.asarray(r.samples),
+                _drop_quarantined(s.samples, r.quarantined, BATCH))

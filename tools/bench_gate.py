@@ -47,6 +47,17 @@ TIMING_KEYS = ("_us", "iter_us", "_s")
 #: pass-coalescing factor) — a drop means cross-request amortization
 #: regressed, an increase is pure win and must never fail the gate
 HIGHER_BETTER_KEYS = ("speedup", "hit_rate", "coalescing")
+#: §20 serving-robustness metrics (bench_service's hardening section):
+#: cancel latency is a responsiveness timing — how fast a mid-stream
+#: ``ticket.cancel()`` turns terminal under a running driver — host-
+#: dependent, so it gates lower-is-better at the loose timing factor but
+#: under its own label (a cancel-responsiveness cliff should not read as
+#: generic timing noise)
+SERVICE_LATENCY_KEYS = ("svc_cancel",)
+#: the shed rate is deterministic admission math (bounded queue of N,
+#: shed-oldest, M scripted submits) — machine-independent, so it holds
+#: near-exactly like the layout metrics
+SERVICE_STRUCTURAL_KEYS = ("svc_shed",)
 STRUCTURAL_KEYS = (
     "pad_frac",
     "waste",
@@ -82,6 +93,10 @@ META_KEYS = ("smoke", "backend")
 
 
 def classify(key: str):
+    if any(s in key for s in SERVICE_LATENCY_KEYS):
+        return "svc_latency"
+    if any(s in key for s in SERVICE_STRUCTURAL_KEYS):
+        return "structural"
     if any(s in key for s in HIGHER_BETTER_KEYS):
         return "speedup"
     if any(key.startswith(s) for s in ROBUSTNESS_KEYS):
@@ -137,7 +152,7 @@ def compare_file(name, base, fresh, *, struct_rtol: float, timing_factor: float)
         bv, fv = b_leaves[path], f_leaves[path]
         if cls is None:
             continue
-        if cls in ("timing", "robustness"):
+        if cls in ("timing", "robustness", "svc_latency"):
             ok = fv <= bv * timing_factor
             note = f"<= {timing_factor:.1f}x baseline"
         elif cls == "speedup":
